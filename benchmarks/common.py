@@ -1,0 +1,66 @@
+"""Shared benchmark substrate: traced per-arch fusion graphs + simulator."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import Simulator, profile_graph, trace_grad_graph
+from repro.core.hw import TPU_V5E
+from repro.data.pipeline import materialize_batch
+from repro.models import stacked as ST
+
+# benchmark model suite: one per arch family (reduced configs so the traced
+# graphs stay search-tractable on CPU), mirroring the paper's 6-model suite
+BENCH_ARCHS = (
+    "tinyllama-1.1b",        # llama dense (the paper's Transformer analogue)
+    "qwen2-0.5b",            # GQA dense
+    "deepseek-v2-lite-16b",  # MLA + MoE
+    "rwkv6-3b",              # attention-free
+    "recurrentgemma-9b",     # hybrid
+    "seamless-m4t-medium",   # enc-dec
+)
+
+N_DEVICES = 256  # single-pod simulation target
+
+
+@functools.lru_cache(maxsize=None)
+def arch_graph(arch: str, batch: int = 8, seq: int = 64, n_layers: int = 6):
+    """Traced per-device fusion graph of one training step.
+
+    Uses the *unstacked* (per-layer loop) model so the tracer sees the full
+    backward DAG — per-layer gradient production times drive the paper's
+    computation/communication overlap trade-off.  (The scanned production
+    model hides layers inside one opaque scan node; see DESIGN.md.)
+    Layer count is raised from the reduced config's 2 so the BP structure is
+    non-trivial, mirroring the paper's whole-model graphs.
+    """
+    import dataclasses
+
+    from repro.models import model as M
+
+    cfg = get_config(arch).reduced()
+    if cfg.recurrent is None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    data = materialize_batch(cfg, batch, seq, seed=0)
+
+    def loss(p, bt):
+        return M.loss_fn(p, cfg, bt)
+
+    g = trace_grad_graph(loss, params, data)
+    return profile_graph(g)
+
+
+def make_sim(n_devices: int = N_DEVICES, estimator=None) -> Simulator:
+    return Simulator(estimator=estimator, hw=TPU_V5E, n_devices=n_devices)
+
+
+def csv_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

@@ -1,0 +1,38 @@
+"""Fig. 10: ablation of the three optimisation methods — add non-duplicate
+fusion, duplicate fusion, AllReduce fusion one at a time."""
+from __future__ import annotations
+
+from common import BENCH_ARCHS, arch_graph, csv_row, make_sim
+from repro.core import backtracking_search
+
+VARIANTS = [
+    ("none", ()),
+    ("+nondup", ("nondup",)),
+    ("+nondup+dup", ("nondup", "dup")),
+    ("+nondup+tensor", ("nondup", "tensor")),
+    ("all_three", ("nondup", "dup", "tensor")),
+]
+
+
+def run(archs=BENCH_ARCHS[:4], unchanged_limit=100, verbose=True):
+    sim = make_sim()
+    rows = []
+    for arch in archs:
+        g = arch_graph(arch)
+        for name, methods in VARIANTS:
+            if not methods:
+                t = sim.cost(g)
+            else:
+                t = backtracking_search(
+                    g, sim, methods=methods,
+                    unchanged_limit=unchanged_limit, seed=0).best_cost
+            rows.append((arch, name, t * 1e6))
+    if verbose:
+        print("arch,methods,us_per_iter")
+        for r in rows:
+            print(csv_row(r[0], r[1], f"{r[2]:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

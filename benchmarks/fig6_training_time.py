@@ -1,0 +1,45 @@
+"""Fig. 6 + Table 1: per-iteration training time of DisCo vs the five
+baselines and the FO bound, per architecture; speed-up over the best
+baseline.  Prints CSV: arch, strategy, time_us (+ summary speedups)."""
+from __future__ import annotations
+
+from common import BENCH_ARCHS, arch_graph, csv_row, make_sim
+from repro.core import backtracking_search, evaluate_baselines
+from repro.core.simulator import Simulator
+
+
+def run(archs=BENCH_ARCHS, unchanged_limit=120, seed=0, verbose=True):
+    sim = make_sim()
+    rows = []
+    summary = []
+    for arch in archs:
+        g = arch_graph(arch)
+        base = evaluate_baselines(g, sim)
+        res = backtracking_search(g, sim, alpha=1.05, beta=10,
+                                  unchanged_limit=unchanged_limit, seed=seed)
+        fo_best = sim.full_overlap_bound(res.best)
+        for name, t in base.items():
+            if name != "FO":
+                rows.append((arch, name, t * 1e6))
+        rows.append((arch, "DisCo", res.best_cost * 1e6))
+        rows.append((arch, "FO", min(base["FO"], fo_best) * 1e6))
+        t_min = min(v for k, v in base.items() if k != "FO")
+        speedup = (t_min - res.best_cost) / res.best_cost * 100
+        fo_speedup = (t_min - min(base["FO"], fo_best)) / min(
+            base["FO"], fo_best) * 100
+        summary.append((arch, speedup, fo_speedup, res.steps,
+                        res.simulations, res.wall_time))
+    if verbose:
+        print("arch,strategy,us_per_iter")
+        for r in rows:
+            print(csv_row(r[0], r[1], f"{r[2]:.2f}"))
+        print("\n# Table 1: speed-up vs best baseline (%), FO bound speed-up")
+        print("arch,disco_speedup_pct,fo_speedup_pct,steps,sims,search_s")
+        for s in summary:
+            print(csv_row(s[0], f"{s[1]:.1f}", f"{s[2]:.1f}", s[3], s[4],
+                          f"{s[5]:.1f}"))
+    return rows, summary
+
+
+if __name__ == "__main__":
+    run()

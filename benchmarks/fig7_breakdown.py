@@ -1,0 +1,32 @@
+"""Fig. 7: per-iteration computation / communication / overlap breakdown for
+each strategy (paper reports overlap ratio = (comp+comm)/iteration)."""
+from __future__ import annotations
+
+from common import BENCH_ARCHS, arch_graph, csv_row, make_sim
+from repro.core import backtracking_search
+from repro.core.baselines import BASELINES
+
+
+def run(archs=BENCH_ARCHS[:4], unchanged_limit=120, verbose=True):
+    sim = make_sim()
+    rows = []
+    for arch in archs:
+        g = arch_graph(arch)
+        strategies = {name: fn(g) for name, fn in BASELINES.items()}
+        strategies["DisCo"] = backtracking_search(
+            g, sim, unchanged_limit=unchanged_limit, seed=0).best
+        for name, h in strategies.items():
+            r = sim.run(h)
+            rows.append((arch, name, r.iteration_time * 1e6,
+                         r.compute_time * 1e6, r.comm_time * 1e6,
+                         r.overlap_ratio))
+    if verbose:
+        print("arch,strategy,iter_us,compute_us,comm_us,overlap_ratio")
+        for r in rows:
+            print(csv_row(r[0], r[1], f"{r[2]:.2f}", f"{r[3]:.2f}",
+                          f"{r[4]:.2f}", f"{r[5]:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Fig. 8: single-device comparison — DisCo's op-fusion-only search vs the
+rule-based post-order heuristic (communication disabled: n_devices=1, no
+AllReduce)."""
+from __future__ import annotations
+
+from common import BENCH_ARCHS, arch_graph, csv_row
+from repro.core import Simulator, backtracking_search
+from repro.core.baselines import xla_post_order_op_fusion
+
+
+def run(archs=BENCH_ARCHS[:4], unchanged_limit=120, verbose=True):
+    sim = Simulator(n_devices=1)   # no communication
+    rows = []
+    for arch in archs:
+        g = arch_graph(arch)
+        t_none = sim.cost(g)
+        t_rule = sim.cost(xla_post_order_op_fusion(g))
+        res = backtracking_search(g, sim, methods=("nondup", "dup"),
+                                  unchanged_limit=unchanged_limit, seed=0)
+        rows.append((arch, t_none * 1e6, t_rule * 1e6, res.best_cost * 1e6))
+    if verbose:
+        print("arch,no_fusion_us,rule_based_us,disco_search_us")
+        for r in rows:
+            print(csv_row(r[0], *[f"{x:.2f}" for x in r[1:]]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 9: Fused-Op Estimator prediction-error PDF/CDF on *unseen* fused ops.
+
+Two ground-truth tiers (DESIGN.md Sec. 3):
+  A (default) — oracle-labelled fused subgraphs sampled from the traced
+      arch graphs (the paper's sample generator, Sec. 5.2);
+  B (--measured) — synthetic fused ops actually jit-executed and timed on
+      this CPU (real measurements, smaller corpus).
+"""
+from __future__ import annotations
+
+import random
+import sys
+
+import numpy as np
+
+from common import BENCH_ARCHS, arch_graph, csv_row
+from repro.core.gnn import GNNConfig, predict_times, train
+from repro.core.profile_cpu import measured_fused_samples, sample_fused_groups
+
+
+def run(n_per_arch=250, epochs=60, measured=False, verbose=True, seed=0):
+    rng = random.Random(seed)
+    if measured:
+        samples = measured_fused_samples(120, seed=seed, max_nodes=10,
+                                         dim=128)
+    else:
+        samples = []
+        for arch in BENCH_ARCHS:
+            g = arch_graph(arch)
+            samples += sample_fused_groups(g, n_per_arch, rng,
+                                           max_members=16)
+    rng.shuffle(samples)
+    n = len(samples)
+    tr, te = samples[: int(n * 0.85)], samples[int(n * 0.85):]
+    cfg = GNNConfig(n_layers=3, n_heads=4, head_dim=16, mlp_dim=64)
+    params, losses = train(tr, cfg, epochs=epochs, batch_size=32, lr=3e-3,
+                           seed=seed)
+    pred = predict_times(params, te)
+    true = np.array([s[3] for s in te])
+    rel = np.abs(pred - true) / true
+    pct = {p: float(np.percentile(rel, p)) for p in (50, 75, 90, 95)}
+    if verbose:
+        print(f"# corpus {'B (CPU-measured)' if measured else 'A (oracle)'}: "
+              f"{len(tr)} train / {len(te)} test fused ops")
+        print(f"# final train loss {losses[-1]:.4f}")
+        print("percentile,rel_error")
+        for p, v in pct.items():
+            print(csv_row(p, f"{v:.3f}"))
+        within = float(np.mean(rel < 0.14))
+        print(f"# fraction within 14% error (paper: >0.90 on GPU): "
+              f"{within:.2f}")
+    return pct
+
+
+if __name__ == "__main__":
+    run(measured="--measured" in sys.argv)

@@ -1,0 +1,104 @@
+"""Roofline analysis (deliverable g): per (arch x shape x mesh) compute /
+memory / collective terms, dominant bottleneck, MODEL_FLOPS ratio.
+
+Terms (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI):
+    compute    = FLOPs_pd / peak
+    memory     = HBM_bytes_pd / bw
+    collective = ICI_bytes_pd / link_bw
+
+Sources: dry-run JSONs (experiments/dryrun/*.json, HLO cost analysis +
+parsed collective ops) AND the analytic model in repro.core.analytic —
+HLO cost analysis counts scan bodies once (see EXPERIMENTS.md), so the
+table's terms use the analytic values with the raw HLO numbers alongside.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from common import csv_row
+from repro.configs import get_config
+from repro.core.analytic import shape_cost
+from repro.core.hw import TPU_V5E
+from repro.launch.shapes import FSDP_ARCHS, applicability
+
+
+def load_dryruns(path="experiments/dryrun"):
+    out = {}
+    for f in glob.glob(os.path.join(path, "*.json")):
+        d = json.load(open(f))
+        if "error" in d:
+            continue
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def analyse(arch: str, shape: str, mesh: str, dry: dict | None):
+    hw = TPU_V5E
+    cfg0 = get_config(arch)
+    ok, reason, cfg = applicability(cfg0, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh, "skip": reason}
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16}
+                  if mesh == "pod2x16x16" else {"data": 16, "model": 16})
+    cb = shape_cost(cfg, shape, mesh_shape, fsdp=arch in FSDP_ARCHS)
+    n_dev = 1
+    for v in mesh_shape.values():
+        n_dev *= v
+    t_c = cb.flops / (hw.peak_flops * hw.efficiency)
+    t_m = cb.hbm_bytes / hw.hbm_bw
+    t_i = cb.ici_bytes / hw.ici_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_i, "collective"))[1]
+    row = {
+        "arch": arch, "shape": shape, "mesh": mesh,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_i,
+        "dominant": dom,
+        "model_flops": cb.model_flops,
+        "useful_ratio": cb.model_flops / max(cb.flops * n_dev, 1.0),
+        "analytic_flops_pd": cb.flops,
+        "analytic_hbm_pd": cb.hbm_bytes,
+        "analytic_ici_pd": cb.ici_bytes,
+    }
+    if dry:
+        row["hlo_flops_raw"] = dry.get("flops")
+        row["hlo_bytes_raw"] = dry.get("bytes_accessed")
+        row["hlo_ici_static"] = dry.get("collectives", {}).get(
+            "ici_traffic_bytes")
+        m = dry.get("memory", {})
+        row["mem_gib_per_dev"] = (m.get("argument_bytes", 0)
+                                  + m.get("temp_bytes", 0)) / 2**30
+    return row
+
+
+def run(verbose=True, path="experiments/dryrun"):
+    dry = load_dryruns(path)
+    from repro.configs import ARCHS
+    from repro.launch.shapes import SHAPES
+
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                d = dry.get((arch, shape, mesh))
+                rows.append(analyse(arch, shape, mesh, d))
+    if verbose:
+        print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+              "useful_ratio,mem_gib_per_dev")
+        for r in rows:
+            if "skip" in r:
+                print(csv_row(r["arch"], r["shape"], r["mesh"], "SKIP", "",
+                              "", "", "", ""))
+                continue
+            print(csv_row(
+                r["arch"], r["shape"], r["mesh"],
+                f"{r['compute_s'] * 1e3:.3f}", f"{r['memory_s'] * 1e3:.3f}",
+                f"{r['collective_s'] * 1e3:.3f}", r["dominant"],
+                f"{r['useful_ratio']:.2f}",
+                f"{r.get('mem_gib_per_dev', float('nan')):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

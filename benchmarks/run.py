@@ -1,0 +1,62 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints CSV blocks per artifact.  The full dry-run sweep (deliverable e/g)
+runs separately via ``python -m repro.launch.sweep``; roofline.py consumes
+its outputs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    lim = 40 if quick else 120
+    import fig6_training_time
+    import fig7_breakdown
+    import fig8_single_device
+    import fig9_estimator
+    import fig10_ablation
+    import fig11_gnn_search
+    import table2_sim_accuracy
+    import table34_hparams
+    import roofline
+
+    artifacts = [
+        ("Fig6+Table1: training time & speedups",
+         lambda: fig6_training_time.run(unchanged_limit=lim)),
+        ("Fig7: time breakdown",
+         lambda: fig7_breakdown.run(unchanged_limit=lim)),
+        ("Fig8: single-device op fusion",
+         lambda: fig8_single_device.run(unchanged_limit=lim)),
+        ("Fig9: GNN estimator error (tier A oracle corpus)",
+         lambda: fig9_estimator.run(n_per_arch=80 if quick else 200,
+                                    epochs=25 if quick else 50)),
+        ("Table2: simulator vs real CPU step time",
+         lambda: table2_sim_accuracy.run()),
+        ("Fig10: optimization-method ablation",
+         lambda: fig10_ablation.run(unchanged_limit=max(lim // 2, 30))),
+        ("Tables3+4: alpha/beta hyper-parameters",
+         lambda: table34_hparams.run(unchanged_limit=max(lim // 2, 30))),
+        ("Fig11 (ours): GNN-in-the-loop search vs oracle search",
+         lambda: fig11_gnn_search.run(unchanged_limit=max(lim // 2, 30))),
+        ("Roofline: per (arch x shape x mesh) terms",
+         lambda: roofline.run()),
+    ]
+    for title, fn in artifacts:
+        print(f"\n{'=' * 72}\n# {title}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        fn()
+        print(f"# [{title.split(':')[0]} done in "
+              f"{time.perf_counter() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

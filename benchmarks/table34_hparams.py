@@ -1,0 +1,34 @@
+"""Tables 3 & 4: backtracking hyper-parameters — per-iteration time and
+search time for alpha in {1, 1.05, 1.1} (beta=10) and beta in {1, 5, 10, 30}
+(alpha=1.05)."""
+from __future__ import annotations
+
+from common import BENCH_ARCHS, arch_graph, csv_row, make_sim
+from repro.core import backtracking_search
+
+
+def run(archs=BENCH_ARCHS[:3], unchanged_limit=80, verbose=True):
+    sim = make_sim()
+    rows = []
+    for arch in archs:
+        g = arch_graph(arch)
+        for alpha in (1.0, 1.05, 1.1):
+            r = backtracking_search(g, sim, alpha=alpha, beta=10,
+                                    unchanged_limit=unchanged_limit, seed=0)
+            rows.append((arch, "alpha", alpha, r.best_cost * 1e6,
+                         r.wall_time, r.simulations))
+        for beta in (1, 5, 10, 30):
+            r = backtracking_search(g, sim, alpha=1.05, beta=beta,
+                                    unchanged_limit=unchanged_limit, seed=0)
+            rows.append((arch, "beta", beta, r.best_cost * 1e6,
+                         r.wall_time, r.simulations))
+    if verbose:
+        print("arch,param,value,us_per_iter,search_s,simulations")
+        for r in rows:
+            print(csv_row(r[0], r[1], r[2], f"{r[3]:.2f}", f"{r[4]:.2f}",
+                          r[5]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

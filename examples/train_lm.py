@@ -1,0 +1,25 @@
+"""End-to-end data-parallel training with a DisCo-searched strategy.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-0.5b] [--steps N]
+
+Trains a reduced assigned-architecture LM for a few hundred steps on the
+synthetic bigram corpus, with the gradient AllReduce schedule enacted from
+the DisCo search (see repro/launch/train.py for the full driver with
+checkpoints/resume).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+if __name__ == "__main__":
+    from repro.launch import train
+
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv += ["--arch", "qwen2-0.5b"]
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "200"]
+    sys.argv = [sys.argv[0], "--reduced", "--batch", "16", "--seq", "64",
+                "--strategy", "auto", "--log-every", "25"] + argv
+    train.main()

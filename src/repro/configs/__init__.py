@@ -1,0 +1,38 @@
+"""Assigned-architecture registry: ``get_config("<arch-id>")``.
+
+Every entry cites its source in ``ModelConfig.source``; reduced smoke-test
+variants come from ``cfg.reduced()``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "stablelm-1.6b",
+    "paligemma-3b",
+    "qwen2-0.5b",
+    "deepseek-v2-lite-16b",
+    "deepseek-v2-236b",
+    "deepseek-coder-33b",
+    "seamless-m4t-medium",
+    "recurrentgemma-9b",
+    "rwkv6-3b",
+    "tinyllama-1.1b",
+)
+
+# the paper's own benchmark model ships alongside the assigned pool
+EXTRA_ARCHS = ("transformer-paper",)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_")
+            for a in ARCHS + EXTRA_ARCHS}
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,26 @@
+"""PaliGemma-3B language backbone [arXiv:2407.07726].
+
+Gemma decoder: 18L, d_model 2048, 8 heads, MQA (kv=1), d_ff 16384,
+vocab 257216, GeGLU, tied embeddings.  The SigLIP vision tower + projector is
+a STUB per spec: input_specs() supplies 256 precomputed patch embeddings
+(d_model) prepended to the text tokens.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=257216,
+    norm="rms",
+    act="gelu",
+    glu=True,
+    tie_embeddings=True,
+    vlm_prefix_len=256,
+    source="arXiv:2407.07726 (SigLIP + Gemma-2B)",
+)

@@ -1,0 +1,26 @@
+"""RecurrentGemma-9B (Griffin) [arXiv:2402.19427].
+
+38L, d_model 4096, pattern (rec, rec, local-attn) 2:1, RG-LRU width 4096,
+local attention window 2048 with 16 heads MQA (kv=1), d_ff 12288 (GeGLU),
+vocab 256000.
+"""
+from repro.models.config import ModelConfig, RecurrentConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    act="gelu",
+    glu=True,
+    window=2048,
+    tie_embeddings=True,
+    recurrent=RecurrentConfig(lru_width=4096, conv_width=4,
+                              pattern=("rec", "rec", "attn")),
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma-9B)",
+)

@@ -1,0 +1,24 @@
+"""RWKV-6 "Finch" 3B [arXiv:2404.05892].
+
+32L, d_model 2560, attention-free (data-dependent decay WKV), head_dim 64
+(40 heads), channel-mix d_ff 8960, vocab 65536.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    arch_type="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,            # wkv heads (head_dim 64)
+    n_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab=65536,
+    block="rwkv",
+    norm="layer",
+    glu=False,
+    act="relu",
+    rope_frac=0.0,
+    source="arXiv:2404.05892 (RWKV-6 Finch)",
+)

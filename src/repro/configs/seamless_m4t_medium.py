@@ -1,0 +1,26 @@
+"""SeamlessM4T-Medium text/unit backbone [arXiv:2308.11596].
+
+Encoder-decoder transformer: 12 encoder + 12 decoder layers, d_model 1024,
+16 heads, d_ff 4096, vocab 256206 (padded to 256208 for 16-way tensor parallelism,
+standard practice), ReLU FFN (no GLU), LayerNorm.
+The speech frontend (mel + conformer feature extractor) is a STUB per spec:
+input_specs() supplies precomputed frame embeddings (enc_seq x 1024).
+"""
+from repro.models.config import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    n_layers=12,               # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=256208,  # 256206 padded to /16
+    norm="layer",
+    act="relu",
+    glu=False,
+    rope_frac=0.0,             # learned/sinusoidal positions; no rope
+    encdec=EncDecConfig(n_enc_layers=12, enc_seq=1024, frontend_dim=1024),
+    source="arXiv:2308.11596 (SeamlessM4T-Medium)",
+)

@@ -1,0 +1,22 @@
+"""StableLM-2 1.6B [hf:stabilityai/stablelm-2-1_6b].
+
+24L, d_model 2048, 32 heads (full MHA: kv=32), d_ff 5632, vocab 100352,
+LayerNorm, partial rotary (25% of head dim), SiLU-gated FFN, untied embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    arch_type="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab=100352,
+    norm="layer",
+    act="silu",
+    glu=True,
+    rope_frac=0.25,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)

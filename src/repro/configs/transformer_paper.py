@@ -1,0 +1,22 @@
+"""Transformer-base — the paper's own communication-bound benchmark model
+(Vaswani et al., used in DisCo Fig. 6/7 as the model with the largest
+speed-up).  Included alongside the assigned pool per the repo structure
+spec ("one <arch>.py per assigned architecture (+ paper's own)").
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="transformer-paper",
+    arch_type="dense",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=32768,
+    norm="layer",
+    act="relu",
+    glu=False,
+    rope_frac=0.0,          # sinusoidal positions, as in the original
+    source="arXiv:1706.03762 (Transformer-base; DisCo benchmark model)",
+)

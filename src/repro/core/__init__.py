@@ -1,0 +1,21 @@
+from .graph import DOT, EW, FusionGraph, LAYOUT, OPAQUE, PrimOp, REDUCE
+from .hw import Hardware, TPU_V5E, allreduce_time, ring_allreduce_coeffs
+from .costs import (OracleEstimator, group_time_oracle, prim_time,
+                    profile_graph, total_comm_time, total_compute_time)
+from .simulator import SimResult, Simulator
+from .search import (ALL_METHODS, METHOD_DUP, METHOD_NONDUP, METHOD_TENSOR,
+                     SearchResult, backtracking_search, random_apply)
+from .baselines import BASELINES, evaluate_baselines
+from .trace import graph_from_jaxpr, trace_grad_graph
+
+__all__ = [
+    "DOT", "EW", "FusionGraph", "LAYOUT", "OPAQUE", "PrimOp", "REDUCE",
+    "Hardware", "TPU_V5E", "allreduce_time", "ring_allreduce_coeffs",
+    "OracleEstimator", "group_time_oracle", "prim_time", "profile_graph",
+    "total_comm_time", "total_compute_time",
+    "SimResult", "Simulator",
+    "ALL_METHODS", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
+    "SearchResult", "backtracking_search", "random_apply",
+    "BASELINES", "evaluate_baselines",
+    "graph_from_jaxpr", "trace_grad_graph",
+]

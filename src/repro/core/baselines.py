@@ -1,0 +1,97 @@
+"""The paper's comparison baselines, re-implemented as graph rewrites
+(Sec. 6.1): XLA-style post-order heuristic op fusion, XLA AllReduce-combiner
+threshold tensor fusion, PyTorch-DDP-style reverse-order bucketing, and the
+full-overlap (FO) bound.
+"""
+from __future__ import annotations
+
+from .graph import DOT, EW, FusionGraph, LAYOUT, REDUCE
+from .simulator import Simulator
+
+# XLA GPU AllReduce combiner default threshold (bytes).
+XLA_COMBINE_THRESHOLD = 30 * 2**20
+# PyTorch DDP default bucket cap.
+DDP_BUCKET_CAP = 25 * 2**20
+
+
+def xla_post_order_op_fusion(g: FusionGraph, max_group: int = 64) -> FusionGraph:
+    """XLA-like heuristic: visit ops in a fixed post order; fuse an op with
+    its producer whenever both are fusible kinds and the fusion saves device
+    memory traffic (paper Sec. 2.2: "ops are chosen according to a
+    pre-defined post order")."""
+    g = g.clone()
+    # post order = reverse topological order of prims
+    order = sorted(range(len(g.prims)), reverse=True)
+    fusible_producer = {EW, LAYOUT}
+    fusible_consumer = {EW, LAYOUT, REDUCE, DOT}
+    for pid in order:
+        p = g.prims[pid]
+        if p.category not in fusible_consumer:
+            continue
+        cgid = next((gid for gid, m in g.groups.items() if pid in m
+                     and g.provider[pid] == gid), None)
+        if cgid is None or len(g.groups[cgid]) >= max_group:
+            continue
+        # try each producer group, best-effort greedy
+        for prod in sorted(g.group_preds(cgid)):
+            if len(g.groups[prod]) + len(g.groups[cgid]) > max_group:
+                continue
+            if all(g.prims[q].category in fusible_producer for q in g.groups[prod]):
+                g.fuse_nondup(cgid, prod)
+                break
+    return g
+
+
+def threshold_tensor_fusion(g: FusionGraph, threshold: int = XLA_COMBINE_THRESHOLD,
+                            reverse: bool = False) -> FusionGraph:
+    """XLA AllReduce-combiner style: greedily merge neighbouring buckets while
+    the fused tensor stays under ``threshold`` bytes.  ``reverse=True`` packs
+    from the end of the production order (PyTorch DDP registers buckets in
+    reverse gradient order)."""
+    g = g.clone()
+    i = len(g.buckets) - 2 if reverse else 0
+    step = -1 if reverse else 0  # after a merge at i, the next pair is (i, i+1) again
+    while 0 <= i < len(g.buckets) - 1:
+        a, b = g.buckets[i], g.buckets[i + 1]
+        if g.bucket_bytes(a) + g.bucket_bytes(b) <= threshold and g.merge_buckets(i, i + 1):
+            if reverse:
+                i -= 1
+            continue
+        i += -1 if reverse else 1
+    return g
+
+
+def jax_no_fusion(g: FusionGraph) -> FusionGraph:
+    return g.clone()
+
+
+def jax_op_fusion(g: FusionGraph) -> FusionGraph:
+    return xla_post_order_op_fusion(g)
+
+
+def jax_allreduce_fusion(g: FusionGraph) -> FusionGraph:
+    return threshold_tensor_fusion(g)
+
+
+def jax_default(g: FusionGraph) -> FusionGraph:
+    return threshold_tensor_fusion(xla_post_order_op_fusion(g))
+
+
+def pytorch_ddp(g: FusionGraph) -> FusionGraph:
+    """DDP: no op fusion; 25 MB buckets packed in reverse production order."""
+    return threshold_tensor_fusion(g, threshold=DDP_BUCKET_CAP, reverse=True)
+
+
+BASELINES = {
+    "JAX_no_fusion": jax_no_fusion,
+    "JAX_op_fusion": jax_op_fusion,
+    "JAX_AllReduce_fusion": jax_allreduce_fusion,
+    "JAX_default": jax_default,
+    "PyTorch_DDP": pytorch_ddp,
+}
+
+
+def evaluate_baselines(g: FusionGraph, sim: Simulator) -> dict[str, float]:
+    out = {name: sim.cost(fn(g)) for name, fn in BASELINES.items()}
+    out["FO"] = sim.full_overlap_bound(jax_default(g))
+    return out

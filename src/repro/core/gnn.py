@@ -1,0 +1,204 @@
+"""GNN-based Fused-Op Estimator (paper Sec. 4.3), in pure JAX.
+
+Encoder: multi-head graph attention layers (eq. (1)) over the fused op's
+internal subgraph — node features are (op-category one-hot, log FLOPs,
+log in/out bytes, log standalone time, degree).  A sum-pool layer produces
+the fused-op embedding (eq. (2)), followed by an FC regression head.  Loss
+is squared error in log-time (eq. (3)); training uses our AdamW
+(:mod:`repro.optim`).
+
+Samples are padded to ``max_nodes`` so training batches are jit-static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import adamw, apply_updates
+from .graph import DOT, EW, FusionGraph, LAYOUT, OPAQUE, REDUCE
+
+CATEGORIES = (EW, REDUCE, DOT, LAYOUT, OPAQUE)
+N_FEATURES = len(CATEGORIES) + 4  # + log flops, log in_b, log out_b, log time
+
+
+# ------------------------------------------------------------------ features
+def group_features(g: FusionGraph, gid: int, max_nodes: int):
+    """(feat [N,F], adj [N,N], mask [N]) for the members of one fused group."""
+    members = sorted(g.groups[gid])
+    n = min(len(members), max_nodes)
+    members = members[:n]
+    index = {pid: i for i, pid in enumerate(members)}
+    feat = np.zeros((max_nodes, N_FEATURES), np.float32)
+    adj = np.zeros((max_nodes, max_nodes), np.float32)
+    mask = np.zeros((max_nodes,), np.float32)
+    for i, pid in enumerate(members):
+        p = g.prims[pid]
+        feat[i, CATEGORIES.index(p.category)] = 1.0
+        feat[i, len(CATEGORIES) + 0] = np.log1p(p.flops) / 30.0
+        feat[i, len(CATEGORIES) + 1] = np.log1p(p.in_bytes) / 30.0
+        feat[i, len(CATEGORIES) + 2] = np.log1p(p.out_bytes) / 30.0
+        feat[i, len(CATEGORIES) + 3] = np.log1p(p.time * 1e9) / 30.0
+        mask[i] = 1.0
+        adj[i, i] = 1.0
+        for q in g.ppreds[pid]:
+            j = index.get(q)
+            if j is not None:
+                adj[j, i] = 1.0
+                adj[i, j] = 1.0  # undirected message passing + self loops
+    return feat, adj, mask
+
+
+# -------------------------------------------------------------------- model
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    n_layers: int = 3          # paper uses 6 graph-conv layers
+    n_heads: int = 4
+    head_dim: int = 16
+    mlp_dim: int = 64
+    n_mlp: int = 3             # paper: 3 dense layers
+    max_nodes: int = 48
+
+
+def init_params(cfg: GNNConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers * 3 + cfg.n_mlp + 2)
+    ki = iter(keys)
+    params: dict = {"layers": [], "mlp": []}
+    f_in = N_FEATURES
+    for _ in range(cfg.n_layers):
+        w = jax.random.normal(next(ki), (cfg.n_heads, f_in, cfg.head_dim)) * (
+            1.0 / np.sqrt(f_in)
+        )
+        a_src = jax.random.normal(next(ki), (cfg.n_heads, cfg.head_dim)) * 0.1
+        a_dst = jax.random.normal(next(ki), (cfg.n_heads, cfg.head_dim)) * 0.1
+        params["layers"].append({"w": w, "a_src": a_src, "a_dst": a_dst})
+        f_in = cfg.n_heads * cfg.head_dim
+    params["pool_w"] = jax.random.normal(next(ki), (f_in, cfg.mlp_dim)) * (
+        1.0 / np.sqrt(f_in)
+    )
+    d = cfg.mlp_dim
+    for i in range(cfg.n_mlp):
+        d_out = 1 if i == cfg.n_mlp - 1 else cfg.mlp_dim
+        params["mlp"].append({
+            "w": jax.random.normal(next(ki), (d, d_out)) * (1.0 / np.sqrt(d)),
+            "b": jnp.zeros((d_out,)),
+        })
+        d = d_out
+    return params
+
+
+def forward(params: dict, feat, adj, mask):
+    """Predicted log-time for one padded graph."""
+    e = feat
+    neg = jnp.finfo(jnp.float32).min
+    edge_mask = adj * mask[None, :] * mask[:, None]
+    for layer in params["layers"]:
+        h = jnp.einsum("nf,kfd->knd", e, layer["w"])            # [K,N,D]
+        s_src = jnp.einsum("knd,kd->kn", h, layer["a_src"])     # [K,N]
+        s_dst = jnp.einsum("knd,kd->kn", h, layer["a_dst"])
+        logits = s_src[:, :, None] + s_dst[:, None, :]          # [K,N,N]
+        logits = jax.nn.leaky_relu(logits, 0.2)
+        logits = jnp.where(edge_mask[None] > 0, logits, neg)
+        gamma = jax.nn.softmax(logits, axis=2)                  # eq. (1) coeffs
+        gamma = jnp.where(edge_mask[None] > 0, gamma, 0.0)
+        out = jnp.einsum("knm,kmd->knd", gamma, h)              # aggregate
+        e = jax.nn.elu(out).transpose(1, 0, 2).reshape(feat.shape[0], -1)
+        e = e * mask[:, None]
+    pooled = jax.nn.elu(jnp.einsum("nf,fd->d", e * mask[:, None],
+                                   params["pool_w"]))            # eq. (2)
+    x = pooled
+    for i, layer in enumerate(params["mlp"]):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params["mlp"]) - 1:
+            x = jax.nn.relu(x)
+    return x[0]
+
+
+forward_batch = jax.vmap(forward, in_axes=(None, 0, 0, 0))
+
+
+def loss_fn(params, feat, adj, mask, log_t):
+    pred = forward_batch(params, feat, adj, mask)
+    return jnp.mean(jnp.square(pred - log_t))  # eq. (3), log-space MSE
+
+
+@partial(jax.jit, static_argnames=("update",))
+def _train_step(params, opt_state, feat, adj, mask, log_t, update):
+    loss, grads = jax.value_and_grad(loss_fn)(params, feat, adj, mask, log_t)
+    updates, opt_state = update(grads, opt_state, params)
+    return apply_updates(params, updates), opt_state, loss
+
+
+def train(
+    samples: Sequence[tuple],  # (feat, adj, mask, time_seconds)
+    cfg: GNNConfig = GNNConfig(),
+    *,
+    epochs: int = 60,
+    batch_size: int = 32,
+    lr: float = 3e-3,
+    seed: int = 0,
+    verbose: bool = False,
+) -> tuple[dict, list[float]]:
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    init, update = adamw(lr)
+    opt_state = init(params)
+    feat = jnp.asarray(np.stack([s[0] for s in samples]))
+    adj = jnp.asarray(np.stack([s[1] for s in samples]))
+    mask = jnp.asarray(np.stack([s[2] for s in samples]))
+    log_t = jnp.asarray(np.array([np.log(max(s[3], 1e-9)) for s in samples],
+                                 np.float32))
+    n = len(samples)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i : i + batch_size]
+            params, opt_state, l = _train_step(
+                params, opt_state, feat[idx], adj[idx], mask[idx], log_t[idx],
+                update)
+            ep_loss += float(l)
+            nb += 1
+        losses.append(ep_loss / max(nb, 1))
+        if verbose and ep % 10 == 0:
+            print(f"  gnn epoch {ep}: loss {losses[-1]:.4f}")
+    return params, losses
+
+
+def predict_times(params, samples) -> np.ndarray:
+    feat = jnp.asarray(np.stack([s[0] for s in samples]))
+    adj = jnp.asarray(np.stack([s[1] for s in samples]))
+    mask = jnp.asarray(np.stack([s[2] for s in samples]))
+    return np.exp(np.asarray(forward_batch(params, feat, adj, mask)))
+
+
+# ----------------------------------------------------------------- estimator
+class GNNEstimator:
+    """Drop-in for :class:`repro.core.costs.OracleEstimator`, backed by the
+    trained GNN for multi-op groups; singleton groups use profiled times."""
+
+    def __init__(self, params: dict, cfg: GNNConfig):
+        self.params = params
+        self.cfg = cfg
+        self._cache: dict = {}
+        self._fwd = jax.jit(forward)
+
+    def group_time(self, g: FusionGraph, gid: int) -> float:
+        members = g.groups[gid]
+        if len(members) == 1:
+            (pid,) = members
+            return g.prims[pid].time
+        key = members
+        t = self._cache.get(key)
+        if t is None:
+            feat, adj, mask = group_features(g, gid, self.cfg.max_nodes)
+            t = float(np.exp(self._fwd(self.params, feat, adj, mask)))
+            self._cache[key] = t
+        return t

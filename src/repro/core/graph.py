@@ -1,0 +1,316 @@
+"""Fusion IR — the joint op/tensor-fusion strategy state DisCo searches over.
+
+The IR has two levels:
+
+* **Primitive level** (immutable): ``PrimOp`` nodes and dependency edges, as
+  extracted from a jaxpr by :mod:`repro.core.trace` (or built synthetically).
+  A prim that produces a parameter gradient carries ``grad_param >= 0`` and
+  ``grad_bytes > 0`` — its tensor must be AllReduced in data-parallel training.
+
+* **Fusion state** (mutable): a partition of prims into *groups* (fused ops).
+  Duplicate fusion (paper Fig. 1(iii)) lets a prim be a member of several
+  groups; exactly one group is its *provider* — the occurrence whose
+  completion makes the prim's output available to external consumers.
+  AllReduce instructions are partitioned into *buckets* (tensor fusion).
+
+Mutations (`fuse_nondup`, `fuse_dup`, `merge_buckets`) are the paper's three
+optimisation methods (Sec. 4.5); each validates DAG-ness of the quotient
+graph and op fusibility before committing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+# Op-type categories used for fusibility and the XLA-like baseline heuristic.
+EW = "ew"            # elementwise / injective
+REDUCE = "reduce"
+DOT = "dot"
+LAYOUT = "layout"    # reshape/transpose/broadcast/convert
+OPAQUE = "opaque"    # scan/while/custom-call/sort/rng — never fused
+
+FUSIBLE = {EW, REDUCE, DOT, LAYOUT}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimOp:
+    pid: int
+    op_type: str          # primitive name, e.g. "dot_general", "mul"
+    category: str         # one of EW/REDUCE/DOT/LAYOUT/OPAQUE
+    flops: float
+    in_bytes: float       # bytes read from its inputs (standalone)
+    out_bytes: float      # bytes written (standalone)
+    time: float           # profiled standalone execution time (seconds)
+    grad_param: int = -1  # index of the gradient leaf it produces, or -1
+    grad_bytes: float = 0.0
+    # partition signature of the gradient (tensor fusion may only merge
+    # gradients reduced over the same axes / of the same dtype family).
+    grad_sig: str = ""
+
+    @property
+    def fusible(self) -> bool:
+        return self.category in FUSIBLE
+
+
+class FusionGraph:
+    """Mutable joint fusion state over an immutable prim DAG."""
+
+    def __init__(self, prims: list[PrimOp], edges: Iterable[tuple[int, int]]):
+        self.prims = list(prims)
+        n = len(self.prims)
+        self.psuccs: list[set[int]] = [set() for _ in range(n)]
+        self.ppreds: list[set[int]] = [set() for _ in range(n)]
+        for s, d in edges:
+            self.psuccs[s].add(d)
+            self.ppreds[d].add(s)
+        # fusion state: every prim starts as a singleton group (gid == pid)
+        self.groups: dict[int, frozenset[int]] = {
+            p.pid: frozenset([p.pid]) for p in self.prims
+        }
+        self.provider: dict[int, int] = {p.pid: p.pid for p in self.prims}
+        self._next_gid = n
+        # tensor-fusion state: list of buckets; each bucket is an ordered
+        # tuple of param indices.  Initially one bucket per gradient, in
+        # topological production order.
+        grads = sorted(
+            (p for p in self.prims if p.grad_param >= 0), key=lambda p: p.pid
+        )
+        self.grad_prim: dict[int, int] = {p.grad_param: p.pid for p in grads}
+        self.buckets: list[tuple[int, ...]] = [(p.grad_param,) for p in grads]
+        self._quotient_cache: tuple | None = None
+
+    # ------------------------------------------------------------------ util
+    def clone(self) -> "FusionGraph":
+        g = object.__new__(FusionGraph)
+        g.prims = self.prims                  # immutable, shared
+        g.psuccs = self.psuccs
+        g.ppreds = self.ppreds
+        g.groups = dict(self.groups)
+        g.provider = dict(self.provider)
+        g._next_gid = self._next_gid
+        g.grad_prim = self.grad_prim
+        g.buckets = list(self.buckets)
+        g._quotient_cache = self._quotient_cache
+        return g
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    def group_key(self, gid: int) -> frozenset[int]:
+        return self.groups[gid]
+
+    # --------------------------------------------------------- quotient DAG
+    def quotient(self) -> tuple[dict[int, set[int]], dict[int, set[int]]]:
+        """Edges between groups: provider(q) -> G for q consumed by G from
+        outside G.  Returns (succs, preds) keyed by gid."""
+        if self._quotient_cache is not None:
+            return self._quotient_cache
+        succs: dict[int, set[int]] = {g: set() for g in self.groups}
+        preds: dict[int, set[int]] = {g: set() for g in self.groups}
+        for gid, members in self.groups.items():
+            for pid in members:
+                for q in self.ppreds[pid]:
+                    if q not in members:
+                        src = self.provider[q]
+                        if src != gid:
+                            succs[src].add(gid)
+                            preds[gid].add(src)
+        self._quotient_cache = (succs, preds)
+        return self._quotient_cache
+
+    def _acyclic(self, succs: dict[int, set[int]]) -> bool:
+        indeg = {g: 0 for g in succs}
+        for g, ss in succs.items():
+            for d in ss:
+                indeg[d] += 1
+        stack = [g for g, k in indeg.items() if k == 0]
+        seen = 0
+        while stack:
+            g = stack.pop()
+            seen += 1
+            for d in succs[g]:
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    stack.append(d)
+        return seen == len(succs)
+
+    def topo_groups(self) -> list[int]:
+        succs, preds = self.quotient()
+        indeg = {g: len(ps) for g, ps in preds.items()}
+        # deterministic: prefer smaller min-member pid first
+        import heapq
+
+        key = {g: min(m) for g, m in self.groups.items()}
+        heap = [(key[g], g) for g, k in indeg.items() if k == 0]
+        heapq.heapify(heap)
+        order = []
+        while heap:
+            _, g = heapq.heappop(heap)
+            order.append(g)
+            for d in succs[g]:
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    heapq.heappush(heap, (key[d], d))
+        if len(order) != len(self.groups):
+            raise RuntimeError("quotient graph is cyclic")
+        return order
+
+    # ----------------------------------------------------------- mutations
+    def _fusible_group(self, gid: int) -> bool:
+        return all(self.prims[p].fusible for p in self.groups[gid])
+
+    def group_preds(self, gid: int) -> set[int]:
+        return self.quotient()[1][gid]
+
+    def group_succs(self, gid: int) -> set[int]:
+        return self.quotient()[0][gid]
+
+    def fuse_nondup(self, consumer: int, producer: int) -> bool:
+        """Paper method (i): merge producer group into consumer group.
+        Returns False (state unchanged) if invalid."""
+        if consumer == producer:
+            return False
+        if consumer not in self.groups or producer not in self.groups:
+            return False
+        if not (self._fusible_group(consumer) and self._fusible_group(producer)):
+            return False
+        if producer not in self.group_preds(consumer):
+            return False
+        merged = self.groups[consumer] | self.groups[producer]
+        trial = self.clone()
+        gid = trial._next_gid
+        trial._next_gid += 1
+        del trial.groups[consumer], trial.groups[producer]
+        trial.groups[gid] = merged
+        for pid, prov in list(trial.provider.items()):
+            if prov in (consumer, producer):
+                trial.provider[pid] = gid
+        trial._quotient_cache = None
+        succs, _ = trial.quotient()
+        if not trial._acyclic(succs):
+            return False
+        self._commit(trial)
+        return True
+
+    def fuse_dup(self, consumer: int, producer: int) -> bool:
+        """Paper method (ii): copy producer group's members into consumer
+        group; the original producer group remains and keeps providing the
+        outputs to its other successors (duplicate fusion, Fig. 1(iii))."""
+        if consumer == producer:
+            return False
+        if consumer not in self.groups or producer not in self.groups:
+            return False
+        if not (self._fusible_group(consumer) and self._fusible_group(producer)):
+            return False
+        if producer not in self.group_preds(consumer):
+            return False
+        # Gradient-producing prims must not be duplicated (their output is
+        # consumed by AllReduce; recomputing is fine but provider stays put —
+        # allowed).  Disallow duplicating OPAQUE already covered by fusible.
+        trial = self.clone()
+        merged = self.groups[consumer] | self.groups[producer]
+        if merged == self.groups[consumer]:
+            return False
+        gid = trial._next_gid
+        trial._next_gid += 1
+        del trial.groups[consumer]
+        trial.groups[gid] = merged
+        for pid, prov in list(trial.provider.items()):
+            if prov == consumer:
+                trial.provider[pid] = gid
+        # provider of producer's members unchanged (duplicate).
+        trial._quotient_cache = None
+        succs, _ = trial.quotient()
+        if not trial._acyclic(succs):
+            return False
+        self._commit(trial)
+        return True
+
+    def merge_buckets(self, i: int, j: int) -> bool:
+        """Paper method (iii): combine two *neighbouring* AllReduce buckets.
+        Buckets are kept in gradient-production (topo) order; neighbours are
+        adjacent buckets whose gradients share a compatible partition
+        signature."""
+        if i == j or not (0 <= i < len(self.buckets) and 0 <= j < len(self.buckets)):
+            return False
+        if abs(i - j) != 1:
+            return False
+        a, b = self.buckets[min(i, j)], self.buckets[max(i, j)]
+        sig_a = self.prims[self.grad_prim[a[0]]].grad_sig
+        sig_b = self.prims[self.grad_prim[b[0]]].grad_sig
+        if sig_a != sig_b:
+            return False
+        lo = min(i, j)
+        self.buckets[lo : lo + 2] = [a + b]
+        return True
+
+    def _commit(self, trial: "FusionGraph") -> None:
+        self.groups = trial.groups
+        self.provider = trial.provider
+        self._next_gid = trial._next_gid
+        self._quotient_cache = trial._quotient_cache
+
+    # ------------------------------------------------------------ accessors
+    def group_external_io(self, gid: int) -> tuple[float, float]:
+        """(external input bytes, external output bytes) of a fused group —
+        intermediates that stay inside the group are elided (the fusion
+        memory saving of paper Sec. 2.2)."""
+        members = self.groups[gid]
+        in_b = 0.0
+        out_b = 0.0
+        for pid in members:
+            p = self.prims[pid]
+            ext_preds = [q for q in self.ppreds[pid] if q not in members]
+            if self.ppreds[pid]:
+                frac = len(ext_preds) / len(self.ppreds[pid])
+                # matmul operands must be (re)streamed even when produced
+                # in-group: internal elision is only partial for DOT inputs.
+                if p.category == "dot":
+                    frac = frac + 0.5 * (1.0 - frac)
+                in_b += p.in_bytes * frac
+            else:
+                in_b += p.in_bytes
+            # Output leaves the group iff some consumer is external (or it is
+            # a graph output / gradient) AND this group is the prim's
+            # provider.  A duplicated copy's output stays in-group.
+            needs_out = (
+                p.grad_param >= 0
+                or not self.psuccs[pid]
+                or any(q not in members for q in self.psuccs[pid])
+            )
+            if needs_out and self.provider[pid] == gid:
+                out_b += p.out_bytes
+        return in_b, out_b
+
+    def group_flops(self, gid: int) -> float:
+        return sum(self.prims[p].flops for p in self.groups[gid])
+
+    def bucket_bytes(self, bucket: tuple[int, ...]) -> float:
+        return sum(self.prims[self.grad_prim[g]].grad_bytes for g in bucket)
+
+    def bucket_ready_groups(self, bucket: tuple[int, ...]) -> set[int]:
+        return {self.provider[self.grad_prim[g]] for g in bucket}
+
+    def signature(self) -> tuple:
+        """Hashable fingerprint of the strategy (for memoisation)."""
+        gs = tuple(sorted(tuple(sorted(m)) for m in self.groups.values()))
+        pv = tuple(sorted(self.provider.items()))
+        bk = tuple(self.buckets)
+        return (gs, pv, bk)
+
+    # --------------------------------------------------------------- stats
+    def describe(self) -> dict:
+        return {
+            "prims": len(self.prims),
+            "groups": len(self.groups),
+            "fused_groups": sum(1 for m in self.groups.values() if len(m) > 1),
+            "duplicated_prims": sum(
+                1
+                for pid in range(len(self.prims))
+                for gid, m in self.groups.items()
+                if pid in m and self.provider[pid] != gid
+            ),
+            "allreduce_buckets": len(self.buckets),
+            "grad_tensors": len(self.grad_prim),
+        }

@@ -1,0 +1,48 @@
+"""Hardware model constants for the cost substrate.
+
+The reproduction targets TPU v5e (the container is CPU-only; these constants
+drive the analytic roofline used by the Profiler / simulator / dry-run
+roofline analysis).  All values are per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s HBM
+    ici_bw: float = 50e9              # bytes/s per ICI link
+    vmem_bytes: float = 128 * 2**20   # VMEM capacity
+    # Per-dispatched-op overhead.  On GPU this is the kernel-launch cost the
+    # paper's op fusion amortises (~5 us); XLA:TPU dispatch is cheaper but
+    # non-zero.  Kept configurable — see DESIGN.md "Hardware adaptation".
+    launch_overhead: float = 1.5e-6
+    # Fixed AllReduce negotiation/synchronisation overhead (the ``D`` of the
+    # paper's linear model T = C x + D, Sec. 4.2).
+    allreduce_latency: float = 10e-6
+    # MXU tile edge — matmul dims are padded up to multiples of this.
+    mxu_dim: int = 128
+    # Fraction of peak achievable by well-tiled kernels (compiler inefficiency).
+    efficiency: float = 0.85
+
+
+TPU_V5E = Hardware()
+
+
+def ring_allreduce_coeffs(hw: Hardware, n_devices: int) -> tuple[float, float]:
+    """Linear AllReduce model T = C*x + D (paper Sec. 4.2, Parallax formula).
+
+    C = 2(N-1)/(N*B) for a full-duplex ring over the slowest link B.
+    """
+    if n_devices <= 1:
+        return 0.0, 0.0
+    c = 2.0 * (n_devices - 1) / (n_devices * hw.ici_bw)
+    return c, hw.allreduce_latency
+
+
+def allreduce_time(nbytes: float, hw: Hardware, n_devices: int) -> float:
+    c, d = ring_allreduce_coeffs(hw, n_devices)
+    return c * nbytes + d

@@ -1,0 +1,227 @@
+"""Profiling substrate: GNN training-sample generation and the CPU-measured
+ground-truth tier.
+
+Tier A (default, TPU-target): fused-op samples are drawn from traced model
+graphs by replaying the paper's sample generator — "randomly select an op and
+fuse it with one of its predecessors, repeat" (Sec. 5.2) — labelled by the
+detailed analytic oracle.
+
+Tier B (CPU-measured): synthetic fused ops are materialised as real jnp
+functions, jit-compiled and *timed on this machine*; used by Fig. 9 / Table 2
+benchmarks so the estimator is validated against genuinely measured times.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costs import group_time_oracle, prim_time
+from .graph import DOT, EW, FusionGraph, LAYOUT, PrimOp, REDUCE
+from .gnn import group_features
+from .hw import Hardware
+
+
+# ----------------------------------------------------------- tier A samples
+def sample_fused_groups(
+    g: FusionGraph,
+    n_samples: int,
+    rng: random.Random,
+    max_members: int = 32,
+    hw: Hardware | None = None,
+):
+    """Yield (feat, adj, mask, oracle_time) samples of random fused groups."""
+    out = []
+    for _ in range(n_samples):
+        trial = g.clone()
+        n_fuse = rng.randint(1, max_members - 1)
+        target = None
+        for _ in range(n_fuse):
+            gids = [x for x in trial.groups if target is None or x == target]
+            ok = False
+            for _attempt in range(6):
+                c = target if target is not None and target in trial.groups \
+                    else rng.choice(list(trial.groups))
+                preds = list(trial.group_preds(c))
+                if not preds:
+                    target = None
+                    continue
+                p = rng.choice(preds)
+                before = set(trial.groups)
+                if trial.fuse_nondup(c, p):
+                    new = (set(trial.groups) - before).pop()
+                    target = new
+                    ok = True
+                    break
+                target = None
+            if not ok:
+                break
+        if target is None or target not in trial.groups:
+            continue
+        if len(trial.groups[target]) < 2:
+            continue
+        t = group_time_oracle(trial, target, hw) if hw else group_time_oracle(trial, target)
+        feat, adj, mask = group_features(trial, target, max_nodes=48)
+        out.append((feat, adj, mask, t))
+    return out
+
+
+# ---------------------------------------------------------- tier B (CPU-run)
+_UNARY = [jnp.tanh, jnp.exp, jax.nn.relu, jax.lax.logistic, jnp.sqrt]
+_UNARY_NAMES = ["tanh", "exp", "max", "logistic", "sqrt"]
+_BINARY = [jnp.add, jnp.multiply, jnp.subtract, jnp.maximum]
+_BINARY_NAMES = ["add", "mul", "sub", "max"]
+
+
+def synth_fused_op(rng: random.Random, max_nodes: int = 20, dim: int = 256):
+    """Build a random executable fused-op DAG.
+
+    Returns (fn, example_inputs, prims, edges) where prims/edges describe the
+    node-level graph for GNN features.
+    """
+    n_ops = rng.randint(2, max_nodes)
+    n_inputs = rng.randint(1, 3)
+    shapes = [(dim, dim)] * n_inputs
+    recipe = []  # (kind, idx_args, name)
+    avail = list(range(n_inputs))  # value slots (inputs first)
+    slot_shape = {i: shapes[i] for i in range(n_inputs)}
+    next_slot = n_inputs
+    for _ in range(n_ops):
+        kind = rng.random()
+        if kind < 0.15 and len(avail) >= 2:
+            a, b = rng.sample(avail, 2)
+            if slot_shape[a][-1] == slot_shape[b][0]:
+                recipe.append(("dot", (a, b), "dot_general"))
+                slot_shape[next_slot] = (slot_shape[a][0], slot_shape[b][-1])
+            else:
+                op = rng.randrange(len(_BINARY))
+                recipe.append(("bin", (a, b, op), _BINARY_NAMES[op]))
+                slot_shape[next_slot] = slot_shape[a]
+        elif kind < 0.5 and len(avail) >= 2:
+            a, b = rng.sample(avail, 2)
+            if slot_shape[a] != slot_shape[b]:
+                a, b = a, a
+            op = rng.randrange(len(_BINARY))
+            recipe.append(("bin", (a, b, op), _BINARY_NAMES[op]))
+            slot_shape[next_slot] = slot_shape[a]
+        else:
+            a = rng.choice(avail)
+            op = rng.randrange(len(_UNARY))
+            recipe.append(("un", (a, op), _UNARY_NAMES[op]))
+            slot_shape[next_slot] = slot_shape[a]
+        avail.append(next_slot)
+        next_slot += 1
+
+    def fn(*inputs):
+        slots = list(inputs)
+        for kind, args, _ in recipe:
+            if kind == "dot":
+                v = slots[args[0]] @ slots[args[1]]
+            elif kind == "bin":
+                v = _BINARY[args[2]](slots[args[0]], slots[args[1]])
+            else:
+                v = _UNARY[args[1]](jnp.abs(slots[args[0]]) + 1e-3)
+            slots.append(v)
+        return slots[-1]
+
+    # node-level graph (inputs are not nodes; edges between ops only)
+    prims, edges = [], []
+    for i, (kind, args, name) in enumerate(recipe):
+        shape = slot_shape[n_inputs + i]
+        nel = float(np.prod(shape))
+        if kind == "dot":
+            flops = 2.0 * shape[0] * shape[1] * slot_shape[args[0]][1]
+            cat = DOT
+        else:
+            flops = nel
+            cat = EW
+        in_b = sum(
+            float(np.prod(slot_shape[a])) * 4
+            for a in args[: 2 if kind != "un" else 1]
+        )
+        prims.append(PrimOp(pid=i, op_type=name, category=cat, flops=flops,
+                            in_bytes=in_b, out_bytes=nel * 4, time=0.0))
+        for a in args[: 2 if kind != "un" else 1]:
+            if a >= n_inputs:
+                edges.append((a - n_inputs, i))
+    example = [jnp.asarray(np.random.default_rng(0).standard_normal(s),
+                           jnp.float32) for s in shapes]
+    return fn, example, prims, edges
+
+
+def time_callable(fn: Callable, args, repeats: int = 5) -> float:
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measured_fused_samples(n_samples: int, seed: int = 0, max_nodes: int = 16,
+                           dim: int = 192):
+    """Tier-B corpus: (feat, adj, mask, measured_seconds) samples."""
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n_samples):
+        fn, example, prims, edges = synth_fused_op(rng, max_nodes, dim)
+        t = time_callable(fn, example)
+        # profiled standalone times for node features: CPU-calibrated roofline
+        hw = CPU_HW
+        prims = [
+            PrimOp(pid=p.pid, op_type=p.op_type, category=p.category,
+                   flops=p.flops, in_bytes=p.in_bytes, out_bytes=p.out_bytes,
+                   time=prim_time(p, hw))
+            for p in prims
+        ]
+        fg = FusionGraph(prims, edges)
+        # single group containing everything
+        gid = next(iter(fg.groups))
+        while len(fg.groups) > 1:
+            gids = list(fg.groups)
+            done = False
+            for c in gids:
+                for p in fg.group_preds(c):
+                    if fg.fuse_nondup(c, p):
+                        done = True
+                        break
+                if done:
+                    break
+            if not done:  # disconnected components: merge artificially
+                break
+        gid = max(fg.groups, key=lambda g_: len(fg.groups[g_]))
+        feat, adj, mask = group_features(fg, gid, max_nodes=48)
+        out.append((feat, adj, mask, t))
+    return out
+
+
+# --------------------------------------------------------- CPU calibration
+def calibrate_cpu_hw(dim: int = 512) -> Hardware:
+    """Fit a Hardware() for *this* CPU from two microbenchmarks, so the
+    simulator can be compared against real measured step times (Table 2)."""
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((dim, dim)),
+                    jnp.float32)
+    t_mm = time_callable(lambda x: x @ x, (a,))
+    flops = 2.0 * dim**3
+    peak = flops / max(t_mm, 1e-9)
+    big = jnp.asarray(np.random.default_rng(1).standard_normal(4_000_000),
+                      jnp.float32)
+    t_cp = time_callable(lambda x: x * 1.0001 + 1.0, (big,))
+    bw = (2 * big.size * 4) / max(t_cp, 1e-9)
+    t_tiny = time_callable(lambda x: x + 1.0, (jnp.ones((8,)),))
+    return Hardware(name="cpu-calibrated", peak_flops=peak, hbm_bw=bw,
+                    ici_bw=bw / 4, vmem_bytes=32 * 2**20,
+                    launch_overhead=max(t_tiny, 1e-6),
+                    allreduce_latency=20e-6, efficiency=1.0)
+
+
+CPU_HW = Hardware(name="cpu-nominal", peak_flops=5e10, hbm_bw=1e10,
+                  ici_bw=2.5e9, vmem_bytes=32 * 2**20, launch_overhead=5e-6,
+                  allreduce_latency=20e-6, efficiency=1.0)

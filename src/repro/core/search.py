@@ -1,0 +1,135 @@
+"""Backtracking search over the joint op/tensor-fusion space (paper Alg. 1).
+
+Faithful reproduction: a priority queue of candidate HLO modules ordered by
+Cost(.); each step dequeues the cheapest candidate and applies each of the
+three optimisation methods ``RandomApply``-style n ~ U[0, beta] times;
+candidates within ``alpha x Cost(H_opt)`` are re-enqueued for backtracking;
+the search stops when the queue empties or H_opt is unchanged for
+``unchanged_limit`` steps (paper: 1000; default reduced for CPU budget —
+see DESIGN.md Sec. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+import time as _time
+from typing import Callable, Sequence
+
+from .graph import FusionGraph
+from .simulator import Simulator
+
+METHOD_NONDUP = "nondup"
+METHOD_DUP = "dup"
+METHOD_TENSOR = "tensor"
+ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: FusionGraph
+    best_cost: float
+    initial_cost: float
+    steps: int
+    simulations: int
+    wall_time: float
+    history: list  # (step, best_cost)
+
+
+def random_apply(g: FusionGraph, method: str, n: int, rng: random.Random) -> bool:
+    """Apply ``method`` up to n times with random operands.  Mutates ``g``;
+    returns True if at least one application changed the graph."""
+    changed = False
+    for _ in range(n):
+        if method == METHOD_TENSOR:
+            if len(g.buckets) < 2:
+                break
+            i = rng.randrange(len(g.buckets) - 1)
+            changed |= g.merge_buckets(i, i + 1)
+            continue
+        gids = list(g.groups)
+        # a handful of attempts to find a valid (consumer, producer) pair
+        for _attempt in range(4):
+            c = rng.choice(gids)
+            preds = list(g.group_preds(c))
+            if not preds:
+                continue
+            p = rng.choice(preds)
+            ok = g.fuse_nondup(c, p) if method == METHOD_NONDUP else g.fuse_dup(c, p)
+            if ok:
+                changed = True
+                break
+    return changed
+
+
+def backtracking_search(
+    g0: FusionGraph,
+    sim: Simulator,
+    *,
+    alpha: float = 1.05,
+    beta: int = 10,
+    unchanged_limit: int = 200,
+    methods: Sequence[str] = ALL_METHODS,
+    seed: int = 0,
+    max_queue: int = 512,
+    max_steps: int | None = None,
+    on_step: Callable | None = None,
+) -> SearchResult:
+    rng = random.Random(seed)
+    tick = itertools.count()
+    cost_cache: dict = {}
+    sims = 0
+
+    def cost(g: FusionGraph) -> float:
+        nonlocal sims
+        key = g.signature()
+        c = cost_cache.get(key)
+        if c is None:
+            c = sim.cost(g)
+            cost_cache[key] = c
+            sims += 1
+        return c
+
+    t0 = _time.perf_counter()
+    c0 = cost(g0)
+    best, best_cost = g0, c0
+    q: list = [(c0, next(tick), g0)]
+    unchanged = 0
+    steps = 0
+    history = [(0, c0)]
+
+    while q and unchanged < unchanged_limit:
+        if max_steps is not None and steps >= max_steps:
+            break
+        c_h, _, h = heapq.heappop(q)
+        steps += 1
+        for s in methods:
+            n = rng.randint(0, beta)
+            if n == 0:
+                unchanged += 1
+                continue
+            h2 = h.clone()
+            if not random_apply(h2, s, n, rng):
+                unchanged += 1
+                continue
+            c2 = cost(h2)  # validity is enforced inside the mutations
+            if c2 < best_cost:
+                best, best_cost = h2, c2
+                unchanged = 0
+                history.append((steps, best_cost))
+            else:
+                unchanged += 1
+            if c2 <= alpha * best_cost and len(q) < max_queue:
+                heapq.heappush(q, (c2, next(tick), h2))
+        if on_step is not None:
+            on_step(steps, best_cost)
+    return SearchResult(
+        best=best,
+        best_cost=best_cost,
+        initial_cost=c0,
+        steps=steps,
+        simulations=sims,
+        wall_time=_time.perf_counter() - t0,
+        history=history,
+    )

@@ -1,0 +1,124 @@
+"""End-to-end HLO execution-time simulator (paper Sec. 4.4).
+
+Replays a :class:`FusionGraph` on one device:
+
+* one serialized **compute stream** — a FIFO ready queue of fused ops; a
+  ready op starts at ``max(device_free, preds done)``;
+* one serialized **communication channel** — AllReduce buckets start when
+  (a) every gradient in the bucket has been produced (its provider group is
+  done) and (b) the channel is clear; communication overlaps compute.
+
+Per-iteration time = max(last compute completion, last AllReduce completion).
+The FO (full-overlap) bound is ``max(total_compute, total_comm)`` — maximal
+overlap ignoring dependencies (paper Sec. 6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from .costs import OracleEstimator, total_comm_time, total_compute_time
+from .graph import FusionGraph
+from .hw import Hardware, TPU_V5E, allreduce_time
+
+
+@dataclasses.dataclass
+class SimResult:
+    iteration_time: float
+    compute_time: float          # sum of fused-op times (busy compute)
+    comm_time: float             # sum of AllReduce times (busy channel)
+    compute_finish: float
+    comm_finish: float
+    overlap_ratio: float         # (compute_time+comm_time)/iteration_time
+    timeline: list | None = None
+
+
+class Simulator:
+    """Cost model Cost(H) driving the backtracking search."""
+
+    def __init__(self, estimator=None, hw: Hardware = TPU_V5E, n_devices: int = 256,
+                 keep_timeline: bool = False):
+        self.estimator = estimator or OracleEstimator(hw)
+        self.hw = hw
+        self.n_devices = n_devices
+        self.keep_timeline = keep_timeline
+
+    def cost(self, g: FusionGraph) -> float:
+        return self.run(g).iteration_time
+
+    def run(self, g: FusionGraph) -> SimResult:
+        succs, preds = g.quotient()
+        indeg = {gid: len(ps) for gid, ps in preds.items()}
+        key = {gid: min(m) for gid, m in g.groups.items()}
+        done_at: dict[int, float] = {}
+        ready = [(key[gid], gid) for gid, k in indeg.items() if k == 0]
+        heapq.heapify(ready)
+        device_free = 0.0
+        timeline = [] if self.keep_timeline else None
+        compute_busy = 0.0
+        # bucket i becomes ready when all provider groups of its grads done
+        bucket_waiting = {
+            i: set(g.bucket_ready_groups(b)) for i, b in enumerate(g.buckets)
+        }
+        bucket_ready_at: dict[int, float] = {
+            i: 0.0 for i, w in bucket_waiting.items() if not w
+        }
+        group_to_buckets: dict[int, list[int]] = {}
+        for i, w in bucket_waiting.items():
+            for gid in w:
+                group_to_buckets.setdefault(gid, []).append(i)
+
+        while ready:
+            _, gid = heapq.heappop(ready)
+            t = self.estimator.group_time(g, gid)
+            start = max(device_free, max((done_at[p] for p in preds[gid]), default=0.0))
+            end = start + t
+            done_at[gid] = end
+            device_free = end
+            compute_busy += t
+            if timeline is not None:
+                timeline.append(("compute", gid, start, end))
+            for i in group_to_buckets.get(gid, ()):
+                bucket_waiting[i].discard(gid)
+                if not bucket_waiting[i]:
+                    bucket_ready_at[i] = end
+            for d in succs[gid]:
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    heapq.heappush(ready, (key[d], d))
+        if len(done_at) != len(g.groups):
+            raise RuntimeError("cyclic fusion graph in simulator")
+
+        # communication channel: buckets transfer in order of readiness
+        # (paper: "in order of production of their respective gradient
+        # tensors"), serialized on one channel, overlapping compute.
+        chan_free = 0.0
+        comm_busy = 0.0
+        comm_finish = 0.0
+        order = sorted(bucket_ready_at.items(), key=lambda kv: (kv[1], kv[0]))
+        for i, ready_t in order:
+            t = allreduce_time(g.bucket_bytes(g.buckets[i]), self.hw, self.n_devices)
+            start = max(chan_free, ready_t)
+            chan_free = start + t
+            comm_busy += t
+            comm_finish = chan_free
+            if timeline is not None:
+                timeline.append(("allreduce", i, start, chan_free))
+
+        compute_finish = device_free
+        it = max(compute_finish, comm_finish)
+        return SimResult(
+            iteration_time=it,
+            compute_time=compute_busy,
+            comm_time=comm_busy,
+            compute_finish=compute_finish,
+            comm_finish=comm_finish,
+            overlap_ratio=(compute_busy + comm_busy) / it if it > 0 else 1.0,
+            timeline=timeline,
+        )
+
+    # ------------------------------------------------------------- FO bound
+    def full_overlap_bound(self, g: FusionGraph) -> float:
+        comp = total_compute_time(g, self.estimator, self.hw)
+        comm = total_comm_time(g, self.hw, self.n_devices)
+        return max(comp, comm)

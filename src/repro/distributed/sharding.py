@@ -1,0 +1,242 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs per arch.
+
+Tensor parallelism shards the *flattened* projection output dims (always
+multiples of 128, so they divide the 16-way ``model`` axis even when the
+head count does not — e.g. PaliGemma's 8 heads x 256 = 2048).  MoE expert
+tensors shard the expert dimension (expert parallelism).  ``fsdp=True``
+additionally shards the largest remaining dim over the data axes (ZeRO-3
+style) — used for the >16 GB/TP-shard architectures (DeepSeek-V2-236B,
+DeepSeek-Coder-33B).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+# leaf-name -> (model-sharded dim index) for 2D weights
+_OUT_SHARDED = {"wq", "wk", "wv", "w_up", "w_gate", "w_uq", "w_uk", "w_uv",
+                "w_x", "w_ri", "w_ii", "w_r", "w_k", "w_v", "w_g", "c_k",
+                "c_r"}
+_IN_SHARDED = {"wo", "w_down", "w_out", "w_o", "c_v"}
+_EXPERT_LEAVES = {"w_up", "w_gate", "w_down"}  # under a "moe" subtree
+_REPLICATED = {"router", "w_dq", "w_dkv", "w_kr", "conv_w", "conv_b", "lam",
+               "w0", "wA", "wB", "bonus", "in_proj", "vision_proj"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+def _divisible(dim: int, n: int) -> bool:
+    return dim % n == 0
+
+
+_Q_LEAVES = {"wq", "bq"}
+_KV_LEAVES = {"wk", "wv", "bk", "bv"}
+_QO_LEAVES = {"wo"}
+
+
+def param_spec(path, leaf, *, model_size: int, dp_axes: tuple,
+               fsdp: bool, q_aligned: bool = True,
+               kv_aligned: bool = True) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    in_moe = "moe" in names and "shared" not in names
+    shape = tuple(leaf.shape)
+    # stacked (scanned-layer) params carry a leading layer dim under
+    # "groups"/"layers": apply the rules to the trailing dims.
+    stacked = ("groups" in names or "layers" in names) and len(shape) >= 2 \
+        and name not in ("embed", "lm_head")
+    lead: tuple = ()
+    if stacked:
+        lead = (None,)
+        shape = shape[1:]
+    spec: list = [None] * len(shape)
+
+    if in_moe and name in _EXPERT_LEAVES and _divisible(shape[0], model_size):
+        if fsdp and dp_axes and _divisible(shape[0], _dp_size_cache[dp_axes]) \
+                and _divisible(shape[-1], model_size):
+            # full expert parallelism: experts over the data axes, per-expert
+            # FFN dim over model -> weights 256/512-way sharded, no ZeRO
+            # gather needed for the (dominant) expert tensors.
+            spec[0] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            spec[-1] = "model"
+            return P(*lead, *spec)
+        spec[0] = "model"          # expert parallelism over the TP axis
+    elif name == "embed" and _divisible(shape[0], model_size):
+        spec[0] = "model"          # vocab-sharded embedding
+    elif name == "lm_head" and _divisible(shape[-1], model_size):
+        spec[-1] = "model"
+    elif name in _REPLICATED or "ln" in name or "norm" in name \
+            or name.startswith("mu") or name.startswith("cmu") \
+            or name.startswith("b") or "scale" in name or "bias" in name:
+        pass
+    elif name in _Q_LEAVES or name in _KV_LEAVES or name in _QO_LEAVES:
+        # Megatron head-alignment rule: never split an attention head
+        # across TP ranks (mid-head splits force degenerate reshards —
+        # and crash XLA:CPU's AllReducePromotion in the dry-run).
+        aligned = q_aligned if name in (_Q_LEAVES | _QO_LEAVES) else kv_aligned
+        if aligned:
+            if len(shape) == 2 and name in _QO_LEAVES and _divisible(
+                    shape[0], model_size):
+                spec[0] = "model"
+            elif len(shape) == 2 and name not in _QO_LEAVES and _divisible(
+                    shape[1], model_size):
+                spec[1] = "model"
+            elif len(shape) == 1 and _divisible(shape[0], model_size):
+                spec[0] = "model"
+        elif len(shape) == 2 and name in (_Q_LEAVES | _QO_LEAVES):
+            # unaligned heads: shard the NON-head dim (row/column parallel
+            # without touching head boundaries) — memory-critical for e.g.
+            # coder-33b's 56-head attention (6.4 GiB of q/o per layer group)
+            if name in _Q_LEAVES and _divisible(shape[0], model_size):
+                spec[0] = "model"
+            elif name in _QO_LEAVES and _divisible(shape[1], model_size):
+                spec[1] = "model"
+    elif len(shape) == 2 and name in _OUT_SHARDED and _divisible(
+            shape[1], model_size):
+        spec[1] = "model"
+    elif len(shape) == 2 and name in _IN_SHARDED and _divisible(
+            shape[0], model_size):
+        spec[0] = "model"
+
+    if fsdp and dp_axes and name not in ("embed", "lm_head"):
+        # shard the largest unsharded dim over the data axes (ZeRO-3).
+        # embed/lm_head stay vocab-sharded only: the vocab-parallel
+        # embedding/CE shard_map pins their specs to P("model", ...).
+        dp_total = _dp_size_cache[dp_axes]
+        free = sorted((i for i, s in enumerate(spec) if s is None),
+                      key=lambda i: -shape[i])
+        for i in free:
+            if shape[i] % dp_total == 0:
+                spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+    return P(*lead, *spec)
+
+
+_dp_size_cache: dict = {}
+
+
+def head_alignment(cfg, mesh) -> dict:
+    """Whether q / kv attention projections may shard over ``model``
+    without splitting a head."""
+    m = mesh.shape.get("model", 1)
+    return {"q_aligned": cfg is None or cfg.n_heads % m == 0,
+            "kv_aligned": cfg is None or cfg.n_kv_heads % m == 0}
+
+
+def param_shardings(params, mesh, *, fsdp: bool = False, cfg=None):
+    """Tree of NamedShardings for a param/opt pytree."""
+    model_size = mesh.shape.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    _dp_size_cache[dp_axes] = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    align = head_alignment(cfg, mesh)
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return jax.sharding.NamedSharding(mesh, P())
+        return jax.sharding.NamedSharding(
+            mesh, param_spec(path, leaf, model_size=model_size,
+                             dp_axes=dp_axes, fsdp=fsdp, **align))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_pspecs(params, mesh, *, fsdp: bool = False):
+    """Same as param_shardings but raw PartitionSpecs (for constraints)."""
+    sh = param_shardings(params, mesh, fsdp=fsdp)
+    return jax.tree.map(lambda s: s.spec, sh,
+                        is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+
+
+def batch_pspec(batch_dim_size: int, mesh, ndim: int) -> P:
+    """Shard the leading batch dim over all data axes that divide it."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_dim_size % total == 0:
+        lead = tuple(axes) if len(axes) > 1 else axes[0]
+        return P(lead, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def batch_shardings(specs: dict, mesh):
+    return {
+        k: jax.sharding.NamedSharding(
+            mesh, batch_pspec(v.shape[0], mesh, len(v.shape)))
+        for k, v in specs.items()
+    }
+
+
+def cache_shardings(caches, mesh, stacked: bool = True):
+    """Decode-cache shardings.
+
+    Stacked layout (scanned-layer models): leaves carry a leading layer dim,
+    so batch is axis 1.  Batch shards over the data axes; KV-head / head /
+    width dims shard over ``model`` when divisible.
+    """
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        spec = [None] * nd
+        b_ax = 1 if stacked else 0
+        if nd > b_ax:
+            spec[b_ax] = batch_pspec(leaf.shape[b_ax], mesh, 1)[0]
+        if name in ("k", "v", "k_scale", "v_scale"):
+            kv_ax = b_ax + 2
+            if nd > kv_ax and _divisible(leaf.shape[kv_ax], model_size):
+                spec[kv_ax] = "model"
+            elif name in ("k", "v") and nd > kv_ax + 1 and _divisible(
+                    leaf.shape[-1], model_size):
+                # few KV heads (GQA kv < TP): shard head_dim instead — the
+                # score contraction psums over `model`, tiny at decode
+                spec[-1] = "model"
+        elif name in ("c_kv", "k_rope") and _divisible(leaf.shape[-1],
+                                                       model_size):
+            spec[-1] = "model"     # MLA latent/rope dims
+        elif name == "wkv":
+            h_ax = b_ax + 1
+            if nd > h_ax and _divisible(leaf.shape[h_ax], model_size):
+                spec[h_ax] = "model"   # rwkv heads
+        elif name in ("h", "conv", "prev") and _divisible(
+                leaf.shape[-1], model_size):
+            spec[-1] = "model"         # rg-lru width / rwkv hidden
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def zero1_shardings(params_like, mesh, pshard):
+    """ZeRO-1 optimizer-moment shardings: take each param's sharding and
+    additionally shard the largest free dim over the data axes."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes \
+        else 1
+
+    def one(leaf, sh):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0 or dp_total == 1:
+            return sh
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        free = sorted((i for i, s in enumerate(spec) if s is None),
+                      key=lambda i: -leaf.shape[i])
+        for i in free:
+            if leaf.shape[i] % dp_total == 0:
+                spec[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+        return jax.sharding.NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, params_like, pshard,
+                        is_leaf=lambda x: hasattr(x, "shape"))

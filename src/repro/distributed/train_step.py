@@ -1,0 +1,302 @@
+"""Distributed training steps.
+
+Two modes:
+
+* ``ddp_tp`` — **the DisCo enactment path**: manual ``shard_map`` over the
+  data axes; tensor parallelism stays GSPMD-auto over ``model``.  Gradient
+  synchronisation is *explicit*: one ``psum`` per AllReduce bucket of the
+  searched :class:`GradSyncStrategy`, with optional
+  ``optimization_barrier`` fences pinning the bucket schedule.  The compiled
+  HLO therefore carries exactly the collective schedule the search chose.
+
+* ``fsdp_tp`` — GSPMD-auto ZeRO-3 for architectures whose replicated
+  weights+optimizer do not fit one TP shard (DeepSeek-V2-236B,
+  DeepSeek-Coder-33B).  Gradient reduce-scatters are inserted by XLA per
+  tensor; DisCo bucket enactment is N/A here (DESIGN.md Sec. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim import adamw, apply_updates, clip_by_global_norm
+from . import sharding as SH
+
+
+# ----------------------------------------------------------------- strategy
+@dataclasses.dataclass
+class GradSyncStrategy:
+    """Tensor-fusion strategy: a partition of parameter leaves into ordered
+    AllReduce buckets (leaf indices in ``jax.tree.leaves`` order)."""
+    buckets: list[list[int]]
+    barriers: bool = False      # fence buckets with optimization_barrier
+
+    @staticmethod
+    def per_tensor(params) -> "GradSyncStrategy":
+        n = len(jax.tree.leaves(params))
+        return GradSyncStrategy([[i] for i in range(n)])
+
+    @staticmethod
+    def single_bucket(params) -> "GradSyncStrategy":
+        n = len(jax.tree.leaves(params))
+        return GradSyncStrategy([list(range(n))])
+
+    @staticmethod
+    def size_capped(params, cap_bytes: int = 25 * 2**20) -> "GradSyncStrategy":
+        """DDP-style: consecutive leaves bucketed up to a byte cap."""
+        leaves = jax.tree.leaves(params)
+        buckets, cur, cur_b = [], [], 0
+        for i, l in enumerate(leaves):
+            b = l.size * l.dtype.itemsize
+            if cur and cur_b + b > cap_bytes:
+                buckets.append(cur)
+                cur, cur_b = [], 0
+            cur.append(i)
+            cur_b += b
+        if cur:
+            buckets.append(cur)
+        return GradSyncStrategy(buckets)
+
+    @staticmethod
+    def from_fusion_graph(g, params) -> "GradSyncStrategy":
+        """Lift the searched FusionGraph's bucket partition onto the real
+        parameter leaves (grad_param indices == leaf indices)."""
+        n = len(jax.tree.leaves(params))
+        seen: set = set()
+        buckets = []
+        for b in g.buckets:
+            bk = [i for i in b if i < n]
+            seen.update(bk)
+            if bk:
+                buckets.append(bk)
+        rest = [i for i in range(n) if i not in seen]
+        buckets.extend([[i] for i in rest])
+        return GradSyncStrategy(buckets)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"buckets": self.buckets, "barriers": self.barriers}, f)
+
+    @staticmethod
+    def load(path: str) -> "GradSyncStrategy":
+        with open(path) as f:
+            d = json.load(f)
+        return GradSyncStrategy(d["buckets"], d.get("barriers", False))
+
+
+def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
+               mesh=None, pspecs=None):
+    """Explicit bucketed gradient AllReduce (mean) — DisCo tensor fusion.
+
+    Each bucket is flattened+concatenated into one fused tensor, psum'd as a
+    *single* collective over the data axes, and split back — exactly the
+    paper's tensor fusion (one AllReduce per fused gradient tensor).
+
+    Fusing must not destroy tensor-parallel sharding, so when ``mesh`` and
+    ``pspecs`` are given the bucketing runs inside a nested ``shard_map``
+    over the ``model`` axis: the fused buffer concatenates the *local TP
+    shards* (Megatron-DDP style), keeping the collective 1/TP-sized and the
+    HLO free of gather/reshard traffic.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+
+    def fuse_and_reduce(leaves_local: list):
+        dp = 1
+        for a in dp_axes:
+            dp *= jax.lax.axis_size(a)
+        out: list = [None] * len(leaves_local)
+        prev_fused = None
+        for bucket in strategy.buckets:
+            flats = [leaves_local[i].reshape(-1) for i in bucket]
+            fused = jnp.concatenate(flats) if len(flats) > 1 else flats[0]
+            if strategy.barriers and prev_fused is not None:
+                fused, _ = jax.lax.optimization_barrier((fused, prev_fused))
+            # reduce in f32: gradient-accuracy standard practice, and works
+            # around an XLA:CPU bf16 all-reduce miscompile in the dry-run.
+            dt = fused.dtype
+            fused = jax.lax.psum(fused.astype(jnp.float32),
+                                 tuple(dp_axes)) / dp
+            fused = fused.astype(dt)
+            prev_fused = fused
+            off = 0
+            for i in bucket:
+                n = leaves_local[i].size
+                out[i] = fused[off:off + n].reshape(leaves_local[i].shape)
+                off += n
+        return tuple(out)
+
+    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+        return jax.tree_util.tree_unflatten(treedef, fuse_and_reduce(leaves))
+
+    specs = tuple(jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P)))
+    assert len(specs) == len(leaves)
+    # nested shard_map picks up the ambient (partial-manual) mesh context
+    synced = jax.shard_map(
+        lambda *ls: fuse_and_reduce(list(ls)),
+        in_specs=specs, out_specs=specs,
+        axis_names={"model"}, check_vma=False,
+    )(*leaves)
+    return jax.tree_util.tree_unflatten(treedef, list(synced))
+
+
+# --------------------------------------------------------------- step build
+def _split_batch(batch: dict, n_micro: int) -> dict:
+    return {k: v.reshape(n_micro, v.shape[0] // n_micro, *v.shape[1:])
+            for k, v in batch.items()}
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    mode: str = "ddp_tp",
+    strategy: Optional[GradSyncStrategy] = None,
+    optimizer=None,
+    grad_accum: int = 1,
+    remat: bool = True,
+    clip_norm: float = 1.0,
+    lr: float = 3e-4,
+    loss_fn: Optional[Callable] = None,
+    layout: str = "tp",
+) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics),
+    jit-compiled with the mesh's shardings.  ``loss_fn(params, cfg, batch,
+    remat=...)`` defaults to the scanned-layer implementation."""
+    opt_init, opt_update = optimizer or adamw(lr, weight_decay=0.01)
+    if layout == "dp":
+        # pure data parallelism: the `model` axis carries batch too (small
+        # models waste ICI on TP activation psums — see EXPERIMENTS.md Perf)
+        dp_axes = tuple(a for a in ("pod", "data", "model")
+                        if a in mesh.shape)
+    else:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if loss_fn is None:
+        from ..models import stacked as ST
+        loss_fn = ST.loss_fn
+
+    # vocab-parallel CE crashes XLA:CPU's AllReducePromotion when the
+    # shard_map is not nested inside a manual region (fsdp/auto mode);
+    # the non-VP chunked CE is used there instead (see DESIGN.md).
+    # In pure-DP layout everything is replicated: no vocab parallelism.
+    vp_ce = mode == "ddp_tp" and layout != "dp"
+    vp = None if layout == "dp" else mesh
+
+    def local_loss(params, batch):
+        return loss_fn(params, cfg, batch, remat=remat, vp_mesh=vp,
+                       vp_ce=vp_ce)
+
+    def grads_of(params, batch):
+        if grad_accum > 1:
+            micro = _split_batch(batch, grad_accum)
+
+            def body(carry, mb):
+                l, g = jax.value_and_grad(local_loss)(params, mb)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(body, zero, micro)
+            scale = 1.0 / grad_accum
+            return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+        return jax.value_and_grad(local_loss)(params, batch)
+
+    def update(params, opt_state, loss, grads):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    if mode == "ddp_tp":
+        strat = strategy  # captured; None -> per-tensor at first call site
+
+        def local_step(params, opt_state, batch):
+            loss, grads = grads_of(params, batch)
+            if layout == "dp":
+                grads = sync_grads(
+                    grads, strat or GradSyncStrategy.per_tensor(params),
+                    dp_axes, mesh=None)
+            else:
+                align = SH.head_alignment(cfg, mesh)
+                pspecs = jax.tree_util.tree_map_with_path(
+                    lambda pth, l: SH.param_spec(
+                        pth, l, model_size=mesh.shape.get("model", 1),
+                        dp_axes=(), fsdp=False, **align),
+                    grads)
+                grads = sync_grads(
+                    grads, strat or GradSyncStrategy.per_tensor(params),
+                    dp_axes, mesh=mesh, pspecs=pspecs)
+            loss = jax.lax.pmean(loss, tuple(dp_axes))
+            return update(params, opt_state, loss, grads)
+
+        def make(batch_keys):
+            bspec = {}
+            for k in batch_keys:
+                lead = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                bspec[k] = P(lead)
+            fn = jax.shard_map(local_step, mesh=mesh,
+                               in_specs=(P(), P(), bspec),
+                               out_specs=(P(), P(), P()),
+                               axis_names=set(dp_axes),
+                               check_vma=False)
+            return fn
+
+        def step(params, opt_state, batch):
+            return make(tuple(sorted(batch)))(params, opt_state, batch)
+
+        return step
+
+    if mode == "fsdp_tp":
+        def full_step(params, opt_state, batch):
+            loss, grads = grads_of(params, batch)
+            return update(params, opt_state, loss, grads)
+
+        return full_step
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def jit_train_step(step_fn, cfg: ModelConfig, mesh, params_like, opt_like,
+                   batch_specs: dict, *, fsdp: bool = False,
+                   layout: str = "tp", zero1: bool = False):
+    """jit with explicit in/out shardings.
+
+    layout="dp": params replicated, batch over ALL mesh axes.
+    zero1=True: optimizer moments additionally sharded over the data axes
+    (largest divisible free dim) — ZeRO-1; XLA slices the update and
+    all-gathers the applied deltas.
+    """
+    from ..optim import OptState
+
+    rep = NamedSharding(mesh, P())
+    if layout == "dp":
+        pshard = jax.tree.map(lambda _: rep, params_like)
+        bshard = {k: NamedSharding(mesh, P(tuple(mesh.axis_names),
+                                           *([None] * (len(v.shape) - 1))))
+                  for k, v in batch_specs.items()}
+    else:
+        pshard = SH.param_shardings(params_like, mesh, fsdp=fsdp, cfg=cfg)
+        bshard = SH.batch_shardings(batch_specs, mesh)
+    moment_shard = pshard
+    if zero1:
+        moment_shard = SH.zero1_shardings(params_like, mesh, pshard)
+    oshard = OptState(mu=moment_shard, nu=moment_shard,
+                      count=NamedSharding(mesh, P()))
+    jf = jax.jit(
+        step_fn,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, {"loss": rep, "grad_norm": rep}),
+        donate_argnums=(0, 1),
+    )
+    return jf

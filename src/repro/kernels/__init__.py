@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel ships three artifacts:
+  <name>.py — ``pl.pallas_call`` with explicit BlockSpec VMEM tiling (TPU
+              target; validated with ``interpret=True`` on CPU),
+  ops.py    — jit'd public wrappers that pick kernel vs reference path,
+  ref.py    — pure-jnp oracles the tests assert against.
+
+Kernels: flash_attention (GQA / causal / sliding-window), rglru (RG-LRU
+chunked recurrence), rwkv6 (WKV-6 chunked recurrence), bucket_pack
+(tensor-fusion gradient packing — the paper's fused-AllReduce staging copy).
+"""

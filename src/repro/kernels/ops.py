@@ -1,0 +1,65 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs in Python via the Pallas interpreter — numerically
+identical to the TPU lowering).  On a real TPU set
+``REPRO_KERNEL_INTERPRET=0`` (or call ``set_interpret(False)``) to compile
+the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rglru as _rg
+from . import rwkv6 as _rk
+from . import bucket_pack as _bp
+from . import ref as _ref
+
+_INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+def set_interpret(flag: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = flag
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None):
+    """GQA flash attention.  q: (B,S,H,hd); k,v: (B,T,KV,hd)."""
+    return _fa.flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                      interpret=_INTERPRET)
+
+
+@jax.jit
+def rglru_scan(x, r_gate, i_gate, lam, c: float = 8.0):
+    """RG-LRU over (B,S,L): gate math in XLA (fuses), recurrence in the
+    kernel."""
+    log_a = -c * jax.nn.softplus(lam)[None, None, :] * r_gate
+    a = jnp.exp(log_a)
+    g = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_gate * x)
+    return _rg.rglru_scan_kernel(a, g, interpret=_INTERPRET)
+
+
+@jax.jit
+def rwkv6_wkv(r, k, v, w, u):
+    """WKV-6.  r,k,v,w: (B,S,H,hd); u: (H,hd)."""
+    return _rk.rwkv6_wkv_kernel(r, k, v, w, u, interpret=_INTERPRET)
+
+
+def bucket_pack(leaves, total: int, out_dtype=jnp.float32):
+    return _bp.bucket_pack_kernel(leaves, total, out_dtype,
+                                  interpret=_INTERPRET)
+
+
+# re-exported oracles (tests assert kernel == ref)
+flash_attention_ref = _ref.flash_attention_ref
+rglru_ref = _ref.rglru_ref
+rwkv6_ref = _ref.rwkv6_ref
+bucket_pack_ref = _ref.bucket_pack_ref

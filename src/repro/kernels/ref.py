@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) — dense softmax attention with GQA
+    head grouping and optional causal/sliding-window mask."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos if causal else jnp.ones((S, T), bool)
+    if window is not None:
+        ok = ok & (kpos > qpos - window)
+    s = jnp.where(ok[None, None, None], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def rglru_ref(x, r_gate, i_gate, lam, c: float = 8.0):
+    """RG-LRU linear recurrence, sequential reference.
+
+    x, r_gate, i_gate: (B,S,L); lam: (L,).
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), a_t = exp(-c softplus(lam) r_t)
+    """
+    log_a = (-c * jax.nn.softplus(lam)[None, None, :]
+             * r_gate.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i_gate.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    a_t = a.transpose(1, 0, 2)
+    g_t = gated.transpose(1, 0, 2)
+    _, hs = jax.lax.scan(step, jnp.zeros_like(g_t[0]), (a_t, g_t))
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u):
+    """WKV-6 recurrence, sequential reference.
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd).
+      out_t = r_t . (S + u kv_t);  S <- diag(w_t) S + kv_t,  kv_t = k_t v_t^T
+    """
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None][..., None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    B, S, H, hd = r.shape
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (r, k, v, w))
+    _, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype)
+
+
+def bucket_pack_ref(leaves: list, sizes: list[int], total: int):
+    """Flatten + concatenate gradient leaves into one fused AllReduce buffer
+    (f32), padding to ``total``."""
+    flat = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    buf = jnp.concatenate(flat)
+    return jnp.pad(buf, (0, total - buf.shape[0]))
+
+
+def bucket_unpack_ref(buf, shapes, dtypes):
+    out = []
+    off = 0
+    for shape, dt in zip(shapes, dtypes):
+        n = int(np.prod(shape))
+        out.append(buf[off:off + n].reshape(shape).astype(dt))
+        off += n
+    return out

@@ -1,0 +1,292 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline terms from the compiled
+artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-3b \
+        --shape train_4k --multi-pod
+
+Outputs one JSON per combination under experiments/dryrun/.
+"""
+import os
+# MUST run before any jax import: device count locks on first init.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config
+from ..distributed import sharding as SH
+from ..distributed.train_step import (GradSyncStrategy, build_train_step,
+                                      jit_train_step)
+from ..models import stacked as ST
+from ..optim import adamw
+from .mesh import make_production_mesh
+from .shapes import (FSDP_ARCHS, GRAD_ACCUM, SHAPES, ZERO1_ARCHS,
+                     applicability, cache_capacity, input_specs)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum collective tensor sizes and estimate per-device ICI traffic.
+
+    Per-device traffic factors (ring algorithms over group size G):
+      all-reduce 2(G-1)/G; all-gather/reduce-scatter/all-to-all (G-1)/G;
+      collective-permute 1.
+    """
+    per_op: dict = {}
+    traffic = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done(" in line:
+            continue
+        op = m.group(2)
+        nbytes = _shape_bytes(m.group(1))
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_OLD_RE.search(line)
+            if gm2:
+                g = len(gm2.group(1).split(","))
+        if g <= 1:
+            factor = 0.0
+        elif op == "all-reduce":
+            factor = 2.0 * (g - 1) / g
+        elif op == "collective-permute":
+            factor = 1.0
+        else:
+            factor = (g - 1) / g
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0.0, "traffic": 0.0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["traffic"] += nbytes * factor
+        traffic += nbytes * factor
+    return {"per_op": per_op, "ici_traffic_bytes": traffic}
+
+
+# ------------------------------------------------------------ step builders
+def build_dryrun_train(cfg, mesh, arch: str):
+    fsdp = arch in FSDP_ARCHS
+    mode = "fsdp_tp" if fsdp else "ddp_tp"
+    dp = int(np.prod([v for k, v in mesh.shape.items() if k != "model"]))
+    local_batch = SHAPES["train_4k"]["batch"] // dp
+    accum = min(GRAD_ACCUM.get(arch, 1), local_batch)
+    params = jax.eval_shape(lambda: ST.init_params(jax.random.PRNGKey(0), cfg))
+    opt_init, _ = adamw(3e-4)
+    # optimizer moments in f32 (realistic memory accounting)
+    opt = jax.eval_shape(lambda: opt_init(
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                     params)))
+    step = build_train_step(cfg, mesh, mode=mode, grad_accum=accum,
+                            remat=True,
+                            strategy=None)
+    jf = jit_train_step(step, cfg, mesh, params, opt,
+                        input_specs(cfg, "train_4k"), fsdp=fsdp,
+                        zero1=arch in ZERO1_ARCHS)
+    return jf, (params, opt, input_specs(cfg, "train_4k"))
+
+
+def build_dryrun_prefill(cfg, mesh, shape: str, fsdp: bool = False):
+    """Prefill runs partial-manual over the data axes (like training): the
+    MoE sort-based dispatch must see *local* tokens — under pure GSPMD its
+    data-dependent scatter replicates the full global token buffer."""
+    specs = input_specs(cfg, shape)
+    S = SHAPES[shape]["seq"]
+    cap = cache_capacity(cfg, S)
+    params = jax.eval_shape(lambda: ST.init_params(jax.random.PRNGKey(0), cfg))
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    lead = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def fn(params, batch):
+        return ST.prefill(params, cfg, batch["tokens"], cap,
+                          prefix_emb=batch.get("prefix_emb"),
+                          enc_frames=batch.get("enc_frames"),
+                          vp_mesh=mesh)
+
+    # out specs: logits (B, V) + stacked caches (batch at axis 1)
+    out_shape = jax.eval_shape(
+        lambda p, b: fn(p, b), params,
+        {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in specs.items()})
+    logits_spec = P(lead, None)
+    cache_specs = jax.tree.map(
+        lambda l: P(None, lead, *([None] * (l.ndim - 2))), out_shape[1])
+    bspec = {k: P(lead) for k in specs}
+    smfn = jax.shard_map(fn, mesh=mesh, in_specs=(P(), bspec),
+                         out_specs=(logits_spec, cache_specs),
+                         axis_names=set(dp_axes), check_vma=False)
+    # NOTE: under the data-manual region, params must not be data-sharded
+    # (they enter with spec P()); big-arch serving shards experts over
+    # `model` only — weights stream from the EP shards.
+    pshard = SH.param_shardings(params, mesh, cfg=cfg)
+    bshard = SH.batch_shardings(specs, mesh)
+    jf = jax.jit(smfn, in_shardings=(pshard, bshard))
+    return jf, (params, specs)
+
+
+def build_dryrun_decode(cfg, mesh, shape: str, fsdp: bool = False):
+    specs = input_specs(cfg, shape)
+    params = jax.eval_shape(lambda: ST.init_params(jax.random.PRNGKey(0), cfg))
+
+    if cfg.encdec is not None:
+        def fn(params, caches, token, pos, memory):
+            return ST.decode_step(params, cfg, caches, token, pos,
+                                  memory=memory, vp_mesh=mesh)
+    else:
+        def fn(params, caches, token, pos):
+            return ST.decode_step(params, cfg, caches, token, pos,
+                                  vp_mesh=mesh)
+
+    pshard = SH.param_shardings(params, mesh, cfg=cfg, fsdp=fsdp)
+    cshard = SH.cache_shardings(specs["caches"], mesh)
+    rep = NamedSharding(mesh, P())
+    tshard = NamedSharding(mesh, SH.batch_pspec(specs["token"].shape[0], mesh, 1))
+    B = specs["token"].shape[0]
+    # NOTE: model-sharding the logits output forces a degenerate reshard
+    # collective that crashes XLA:CPU's AllReducePromotion; batch-only.
+    logits_sh = NamedSharding(mesh, P(SH.batch_pspec(B, mesh, 1)[0], None))
+    in_sh = [pshard, cshard, tshard, rep]
+    args = [params, specs["caches"], specs["token"], specs["pos"]]
+    if cfg.encdec is not None:
+        in_sh.append(NamedSharding(
+            mesh, SH.batch_pspec(specs["memory"].shape[0], mesh, 3)))
+        args.append(specs["memory"])
+    jf = jax.jit(fn, in_shardings=tuple(in_sh),
+                 out_shardings=(logits_sh, cshard),
+                 donate_argnums=(1,))
+    return jf, tuple(args)
+
+
+# -------------------------------------------------------------------- main
+def dryrun_one(arch: str, shape: str, multi_pod: bool,
+               verbose: bool = True) -> dict:
+    cfg0 = get_config(arch)
+    ok, reason, cfg = applicability(cfg0, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "applicable": ok, "reason": reason,
+    }
+    if not ok:
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SHAPES[shape]["kind"]
+    t0 = time.perf_counter()
+    if kind == "train":
+        jf, args = build_dryrun_train(cfg, mesh, arch)
+        lowered = jf.lower(*args)
+    elif kind == "prefill":
+        jf, args = build_dryrun_prefill(cfg, mesh, shape)
+        lowered = jf.lower(*args)
+    else:
+        # serving FSDP (= expert-parallel weight sharding over data axes)
+        # only helps MoE archs; ZeRO-3 gathering hurts dense serving.
+        jf, args = build_dryrun_decode(
+            cfg, mesh, shape,
+            fsdp=arch in FSDP_ARCHS and cfg.moe is not None)
+        lowered = jf.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    coll = parse_collectives(compiled.as_text())
+    result.update({
+        "kind": kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "collectives": coll,
+        "grad_accum": GRAD_ACCUM.get(arch, 1) if kind == "train" else None,
+        "mode": ("fsdp_tp" if arch in FSDP_ARCHS else "ddp_tp")
+                if kind == "train" else "auto",
+    })
+    if verbose:
+        peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 2**30
+        print(f"  {arch} x {shape} x {mesh_name}: compiled OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s, "
+              f"args+temp {peak:.2f} GiB/dev, "
+              f"flops {result['flops']:.3e}, "
+              f"ici {coll['ici_traffic_bytes']:.3e} B)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2x16x16' if mp else 'pod16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    res = dryrun_one(arch, shape, mp)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    failures.append(tag)
+                    res = {"arch": arch, "shape": shape, "error": str(e)}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print(f"FAILURES ({len(failures)}): {failures}")
+        raise SystemExit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi pod:  2x16x16 = 512 chips, axes (pod, data, model).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing
+jax so 512 placeholder host devices exist; smoke tests and benches see the
+default single device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=512 before importing "
+            f"jax); have {len(devices)}")
+    return jax.make_mesh(shape, axes, devices=devices[:n],
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over forced host devices for integration tests."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return jax.make_mesh(shape, axes, devices=devices[:n],
+                         axis_types=(AxisType.Auto,) * len(axes))

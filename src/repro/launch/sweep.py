@@ -1,0 +1,98 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) combo in an isolated
+subprocess (XLA:CPU occasionally CHECK-fails nondeterministically in
+AllReducePromotion — a process abort must not kill the sweep), with retry.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from ..configs import ARCHS
+from .shapes import SHAPES
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out: str,
+            retries: int = 2, timeout: int = 1800) -> dict:
+    tag = f"{arch}__{shape}__{'pod2x16x16' if multi_pod else 'pod16x16'}"
+    path = os.path.join(out, tag + ".json")
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512'\n"
+        "import json, sys\n"
+        "from repro.launch.dryrun import dryrun_one\n"
+        f"r = dryrun_one({arch!r}, {shape!r}, {multi_pod!r})\n"
+        f"json.dump(r, open({path!r}, 'w'), indent=1, default=str)\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    last_err = ""
+    for attempt in range(retries + 1):
+        t0 = time.time()
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, timeout=timeout)
+        if proc.returncode == 0 and os.path.exists(path):
+            res = json.load(open(path))
+            res["attempts"] = attempt + 1
+            json.dump(res, open(path, "w"), indent=1, default=str)
+            return res
+        last_err = (proc.stderr or "")[-2000:]
+        print(f"  retry {attempt + 1} for {tag} (rc={proc.returncode}, "
+              f"{time.time() - t0:.0f}s)", flush=True)
+    res = {"arch": arch, "shape": shape,
+           "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+           "error": last_err}
+    json.dump(res, open(path, "w"), indent=1, default=str)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--meshes", default="both", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.meshes]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    t0 = time.time()
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = (f"{arch}__{shape}__"
+                       f"{'pod2x16x16' if mp else 'pod16x16'}")
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    res = json.load(open(path))
+                    if "error" not in res:
+                        print(f"  skip {tag} (exists)")
+                        continue
+                res = run_one(arch, shape, mp, args.out)
+                if "error" in res:
+                    failures.append(tag)
+                    print(f"FAIL {tag}")
+                elif not res.get("applicable", True):
+                    print(f"  {tag}: SKIP ({res['reason'][:60]})")
+                else:
+                    print(f"  {tag}: OK compile {res.get('compile_s')}s "
+                          f"flops {res.get('flops'):.3e}")
+    print(f"sweep done in {(time.time() - t0) / 60:.1f} min; "
+          f"{len(failures)} failures")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

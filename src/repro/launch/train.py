@@ -1,0 +1,145 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 300 --batch 16 --seq 64 --strategy auto
+
+Pipeline: synthetic data -> (optional) DisCo strategy search on the traced
+step -> DisCo-enacted distributed train step (bucketed psum) -> checkpoints.
+On this CPU container use ``--reduced`` (full configs are dry-run only);
+``--mesh debug`` uses a small forced-host-device mesh, ``--mesh single``
+runs on one device (mesh 1x1).
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:  # before jax import; see dryrun.py
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import restore_checkpoint, save_checkpoint
+from ..configs import get_config
+from ..core import Simulator, backtracking_search, profile_graph, \
+    trace_grad_graph
+from ..data.pipeline import SyntheticLMDataset, materialize_batch
+from ..distributed.train_step import (GradSyncStrategy, build_train_step,
+                                      jit_train_step)
+from ..models import stacked as ST
+from ..optim import adamw, linear_warmup_cosine
+from .mesh import make_debug_mesh
+
+
+def search_strategy(cfg, params, batch, n_devices: int,
+                    unchanged_limit: int = 80, seed: int = 0):
+    """Trace the step, run the DisCo search, lift the bucket partition."""
+    def loss(p, bt):
+        return ST.loss_fn(p, cfg, bt)
+
+    g = profile_graph(trace_grad_graph(loss, params, batch))
+    sim = Simulator(n_devices=n_devices)
+    res = backtracking_search(g, sim, unchanged_limit=unchanged_limit,
+                              seed=seed)
+    strat = GradSyncStrategy.from_fusion_graph(res.best, params)
+    return strat, res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", default="debug", choices=["debug", "single"])
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "per-tensor", "ddp", "single-bucket"],
+                    help="auto = DisCo backtracking search")
+    ap.add_argument("--strategy-file", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_debug_mesh((4, 2) if args.mesh == "debug" else (1, 1))
+    dp = mesh.shape["data"]
+    assert args.batch % dp == 0
+
+    key = jax.random.PRNGKey(args.seed)
+    params = ST.init_params(key, cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.2f}M mesh={dict(mesh.shape)}")
+
+    sched = linear_warmup_cosine(args.lr, warmup=20, total_steps=args.steps)
+    opt_init, opt_update = adamw(sched, weight_decay=0.01)
+    opt = opt_init(jax.tree.map(lambda p: p.astype(jnp.float32), params))
+
+    ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch, seed=args.seed)
+    example = materialize_batch(cfg, args.batch, args.seq, seed=args.seed)
+
+    if args.strategy_file:
+        strat = GradSyncStrategy.load(args.strategy_file)
+        print(f"loaded strategy: {len(strat.buckets)} buckets")
+    elif args.strategy == "auto":
+        t0 = time.time()
+        strat, res = search_strategy(cfg, params, example, n_devices=dp)
+        print(f"DisCo search: {res.initial_cost * 1e6:.1f} -> "
+              f"{res.best_cost * 1e6:.1f} us simulated "
+              f"({res.simulations} sims, {time.time() - t0:.1f}s); "
+              f"{len(strat.buckets)} AllReduce buckets")
+    elif args.strategy == "ddp":
+        strat = GradSyncStrategy.size_capped(params)
+    elif args.strategy == "single-bucket":
+        strat = GradSyncStrategy.single_bucket(params)
+    else:
+        strat = GradSyncStrategy.per_tensor(params)
+
+    step_fn = build_train_step(cfg, mesh, mode="ddp_tp", strategy=strat,
+                               optimizer=(opt_init, opt_update), remat=True)
+    specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in example.items()}
+    jf = jit_train_step(step_fn, cfg, mesh, params, opt, specs)
+
+    start = 0
+    if args.ckpt_dir:
+        try:
+            (params, opt), start = restore_checkpoint(
+                args.ckpt_dir, (params, opt))
+            print(f"resumed from step {start}")
+        except FileNotFoundError:
+            pass
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = dict(example)
+        batch["tokens"] = jnp.asarray(ds.global_step_batch(step) % cfg.vocab)
+        params, opt, metrics = jf(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = (time.time() - t0) / max(step - start + 1, 1)
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"{dt * 1e3:.0f} ms/step")
+        if args.ckpt_dir and step > start and step % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step, (params, opt))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, (params, opt))
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"loss: first10 {first:.4f} -> last10 {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

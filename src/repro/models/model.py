@@ -1,0 +1,341 @@
+"""Unified model: decoder LMs (dense / MLA / MoE / RWKV-6 / RG-LRU hybrid),
+encoder-decoder (Seamless backbone) and VLM prefix decoders (PaliGemma
+backbone) — one functional implementation driven by ``ModelConfig``.
+
+Entry points:
+    init_params(key, cfg)
+    forward(params, cfg, tokens, ...)          full-sequence logits (train)
+    loss_fn(params, cfg, batch)                mean next-token CE (+ MoE aux)
+    init_cache(cfg, batch_size, cache_len)     decode-state pytree
+    prefill(params, cfg, tokens, cache_len)    logits + warm cache
+    decode_step(params, cfg, cache, token, pos) one-token serving step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import layers as L
+from . import recurrent as R
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- params
+def init_layer(key, cfg: ModelConfig, li: int) -> dict:
+    kind = cfg.block_kind(li)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict = {"ln1": L.init_norm(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = L.init_mla(k1, cfg) if cfg.block == "mla" else \
+            L.init_attention(k1, cfg)
+    elif kind == "rec":
+        p["rec"] = R.init_recurrent_block(k1, cfg)
+    elif kind == "rwkv":
+        p["tmix"] = R.init_rwkv_block(k1, cfg)
+        p["ln2"] = L.init_norm(cfg, cfg.d_model)
+        return p
+    p["ln2"] = L.init_norm(cfg, cfg.d_model)
+    if cfg.is_moe_layer(li):
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    if cfg.encdec is not None:
+        p["ln_x"] = L.init_norm(cfg, cfg.d_model)
+        p["xattn"] = L.init_cross_attention(k3, cfg)
+    return p
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    dt = _dtype(cfg)
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "layers": [jax.tree.map(lambda a: a.astype(dt) if a.dtype == jnp.float32
+                                else a, init_layer(keys[1 + i], cfg, i))
+                   for i in range(cfg.n_layers)],
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[-1],
+                                               (cfg.d_model, cfg.vocab))
+                             * 0.02).astype(dt)
+    if cfg.encdec is not None:
+        ek = jax.random.split(keys[-2], cfg.encdec.n_enc_layers + 1)
+        params["encoder"] = {
+            "in_proj": (jax.random.normal(ek[0], (cfg.encdec.frontend_dim,
+                                                  cfg.d_model))
+                        / np.sqrt(cfg.encdec.frontend_dim)).astype(dt),
+            "layers": [jax.tree.map(lambda a: a.astype(dt),
+                                    init_enc_layer(ek[1 + i], cfg))
+                       for i in range(cfg.encdec.n_enc_layers)],
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+    if cfg.vlm_prefix_len:
+        params["vision_proj"] = jnp.eye(cfg.d_model, dtype=dt)  # stub projector
+    return params
+
+
+# ----------------------------------------------------------------- helpers
+def _sinusoid(S: int, D: int, dtype) -> jnp.ndarray:
+    pos = np.arange(S)[:, None]
+    dim = np.arange(0, D, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / D)
+    out = np.zeros((S, D), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out, dtype)
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens]
+    if cfg.tie_embeddings:   # gemma-family scaling
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def _layer_fwd(p, cfg: ModelConfig, li: int, x, positions, *, memory=None,
+               cache=None, pos=None, return_cache=False, cache_len=0,
+               use_kernels=False):
+    """One block.  Returns (x, aux_loss, new_cache)."""
+    kind = cfg.block_kind(li)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = L.norm_fwd(p["ln1"], cfg, x)
+    if kind == "attn":
+        window = cfg.window if cfg.recurrent is not None or cfg.window else None
+        if cfg.block == "mla":
+            r = L.mla_fwd(p["attn"], cfg, h, positions, cache=cache, pos=pos,
+                          return_cache=return_cache, cache_len=cache_len)
+        else:
+            r = L.attention_fwd(p["attn"], cfg, h, positions, cache=cache,
+                                pos=pos, window=window, use_flash=use_kernels,
+                                return_cache=return_cache, cache_len=cache_len)
+        if return_cache or cache is not None:
+            attn_out, new_cache = r
+        else:
+            attn_out = r
+        x = x + attn_out
+    elif kind == "rec":
+        r = R.recurrent_block_fwd(p["rec"], cfg, h, state=cache,
+                                  return_state=return_cache,
+                                  use_kernel=use_kernels)
+        if return_cache or cache is not None:
+            rec_out, new_cache = r
+        else:
+            rec_out = r
+        x = x + rec_out
+    elif kind == "rwkv":
+        tstate = cache["tmix"] if cache is not None else None
+        tm_out, tnew = R.rwkv_time_mix(p["tmix"], cfg, h, state=tstate,
+                                       use_kernel=use_kernels)
+        x = x + tm_out
+        h2 = L.norm_fwd(p["ln2"], cfg, x)
+        cstate = cache["cmix"] if cache is not None else None
+        cm_out, cnew = R.rwkv_channel_mix(p["tmix"], cfg, h2, state=cstate)
+        x = x + cm_out
+        if return_cache or cache is not None:
+            new_cache = {"tmix": tnew, "cmix": cnew}
+        return x, aux, new_cache
+    if memory is not None:
+        hx = L.norm_fwd(p["ln_x"], cfg, x)
+        x = x + L.cross_attention_fwd(p["xattn"], cfg, hx, memory)
+    h2 = L.norm_fwd(p["ln2"], cfg, x)
+    if cfg.is_moe_layer(li):
+        ff, aux = L.moe_fwd(p["moe"], cfg, h2)
+    else:
+        ff = L.mlp_fwd(p["mlp"], cfg, h2)
+    x = x + ff
+    return x, aux, new_cache
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """Encoder over precomputed frontend frame embeddings (B, T, F)."""
+    enc = params["encoder"]
+    x = frames.astype(_dtype(cfg)) @ enc["in_proj"]
+    x = x + _sinusoid(x.shape[1], cfg.d_model, x.dtype)[None]
+    for lp in enc["layers"]:
+        h = L.norm_fwd(lp["ln1"], cfg, x)
+        B, T, D = h.shape
+        hd = cfg.hd
+        q = (h @ lp["attn"]["wq"].astype(h.dtype)).reshape(B, T, cfg.n_heads, hd)
+        k = (h @ lp["attn"]["wk"].astype(h.dtype)).reshape(B, T, cfg.n_kv_heads, hd)
+        v = (h @ lp["attn"]["wv"].astype(h.dtype)).reshape(B, T, cfg.n_kv_heads, hd)
+        a = L.sdpa(q, k, v, None, causal=False).reshape(B, T, -1)
+        x = x + a @ lp["attn"]["wo"].astype(h.dtype)
+        h2 = L.norm_fwd(lp["ln2"], cfg, x)
+        x = x + L.mlp_fwd(lp["mlp"], cfg, h2)
+    return L.norm_fwd(enc["final_norm"], cfg, x)
+
+
+# ------------------------------------------------------------------ forward
+def forward(params, cfg: ModelConfig, tokens, *, prefix_emb=None,
+            enc_frames=None, use_kernels: bool = False, remat: bool = False):
+    """Full-sequence logits.  ``prefix_emb``: (B, P, D) VLM patch embeddings
+    (stub frontend); ``enc_frames``: (B, T, F) audio frame embeddings."""
+    x = _embed(params, cfg, tokens)
+    offset = 0
+    if cfg.vlm_prefix_len and prefix_emb is not None:
+        pre = prefix_emb.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+        offset = prefix_emb.shape[1]
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if cfg.rope_frac == 0.0 and cfg.block != "rwkv" and cfg.recurrent is None:
+        x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+    memory = encode(params, cfg, enc_frames) if enc_frames is not None else None
+
+    total_aux = jnp.zeros((), jnp.float32)
+
+    def block(x, p, li):
+        return _layer_fwd(p, cfg, li, x, positions, memory=memory,
+                          use_kernels=use_kernels)
+
+    for li, p in enumerate(params["layers"]):
+        fn = (lambda xx, pp, li=li: block(xx, pp, li)[:2])
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, aux = fn(x, p)
+        total_aux = total_aux + aux
+    x = L.norm_fwd(params["final_norm"], cfg, x)
+    logits = _unembed(params, cfg, x)
+    if offset:
+        logits = logits[:, offset:]
+    return logits, total_aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, use_kernels: bool = False,
+            remat: bool = False):
+    """Mean next-token cross-entropy (+ MoE aux)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, tokens,
+                          prefix_emb=batch.get("prefix_emb"),
+                          enc_frames=batch.get("enc_frames"),
+                          use_kernels=use_kernels, remat=remat)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + aux
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=None) -> list:
+    """Per-layer decode state with static shapes."""
+    dt = dtype or _dtype(cfg)
+    caches = []
+    for li in range(cfg.n_layers):
+        kind = cfg.block_kind(li)
+        if kind == "attn":
+            if cfg.block == "mla":
+                m = cfg.mla
+                caches.append({
+                    "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dt),
+                    "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim),
+                                        dt),
+                })
+            else:
+                size = min(cache_len, cfg.window) if cfg.window else cache_len
+                if cfg.kv_cache_dtype == "int8":
+                    caches.append({
+                        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd),
+                                       jnp.int8),
+                        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd),
+                                       jnp.int8),
+                        "k_scale": jnp.zeros((batch, size, cfg.n_kv_heads),
+                                             jnp.bfloat16),
+                        "v_scale": jnp.zeros((batch, size, cfg.n_kv_heads),
+                                             jnp.bfloat16),
+                    })
+                else:
+                    caches.append({
+                        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd),
+                                       dt),
+                        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd),
+                                       dt),
+                    })
+        elif kind == "rec":
+            Lw = cfg.recurrent.lru_width
+            caches.append({
+                "h": jnp.zeros((batch, Lw), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.recurrent.conv_width - 1, Lw), dt),
+            })
+        elif kind == "rwkv":
+            caches.append({
+                "tmix": {"wkv": jnp.zeros((batch, cfg.n_heads, cfg.hd, cfg.hd),
+                                          jnp.float32),
+                         "prev": jnp.zeros((batch, cfg.d_model), dt)},
+                "cmix": {"prev": jnp.zeros((batch, cfg.d_model), dt)},
+            })
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos, *, memory=None):
+    """One serving step: token (B,) int32, pos scalar int32 (current write
+    position).  Returns (logits (B, vocab), new_caches)."""
+    x = _embed(params, cfg, token[:, None])
+    if cfg.rope_frac == 0.0 and cfg.block != "rwkv" and cfg.recurrent is None:
+        # sinusoidal position for this step
+        D = cfg.d_model
+        dim = jnp.arange(0, D, 2) / D
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim)
+        pe = jnp.zeros((D,), x.dtype)
+        pe = pe.at[0::2].set(jnp.sin(ang).astype(x.dtype))
+        pe = pe.at[1::2].set(jnp.cos(ang).astype(x.dtype))
+        x = x + pe[None, None]
+    positions = pos[None] if hasattr(pos, "shape") else jnp.array([pos])
+    new_caches = []
+    for li, p in enumerate(params["layers"]):
+        x, _, nc = _layer_fwd(p, cfg, li, x, positions, memory=memory,
+                              cache=caches[li], pos=pos)
+        new_caches.append(nc)
+    x = L.norm_fwd(params["final_norm"], cfg, x)
+    return _unembed(params, cfg, x)[:, 0], new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
+            prefix_emb=None, enc_frames=None, use_kernels: bool = False):
+    """Process a prompt, returning (last-token logits, warm cache)."""
+    x = _embed(params, cfg, tokens)
+    if cfg.vlm_prefix_len and prefix_emb is not None:
+        pre = prefix_emb.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if cfg.rope_frac == 0.0 and cfg.block != "rwkv" and cfg.recurrent is None:
+        x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+    memory = encode(params, cfg, enc_frames) if enc_frames is not None else None
+    caches = []
+    for li, p in enumerate(params["layers"]):
+        x, _, nc = _layer_fwd(p, cfg, li, x, positions, memory=memory,
+                              return_cache=True, cache_len=cache_len,
+                              use_kernels=use_kernels)
+        caches.append(nc)
+    x = L.norm_fwd(params["final_norm"], cfg, x)
+    return _unembed(params, cfg, x[:, -1:])[:, 0], caches

@@ -1,0 +1,228 @@
+"""Recurrent blocks: RG-LRU (Griffin / RecurrentGemma) and RWKV-6 (Finch).
+
+Both expose train-mode (full sequence, associative-scan / chunked recurrence)
+and decode-mode (O(1) state update) forwards.  The Pallas kernels in
+:mod:`repro.kernels` are the TPU fast paths; these jnp implementations are
+the reference/XLA paths used for smoke tests and dry-run lowering.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import _act, _dense, init_mlp, mlp_fwd
+
+
+# =============================================================== RG-LRU block
+def init_recurrent_block(key, cfg: ModelConfig) -> dict:
+    """Griffin recurrent block: in-proj (+gate branch), temporal conv,
+    RG-LRU, out-proj."""
+    r = cfg.recurrent
+    L = r.lru_width
+    keys = jax.random.split(key, 6)
+    return {
+        "w_x": _dense(keys[0], cfg.d_model, L),
+        "w_gate": _dense(keys[1], cfg.d_model, L),
+        "conv_w": jax.random.normal(keys[2], (r.conv_width, L)) * 0.02,
+        "conv_b": jnp.zeros((L,)),
+        # RG-LRU gates: input gate i_t and recurrence gate r_t
+        "w_ri": _dense(keys[3], L, L),
+        "w_ii": _dense(keys[4], L, L),
+        # log-lambda parametrisation: a = sigmoid(lam)^(c * r_t), c = 8
+        "lam": jnp.asarray(
+            np.log(np.expm1(np.linspace(0.9, 0.999, L) ** -0.125 - 0 + 1e-9)) * 0
+            + np.linspace(2.0, 6.0, L), jnp.float32),
+        "w_out": _dense(keys[5], L, cfg.d_model),
+    }
+
+
+_LRU_C = 8.0
+
+
+def _rg_lru_scan(x, r_gate, i_gate, lam):
+    """x, gates: (B, S, L); returns h: (B, S, L) via associative scan.
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(lam) * r_t)   (RG-LRU, arXiv:2402.19427)
+    """
+    log_a = -_LRU_C * jax.nn.softplus(lam)[None, None, :] * r_gate
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_gate * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def recurrent_block_fwd(p: dict, cfg: ModelConfig, x, *,
+                        state: Optional[dict] = None,
+                        return_state: bool = False,
+                        use_kernel: bool = False):
+    """x: (B, S, D).  ``state`` (decode): {"h": (B,L), "conv": (B,W-1,L)}."""
+    r = cfg.recurrent
+    B, S, D = x.shape
+    W = r.conv_width
+    gate = _act(cfg, x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_x"].astype(x.dtype)                       # (B,S,L)
+
+    if state is not None:
+        hist = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+        conv = jnp.einsum("bwl,wl->bl", hist[:, -W:], p["conv_w"].astype(u.dtype))
+        conv = (conv + p["conv_b"].astype(u.dtype))[:, None]
+        new_conv = hist[:, -(W - 1):]
+    else:
+        pad = jnp.zeros((B, W - 1, u.shape[-1]), u.dtype)
+        hist = jnp.concatenate([pad, u], axis=1)
+        frames = jnp.stack([hist[:, i:i + S] for i in range(W)], axis=2)  # B,S,W,L
+        conv = jnp.einsum("bswl,wl->bsl", frames, p["conv_w"].astype(u.dtype))
+        conv = conv + p["conv_b"].astype(u.dtype)
+        new_conv = hist[:, -(W - 1):]
+
+    r_gate = jax.nn.sigmoid(conv @ p["w_ri"].astype(u.dtype))
+    i_gate = jax.nn.sigmoid(conv @ p["w_ii"].astype(u.dtype))
+    if state is not None:
+        log_a = -_LRU_C * jax.nn.softplus(p["lam"])[None, None] * r_gate
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (
+            i_gate * conv)
+        h = a * state["h"].astype(u.dtype)[:, None] + gated   # (B,1,L)
+        new_state = {"h": h[:, 0], "conv": new_conv}
+    elif use_kernel:
+        from ..kernels import ops as kops
+        h = kops.rglru_scan(conv, r_gate, i_gate, p["lam"])
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    else:
+        h = _rg_lru_scan(conv, r_gate, i_gate, p["lam"])
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    out = (h * gate) @ p["w_out"].astype(x.dtype)
+    if return_state or state is not None:
+        return out, new_state
+    return out
+
+
+# ================================================================ RWKV-6 block
+def init_rwkv_block(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    keys = jax.random.split(key, 12)
+    lora = 64
+    return {
+        # time-mix
+        "mu_r": jnp.full((D,), 0.5), "mu_k": jnp.full((D,), 0.5),
+        "mu_v": jnp.full((D,), 0.5), "mu_w": jnp.full((D,), 0.5),
+        "mu_g": jnp.full((D,), 0.5),
+        "w_r": _dense(keys[0], D, H * hd),
+        "w_k": _dense(keys[1], D, H * hd),
+        "w_v": _dense(keys[2], D, H * hd),
+        "w_g": _dense(keys[3], D, H * hd),
+        "w_o": _dense(keys[4], H * hd, D),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((H * hd,), -2.0),
+        "wA": _dense(keys[5], D, lora, scale=0.01),
+        "wB": _dense(keys[6], lora, H * hd, scale=0.01),
+        "bonus": jax.random.normal(keys[7], (H, hd)) * 0.1,   # per-head u
+        "ln_x": {"scale": jnp.ones((H * hd,)), "bias": jnp.zeros((H * hd,))},
+        # channel-mix
+        "cmu_k": jnp.full((D,), 0.5), "cmu_r": jnp.full((D,), 0.5),
+        "c_k": _dense(keys[8], D, cfg.d_ff),
+        "c_v": _dense(keys[9], cfg.d_ff, D),
+        "c_r": _dense(keys[10], D, D),
+    }
+
+
+def _token_shift(x, mu, prev=None):
+    """lerp between current token and previous token (RWKV token shift)."""
+    if prev is None:
+        shifted = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        shifted = jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]],
+                                  axis=1)
+    return x + (shifted - x) * mu.astype(x.dtype)
+
+
+def _wkv6_scan(r, k, v, w, u):
+    """Sequential WKV-6 recurrence (reference path).
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd).  State S_h: (B,H,hd,hd).
+      out_t = (S + u^T . (k_t v_t^T)) r_t ;  S <- diag(w_t) S + k_t v_t^T
+    """
+    B, S, H, hd = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None] [..., None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w))
+    final, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), final  # (B,S,H,hd)
+
+
+def rwkv_time_mix(p: dict, cfg: ModelConfig, x, *, state: Optional[dict] = None,
+                  use_kernel: bool = False):
+    """RWKV-6 time mix.  state: {"wkv": (B,H,hd,hd), "prev": (B,D)}."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    prev = state["prev"] if state is not None else None
+    xr = _token_shift(x, p["mu_r"], prev)
+    xk = _token_shift(x, p["mu_k"], prev)
+    xv = _token_shift(x, p["mu_v"], prev)
+    xw = _token_shift(x, p["mu_w"], prev)
+    xg = _token_shift(x, p["mu_g"], prev)
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"].astype(x.dtype))
+    dd = jnp.tanh(xw @ p["wA"].astype(x.dtype)) @ p["wB"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+                         )).reshape(B, S, H, hd)  # decay in (0,1)
+    u = p["bonus"].astype(jnp.float32)
+
+    if state is not None:
+        rt, kt, vt, wt = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        s_prev = state["wkv"].astype(jnp.float32)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s_prev + u[None][..., None] * kv)
+        new_wkv = wt[..., None] * s_prev + kv
+        out = out[:, None].astype(x.dtype)
+        new_state = {"wkv": new_wkv, "prev": x[:, -1]}
+    else:
+        if use_kernel:
+            from ..kernels import ops as kops
+            out = kops.rwkv6_wkv(r, k, v, w, u)
+            final = None  # kernel path is for training; prefill uses scan path
+        else:
+            out, final = _wkv6_scan(r, k, v, w, u)
+        new_state = {"wkv": final, "prev": x[:, -1]}
+    out = out.reshape(B, -1, H * hd)
+    # group norm over heads (ln_x)
+    of = out.astype(jnp.float32).reshape(B, -1, H, hd)
+    mu = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    of = ((of - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, -1, H * hd)
+    out = (of * p["ln_x"]["scale"] + p["ln_x"]["bias"]).astype(x.dtype)
+    out = (out * g) @ p["w_o"].astype(x.dtype)
+    return out, new_state
+
+
+def rwkv_channel_mix(p: dict, cfg: ModelConfig, x, *,
+                     state: Optional[dict] = None):
+    """RWKV channel mix.  state: {"prev": (B,D)}."""
+    prev = state["prev"] if state is not None else None
+    xk = _token_shift(x, p["cmu_k"], prev)
+    xr = _token_shift(x, p["cmu_r"], prev)
+    k = jnp.square(jax.nn.relu(xk @ p["c_k"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["c_r"].astype(x.dtype))
+    out = r * (k @ p["c_v"].astype(x.dtype))
+    return out, {"prev": x[:, -1]}

@@ -1,0 +1,19 @@
+from .optimizers import (
+    OptState,
+    adamw,
+    sgd,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

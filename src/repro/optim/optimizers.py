@@ -1,0 +1,105 @@
+"""Optimizers as pure pytree transforms (optax-style, but self-contained —
+the container only ships jax/numpy).
+
+Every optimizer is a pair ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params, step)
+    params = apply_updates(params, updates)
+All functions are jit/pjit-safe and shard-transparent (pure tree maps), so
+optimizer state inherits parameter sharding under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: object       # first moment (or momentum)
+    nu: object       # second moment (empty tree for sgd)
+    count: jnp.ndarray
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p), params)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.05):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        warm = base_lr * (step + 1) / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return fn
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(_zeros_like_tree(params), _zeros_like_tree(params),
+                        jnp.zeros((), jnp.int32))
+
+    def update(grads, state: OptState, params):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        mu_hat_s = 1.0 / (1 - b1 ** c)
+        nu_hat_s = 1.0 / (1 - b2 ** c)
+        step_lr = lr_fn(state.count)
+        updates = jax.tree.map(
+            lambda m, v, p: -step_lr * (
+                m * mu_hat_s / (jnp.sqrt(v * nu_hat_s) + eps) + weight_decay * p
+            ),
+            mu, nu, params,
+        )
+        return updates, OptState(mu, nu, count)
+
+    return init, update
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = _zeros_like_tree(params) if momentum else jax.tree.map(
+            lambda p: jnp.zeros((), p.dtype), params)
+        return OptState(mu, jnp.zeros(()), jnp.zeros((), jnp.int32))
+
+    def update(grads, state: OptState, params):
+        count = state.count + 1
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        else:
+            mu = state.mu
+        vel = mu if momentum else grads
+        step_lr = lr_fn(state.count)
+        updates = jax.tree.map(lambda v: -step_lr * v, vel)
+        return updates, OptState(mu, state.nu, count)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,190 @@
+"""Batched serving engine (continuous-batching-lite).
+
+Static-shape slot model, the standard TPU serving pattern: a fixed number
+of decode slots with a shared static-capacity cache; requests are admitted
+into free slots via single-sequence prefill (right-aligned write into the
+slot's cache region), every decode step advances ALL active slots with one
+jit'd call, finished slots are retired and refilled — prefill and decode
+interleave without recompilation (all shapes static).
+
+This is the substrate the ``decode_32k`` / ``long_500k`` dry-run shapes
+lower; on the production mesh the same engine runs with the sharded
+params/cache shardings from :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import stacked as ST
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    done_at: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency(self) -> float:
+        return self.done_at - self.submitted_at
+
+
+class ServeEngine:
+    """max_slots concurrent sequences, cache capacity ``cache_len`` each."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 8,
+                 cache_len: int = 256, sampler: Optional[Callable] = None):
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.sampler = sampler or (lambda logits, rng: jnp.argmax(
+            logits, axis=-1).astype(jnp.int32))
+        # slot state
+        self.caches = ST.init_cache(cfg, max_slots, cache_len)
+        self.slot_req: list[Optional[Request]] = [None] * max_slots
+        self.slot_pos = np.zeros(max_slots, np.int32)      # next write pos
+        self.slot_last = np.zeros(max_slots, np.int32)     # last sampled tok
+        self.slot_budget = np.zeros(max_slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+        self._steps = 0
+
+        # jit'd engine kernels (static shapes)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill_one = jax.jit(self._prefill_impl,
+                                    static_argnames=("plen",))
+
+    # ------------------------------------------------------------- kernels
+    def _decode_impl(self, params, caches, tokens, positions):
+        """Advance all slots one token.  tokens: (S,), positions: (S,)."""
+        # per-slot positions: run decode with per-slot rope positions by
+        # vmapping over the slot dim? decode_step uses a single scalar pos;
+        # we batch with the max-consistent trick: positions differ per slot,
+        # so rope/cache writes must be per-slot — use vmap over slots.
+        def one(p, cache, tok, pos):
+            # vmap strips the slot axis (axis 1 of stacked caches); decode
+            # expects a batch dim there — reinsert a singleton
+            c = jax.tree.map(lambda a: jnp.expand_dims(a, 1), cache)
+            logits, nc = ST.decode_step(p, self.cfg, c, tok[None], pos)
+            nc = jax.tree.map(lambda a: jnp.squeeze(a, 1), nc)
+            return logits[0], nc
+
+        logits, new_caches = jax.vmap(
+            one, in_axes=(None, _slot_axes(caches), 0, 0),
+            out_axes=(0, _slot_axes(caches)))(
+                params, caches, tokens, positions)
+        return logits, new_caches
+
+    def _prefill_impl(self, params, tokens, *, plen):
+        """Single-sequence prefill into a fresh cache region."""
+        logits, cache = ST.prefill(params, self.cfg, tokens[None],
+                                   self.cache_len)
+        return logits[0], cache
+
+    # ------------------------------------------------------------- control
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = len(req.prompt)
+            assert plen < self.cache_len
+            logits, cache = self._prefill_impl(
+                self.params, jnp.asarray(req.prompt, jnp.int32), plen=plen)
+            # install the prefilled single-sequence cache into this slot
+            self.caches = jax.tree.map(
+                lambda full, new: _install_slot(full, new, slot),
+                self.caches, cache)
+            tok = int(np.argmax(np.asarray(logits)))
+            req.first_token_at = time.perf_counter()
+            req.output.append(tok)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = plen
+            self.slot_last[slot] = tok
+            self.slot_budget[slot] = req.max_new_tokens - 1
+
+    def step(self) -> int:
+        """One engine iteration: admit waiting requests, decode all active
+        slots.  Returns the number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.slot_last, jnp.int32)
+        positions = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.caches = self._decode(self.params, self.caches, tokens,
+                                           positions)
+        nxt = np.asarray(self.sampler(logits, None))
+        self._steps += 1
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.slot_pos[slot] += 1
+            self.slot_last[slot] = tok
+            self.slot_budget[slot] -= 1
+            done = (self.slot_budget[slot] <= 0
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self.slot_pos[slot] >= self.cache_len - 1)
+            if done:
+                req.done_at = time.perf_counter()
+                self.completed.append(req)
+                self.slot_req[slot] = None
+        return len(active)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.queue or any(r is not None for r in self.slot_req)):
+            if self.step() == 0 and not self.queue:
+                break
+            max_steps -= 1
+            if max_steps <= 0:
+                raise RuntimeError("serve loop did not converge")
+        return self.completed
+
+    def stats(self) -> dict:
+        lat = [r.latency for r in self.completed]
+        ttft = [r.ttft for r in self.completed]
+        toks = sum(len(r.output) for r in self.completed)
+        return {
+            "completed": len(self.completed),
+            "decode_steps": self._steps,
+            "tokens": toks,
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+        }
+
+
+# ------------------------------------------------------------------ helpers
+def _slot_axes(caches):
+    """vmap in_axes tree: slot/batch axis is 1 for stacked cache leaves."""
+    return jax.tree.map(lambda a: 1, caches)
+
+
+def _install_slot(full, new, slot):
+    """Write a single-sequence cache (batch==1 at axis 1) into slot
+    ``slot`` of the engine cache (batch==max_slots at axis 1)."""
+    return jax.lax.dynamic_update_slice_in_dim(full, new.astype(full.dtype),
+                                               slot, axis=1)

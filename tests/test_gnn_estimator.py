@@ -1,0 +1,49 @@
+"""GNN Fused-Op Estimator (paper Sec. 4.3): trains on oracle-labelled fused
+subgraphs and predicts held-out fused-op times within tolerance."""
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Simulator, profile_graph, trace_grad_graph
+from repro.core.gnn import GNNConfig, GNNEstimator, predict_times, train
+from repro.core.profile_cpu import sample_fused_groups
+
+from test_trace_search import mlp_graph
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    g, _ = mlp_graph(layers=5, d=96, batch=16)
+    rng = random.Random(0)
+    samples = sample_fused_groups(g, 400, rng, max_members=12)
+    assert len(samples) > 150
+    return samples
+
+
+def test_gnn_trains_and_generalizes(corpus):
+    n = len(corpus)
+    tr, te = corpus[: int(n * 0.8)], corpus[int(n * 0.8):]
+    cfg = GNNConfig(n_layers=2, n_heads=2, head_dim=8, mlp_dim=32)
+    params, losses = train(tr, cfg, epochs=40, batch_size=32, lr=3e-3, seed=0)
+    assert losses[-1] < losses[0] * 0.5, "training loss did not drop"
+    pred = predict_times(params, te)
+    true = np.array([s[3] for s in te])
+    rel_err = np.abs(pred - true) / true
+    # paper: >90% of predictions within 14% error on a GPU; our budgeted
+    # CPU-trained estimator must get the bulk within 50%
+    assert np.median(rel_err) < 0.5, f"median rel err {np.median(rel_err)}"
+
+
+def test_gnn_estimator_drives_simulator(corpus):
+    g, _ = mlp_graph(layers=5, d=96, batch=16)
+    cfg = GNNConfig(n_layers=2, n_heads=2, head_dim=8, mlp_dim=32)
+    params, _ = train(corpus, cfg, epochs=25, batch_size=32, seed=0)
+    est = GNNEstimator(params, cfg)
+    sim = Simulator(estimator=est, n_devices=64)
+    r = sim.run(g)
+    assert r.iteration_time > 0
+    # singleton groups use profiled times exactly
+    gid = next(iter(g.groups))
+    assert est.group_time(g, gid) == g.prims[min(g.groups[gid])].time

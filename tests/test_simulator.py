@@ -1,0 +1,115 @@
+"""Simulator (paper Sec. 4.4) unit + property tests."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FusionGraph, OracleEstimator, PrimOp, Simulator,
+                        profile_graph)
+from repro.core.graph import EW
+from repro.core.hw import TPU_V5E, allreduce_time
+from repro.core.search import ALL_METHODS, random_apply
+
+from test_core_graph import chain_graph, diamond_graph
+
+
+def random_dag(seed: int, n: int = 20, n_grads: int = 4) -> FusionGraph:
+    rng = random.Random(seed)
+    prims, edges = [], []
+    grad_pids = set(rng.sample(range(n // 2, n), n_grads))
+    gi = 0
+    for i in range(n):
+        gp = -1
+        gb = 0.0
+        if i in grad_pids:
+            gp, gb = gi, float(rng.randint(64, 1 << 20))
+            gi += 1
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW,
+            flops=float(rng.randint(10, 10**7)),
+            in_bytes=float(rng.randint(8, 1 << 18)),
+            out_bytes=float(rng.randint(8, 1 << 18)),
+            time=0.0, grad_param=gp, grad_bytes=gb,
+            grad_sig="f32" if gp >= 0 else ""))
+        for j in rng.sample(range(i), min(i, rng.randint(0, 3))):
+            edges.append((j, i))
+    return profile_graph(FusionGraph(prims, edges))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_iteration_time_at_least_fo_bound(seed):
+    """iteration >= max(total compute, total comm) for the SAME graph —
+    the FO bound is a true lower bound per strategy."""
+    g = random_dag(seed)
+    sim = Simulator(n_devices=64)
+    r = sim.run(g)
+    assert r.iteration_time >= sim.full_overlap_bound(g) - 1e-12
+    assert r.iteration_time >= r.compute_time - 1e-12
+    assert r.iteration_time >= r.comm_time - 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), muts=st.integers(0, 30))
+def test_sim_valid_after_mutations(seed, muts):
+    g = random_dag(seed)
+    rng = random.Random(seed)
+    for _ in range(muts):
+        random_apply(g, rng.choice(ALL_METHODS), 1, rng)
+    sim = Simulator(n_devices=64)
+    r = sim.run(g)
+    assert r.iteration_time > 0
+    assert r.comm_finish >= 0
+    assert 1.0 <= r.overlap_ratio + 1e-9 <= 2.0 + 1e-9
+
+
+def test_no_grads_means_no_comm():
+    prims = [PrimOp(i, "mul", EW, 100, 8, 8, 1e-6) for i in range(5)]
+    g = profile_graph(FusionGraph(prims, [(i, i + 1) for i in range(4)]))
+    r = Simulator(n_devices=64).run(g)
+    assert r.comm_time == 0.0
+    assert r.iteration_time == pytest.approx(r.compute_time)
+
+
+def test_comm_overlaps_compute():
+    """A gradient produced early overlaps its AllReduce with later compute."""
+    prims = [
+        PrimOp(0, "mul", EW, 1e9, 8, 8, 0.0, grad_param=0,
+               grad_bytes=1 << 20, grad_sig="f32"),
+        PrimOp(1, "mul", EW, 1e9, 8, 8, 0.0),
+        PrimOp(2, "mul", EW, 1e9, 8, 8, 0.0),
+    ]
+    g = profile_graph(FusionGraph(prims, [(0, 1), (1, 2)]))
+    sim = Simulator(n_devices=64)
+    r = sim.run(g)
+    t_ar = allreduce_time(float(1 << 20), TPU_V5E, 64)
+    # AllReduce starts right after op 0, overlapping ops 1-2
+    assert r.iteration_time < r.compute_time + t_ar - 1e-12
+
+
+def test_fused_allreduce_starts_later_but_fewer_latencies():
+    g = chain_graph(n=10, grads=(2, 4, 6, 8))
+    sim = Simulator(n_devices=64)
+    r1 = sim.run(g)
+    g2 = g.clone()
+    while g2.merge_buckets(0, 1):
+        pass
+    r2 = sim.run(g2)
+    assert len(g2.buckets) == 1
+    # 4 latencies -> 1 latency; bandwidth term identical
+    assert r2.comm_time < r1.comm_time
+
+
+def test_timeline_consistency():
+    g = random_dag(7)
+    sim = Simulator(n_devices=64, keep_timeline=True)
+    r = sim.run(g)
+    compute_events = [e for e in r.timeline if e[0] == "compute"]
+    comm_events = [e for e in r.timeline if e[0] == "allreduce"]
+    assert len(compute_events) == g.n_groups
+    assert len(comm_events) == len(g.buckets)
+    # serialized streams: no overlap within a stream
+    for events in (compute_events, comm_events):
+        spans = sorted((e[2], e[3]) for e in events)
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert s2 >= e1 - 1e-12

@@ -1,0 +1,121 @@
+"""Tracer (jaxpr -> FusionGraph) and backtracking-search tests."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Simulator, backtracking_search, evaluate_baselines,
+                        profile_graph, trace_grad_graph)
+from repro.core.baselines import (jax_default, pytorch_ddp,
+                                  threshold_tensor_fusion,
+                                  xla_post_order_op_fusion)
+from repro.core.graph import DOT
+
+
+def mlp_graph(layers=4, d=64, batch=8):
+    params = {f"w{i}": jnp.ones((d, d)) for i in range(layers)}
+
+    def loss(p, bt):
+        x, y = bt
+        h = x
+        for i in range(layers):
+            h = jnp.tanh(h @ p[f"w{i}"])
+        return jnp.mean((h - y) ** 2)
+
+    batch_data = (jnp.ones((batch, d)), jnp.ones((batch, d)))
+    return profile_graph(trace_grad_graph(loss, params, batch_data)), layers
+
+
+def test_trace_marks_all_gradients():
+    g, layers = mlp_graph()
+    assert len(g.grad_prim) == layers
+    assert len(g.buckets) == layers
+    # gradient bytes match parameter sizes
+    for gi, pid in g.grad_prim.items():
+        assert g.prims[pid].grad_bytes == 64 * 64 * 4
+
+
+def test_trace_finds_matmuls():
+    g, layers = mlp_graph()
+    dots = [p for p in g.prims if p.category == DOT]
+    # forward + 2 backward matmuls per layer
+    assert len(dots) >= 2 * layers
+    for p in dots:
+        assert p.flops > 0
+
+
+def test_trace_inlines_pjit():
+    @jax.jit
+    def inner(x, w):
+        return jnp.tanh(x @ w)
+
+    params = {"w": jnp.ones((16, 16))}
+
+    def loss(p, bt):
+        return jnp.sum(inner(bt, p["w"]))
+
+    g = trace_grad_graph(loss, params, jnp.ones((4, 16)))
+    assert not any(p.op_type == "pjit" for p in g.prims)
+
+
+def test_trace_scan_is_opaque_with_scaled_cost():
+    params = {"w": jnp.ones((16, 16))}
+
+    def loss(p, x):
+        def body(c, _):
+            return jnp.tanh(c @ p["w"]), None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(out)
+
+    g = trace_grad_graph(loss, params, jnp.ones((4, 16)))
+    scans = [p for p in g.prims if p.op_type == "scan"]
+    assert scans and all(p.category == "opaque" for p in scans)
+    # body cost multiplied by trip count: >= 8 matmuls worth
+    assert max(p.flops for p in scans) >= 8 * 2 * 4 * 16 * 16
+
+
+def test_search_improves_over_initial_and_baselines():
+    g, _ = mlp_graph(layers=6, d=128, batch=32)
+    sim = Simulator(n_devices=64)
+    base = evaluate_baselines(g, sim)
+    res = backtracking_search(g, sim, alpha=1.05, beta=10,
+                              unchanged_limit=60, seed=0)
+    assert res.best_cost <= res.initial_cost
+    best_baseline = min(v for k, v in base.items() if k != "FO")
+    assert res.best_cost <= best_baseline * 1.001
+    # history is monotonically decreasing
+    costs = [c for _, c in res.history]
+    assert all(a >= b for a, b in zip(costs, costs[1:]))
+
+
+def test_search_respects_method_subset():
+    g, _ = mlp_graph()
+    sim = Simulator(n_devices=64)
+    res = backtracking_search(g, sim, methods=("tensor",),
+                              unchanged_limit=30, seed=1)
+    # tensor-only search must not alter op fusion state
+    assert res.best.n_groups == g.n_groups
+
+
+def test_baselines_are_valid_strategies():
+    g, layers = mlp_graph()
+    sim = Simulator(n_devices=64)
+    for name, fn in (("op", xla_post_order_op_fusion),
+                     ("ar", threshold_tensor_fusion),
+                     ("default", jax_default),
+                     ("ddp", pytorch_ddp)):
+        h = fn(g)
+        r = sim.run(h)
+        assert r.iteration_time > 0, name
+    # op fusion reduces group count
+    assert xla_post_order_op_fusion(g).n_groups < g.n_groups
+    # ddp merges buckets into <=25MB groups (all tiny here -> 1 bucket)
+    assert len(pytorch_ddp(g).buckets) == 1
+
+
+def test_search_deterministic_given_seed():
+    g, _ = mlp_graph()
+    sim = Simulator(n_devices=64)
+    r1 = backtracking_search(g, sim, unchanged_limit=25, seed=42)
+    r2 = backtracking_search(g, sim, unchanged_limit=25, seed=42)
+    assert r1.best_cost == r2.best_cost
+    assert r1.best.signature() == r2.best.signature()
