@@ -28,6 +28,7 @@ import sys, json, dataclasses
 sys.path.insert(0, 'src')
 import jax, jax.numpy as jnp
 from repro.configs import get_config
+from repro.compat import cost_analysis_compat
 from repro.core.analytic import shape_cost
 from repro.core.hw import TPU_V5E
 from repro.distributed import sharding as SH
@@ -60,7 +61,7 @@ def measure_train(cfg, arch, layout='tp', zero1=False, strategy=None,
         'hlo_ici_static': coll['ici_traffic_bytes'],
         'mem_args_gib': ma.argument_size_in_bytes / 2**30,
         'mem_temp_gib': ma.temp_size_in_bytes / 2**30,
-        'hlo_flops': (compiled.cost_analysis() or {}).get('flops'),
+        'hlo_flops': cost_analysis_compat(compiled).get('flops'),
     }
 
 def terms(cb):
@@ -244,12 +245,64 @@ print(json.dumps(m))
     return steps
 
 
+def h4():
+    """Search-engine throughput trajectory: simulations/sec of the
+    backtracking search over the course of a run, incremental fusion-graph
+    engine vs the seed full-replay engine (in-process; see
+    benchmarks/perf_search.py for the engine comparison itself)."""
+    import time
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import arch_graph
+    from perf_search import SeedPathSimulator
+    from repro.core import Simulator, backtracking_search
+
+    steps = []
+    for arch in ("transformer-paper", "deepseek-v2-236b"):
+        for mode in ("incremental", "seed"):
+            sim = (Simulator(n_devices=256, incremental=True)
+                   if mode == "incremental" else SeedPathSimulator())
+            g = arch_graph(arch)
+            traj = []
+            t0 = time.perf_counter()
+            state = {"sims": 0}
+
+            def on_step(step, best, _t0=t0, _traj=traj, _sim=sim, _st=state):
+                if step % 10:
+                    return
+                if isinstance(_sim, Simulator):
+                    sims = sum(_sim.stats.values())
+                else:
+                    sims = len(_sim._memo)
+                wall = time.perf_counter() - _t0
+                _traj.append({"step": step, "wall_s": round(wall, 3),
+                              "sims": sims,
+                              "sims_per_sec": round(sims / wall, 1),
+                              "best_cost": best})
+                _st["sims"] = sims
+
+            res = backtracking_search(g, sim, unchanged_limit=10**9,
+                                      max_steps=150, seed=0, on_step=on_step)
+            steps.append(dict(
+                name=f"search throughput {arch} [{mode}]",
+                hypothesis=("incremental engine sustains >=5x the seed "
+                            "engine's simulations/sec as the search "
+                            "progresses (ISSUE 1 tentpole)"),
+                sims_per_sec=round(res.simulations / res.wall_time, 1),
+                wall_s=round(res.wall_time, 3),
+                simulations=res.simulations,
+                best_cost=res.best_cost,
+                trajectory=traj,
+            ))
+    return steps
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
-    campaigns = {"H1": h1, "H2": h2, "H3": h3}
+    campaigns = {"H1": h1, "H2": h2, "H3": h3, "H4": h4}
     for hid, fn in campaigns.items():
         if args.only and hid != args.only:
             continue
@@ -261,7 +314,7 @@ def main():
             keys = {k: v for k, v in s.items()
                     if k in ("collective_ms", "memory_ms", "compute_ms",
                              "mem_args_gib", "mem_temp_gib", "n_buckets",
-                             "error")}
+                             "sims_per_sec", "wall_s", "error")}
             coll = s.get("collectives", {})
             nar = coll.get("all-reduce", {}).get("count")
             print(f"  {s['name']}: {keys} all-reduce-count={nar}", flush=True)

@@ -1,0 +1,201 @@
+"""Search-engine throughput benchmark: incremental fusion-graph engine vs
+the seed full-replay engine (ISSUE 1 tentpole acceptance).
+
+Measures, per config:
+
+* **simulations/sec** of candidate cost evaluation under
+    - ``seed``: every candidate pays a from-scratch quotient rebuild, an
+      O(V log V) sorted-signature memo key and a full schedule replay —
+      the seed engine's cost profile, emulated via
+      ``FusionGraph._quotient_from_scratch`` + ``signature()`` +
+      ``Simulator(incremental=False)``;
+    - ``incremental``: maintained quotient + rolling ``fast_signature`` +
+      journal-driven delta re-simulation.
+* **search wall time** of a max_steps-bounded ``backtracking_search`` under
+  both engines (identical trajectories — costs are bit-identical), plus an
+  optional ``--workers N`` parallel-evaluation run.
+* the ``deepseek-v2-236b`` scale probe: the incremental engine must finish
+  its bounded search inside the wall-clock budget that the seed engine
+  exhausts.
+
+    PYTHONPATH=src python benchmarks/perf_search.py [--archs a,b]
+        [--cands N] [--steps N] [--workers N] [--seed-budget SECONDS]
+
+Writes ``experiments/perf/search_engine.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import arch_graph  # noqa: E402
+
+from repro.core import Simulator, backtracking_search  # noqa: E402
+from repro.core.search import ALL_METHODS, random_apply  # noqa: E402
+
+OUT = "experiments/perf"
+N_DEVICES = 256
+
+
+class SeedPathSimulator:
+    """Seed-engine cost profile behind the ``Simulator.cost`` interface."""
+
+    def __init__(self, n_devices: int = N_DEVICES):
+        self._sim = Simulator(n_devices=n_devices, incremental=False)
+        self.estimator = self._sim.estimator
+        self._memo: dict = {}
+
+    def cost(self, g) -> float:
+        key = g.signature()  # seed memo key: O(V log V) sort
+        c = self._memo.get(key)
+        if c is None:
+            # seed: `_quotient_cache = None` after every mutation -> full
+            # O(membership x degree) rebuild before each simulation.  The
+            # result is discarded (not written back): replacing the graph's
+            # maintained sets would perturb set iteration order and thereby
+            # the RNG-driven mutation stream of a subsequent search.
+            g._quotient_from_scratch()
+            c = self._sim.cost(g)
+            self._memo[key] = c
+        return c
+
+
+def bench_sim_throughput(arch: str, n_cands: int, seed: int = 0) -> dict:
+    """Evaluate an identical mutation stream under both engines."""
+    out = {}
+    costs_by_mode = {}
+    for mode in ("seed", "incremental"):
+        g0 = arch_graph(arch)
+        sim = (SeedPathSimulator() if mode == "seed"
+               else Simulator(n_devices=N_DEVICES, incremental=True))
+        rng = random.Random(seed)
+        current = g0
+        elapsed = 0.0
+        costs = []
+        t0 = time.perf_counter()
+        sim.cost(current)
+        elapsed += time.perf_counter() - t0
+        for _ in range(n_cands):
+            child = current.clone()
+            for _ in range(rng.randint(1, 2)):
+                random_apply(child, rng.choice(ALL_METHODS), 1, rng)
+            t0 = time.perf_counter()
+            costs.append(sim.cost(child))
+            elapsed += time.perf_counter() - t0
+            if rng.random() < 0.5:
+                current = child
+        costs_by_mode[mode] = costs
+        out[mode] = {
+            "candidates": n_cands,
+            "eval_seconds": round(elapsed, 4),
+            "sims_per_sec": round((n_cands + 1) / elapsed, 1),
+        }
+        if mode == "incremental":
+            out[mode]["sim_stats"] = dict(sim.stats)
+    assert costs_by_mode["seed"] == costs_by_mode["incremental"], \
+        f"{arch}: engine mismatch"
+    out["speedup"] = round(
+        out["incremental"]["sims_per_sec"] / out["seed"]["sims_per_sec"], 2)
+    out["bit_identical"] = True
+    return out
+
+
+class _BudgetExceeded(Exception):
+    pass
+
+
+def bench_search(arch: str, max_steps: int, workers: int | None,
+                 budget_s: float | None = None, seed: int = 0) -> dict:
+    out = {}
+    kw = dict(unchanged_limit=10**9, max_steps=max_steps, seed=seed)
+    modes: list[tuple[str, object, dict]] = [
+        ("incremental", Simulator(n_devices=N_DEVICES, incremental=True), {}),
+        ("seed", SeedPathSimulator(), {}),
+    ]
+    if workers:
+        modes.insert(1, ("incremental_workers",
+                         Simulator(n_devices=N_DEVICES, incremental=True),
+                         {"workers": workers}))
+    for mode, sim, extra in modes:
+        g = arch_graph(arch)
+        t0 = time.perf_counter()
+        timed_out = False
+        res = None
+
+        def on_step(step, best):
+            if budget_s is not None and time.perf_counter() - t0 > budget_s:
+                raise _BudgetExceeded
+
+        try:
+            res = backtracking_search(g, sim, on_step=on_step, **kw, **extra)
+        except _BudgetExceeded:
+            timed_out = True
+        if timed_out:
+            out[mode] = {"timed_out": True,
+                         "budget_seconds": budget_s,
+                         "wall_seconds": round(time.perf_counter() - t0, 2)}
+        else:
+            out[mode] = {
+                "timed_out": False,
+                "wall_seconds": round(res.wall_time, 3),
+                "steps": res.steps,
+                "simulations": res.simulations,
+                "sims_per_sec": round(res.simulations / res.wall_time, 1),
+                "best_cost": res.best_cost,
+                "initial_cost": res.initial_cost,
+            }
+    done = [m for m in out.values() if not m["timed_out"]]
+    if len(done) > 1:
+        assert len({m["best_cost"] for m in done}) == 1, \
+            f"{arch}: engines found different best costs"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="transformer-paper,qwen2-0.5b")
+    ap.add_argument("--cands", type=int, default=300)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--probe-steps", type=int, default=500,
+                    help="max_steps for the deepseek scale probe")
+    ap.add_argument("--seed-budget", type=float, default=30.0,
+                    help="wall-clock budget for the deepseek scale probe")
+    ap.add_argument("--skip-deepseek", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    report: dict = {}
+    for arch in args.archs.split(","):
+        print(f"=== {arch} ===", flush=True)
+        thr = bench_sim_throughput(arch, args.cands)
+        print(f"  sims/sec: seed={thr['seed']['sims_per_sec']} "
+              f"incremental={thr['incremental']['sims_per_sec']} "
+              f"({thr['speedup']}x, bit-identical)", flush=True)
+        srch = bench_search(arch, args.steps, args.workers)
+        for mode, m in srch.items():
+            print(f"  search[{mode}]: {m['wall_seconds']}s "
+                  f"{m.get('simulations')} sims", flush=True)
+        report[arch] = {"throughput": thr, "search": srch}
+    if not args.skip_deepseek:
+        arch = "deepseek-v2-236b"
+        print(f"=== {arch} (scale probe, budget {args.seed_budget}s) ===",
+              flush=True)
+        probe = bench_search(arch, args.probe_steps, None,
+                             budget_s=args.seed_budget)
+        for mode, m in probe.items():
+            status = "TIMED OUT" if m["timed_out"] else \
+                f"{m['wall_seconds']}s {m['simulations']} sims"
+            print(f"  search[{mode}]: {status}", flush=True)
+        report[arch] = {"search": probe}
+    path = os.path.join(OUT, "search_engine.json")
+    json.dump(report, open(path, "w"), indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,6 @@ os.environ.setdefault("XLA_FLAGS",
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.configs import get_config
 from repro.core import Simulator, backtracking_search, profile_graph, \
@@ -29,6 +28,7 @@ from repro.data.pipeline import make_batch_specs, materialize_batch
 from repro.distributed.train_step import (GradSyncStrategy, build_train_step,
                                           jit_train_step)
 from repro.launch.dryrun import parse_collectives
+from repro.launch.mesh import make_mesh_compat
 from repro.models import stacked as ST
 from repro.optim import adamw
 
@@ -62,8 +62,7 @@ def main():
     # ---- Enactment Phase (ENABLE_SEARCH=0) ----
     print("enactment phase ...")
     loaded = GradSyncStrategy.load(path)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     params_s = jax.eval_shape(lambda: ST.init_params(key, cfg))
     init, _ = adamw(1e-3)
     opt_s = jax.eval_shape(lambda: init(jax.tree.map(

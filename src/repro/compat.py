@@ -1,0 +1,121 @@
+"""JAX version-compatibility shims (stock 0.4.x <-> 0.5+ APIs).
+
+The repo targets the modern surface (``jax.shard_map``, ``AxisType``,
+``check_vma``); stock JAX 0.4.x ships the same machinery under the older
+names (``jax.experimental.shard_map.shard_map``, implicit auto axes,
+``check_rep``).  Mesh construction compat lives in
+:func:`repro.launch.mesh.make_mesh_compat`.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def in_named_axis_context() -> bool:
+    """Whether tracing is currently inside a shard_map/pmap region with
+    bound axis names."""
+    try:
+        from jax._src import core as _core
+
+        return bool(getattr(_core.get_axis_env(), "axis_sizes", None))
+    except Exception:
+        return False
+
+
+def needs_partial_manual_workarounds() -> bool:
+    """JAX 0.4.x's bundled XLA aborts (``Check failed: ...IsManualSubgroup()``)
+    when partitioning certain ops inside a partial-manual shard_map region —
+    ``lax.scan`` over auto-sharded operands and ``lax.top_k`` among them.
+    Modern JAX partitions both fine."""
+    if hasattr(jax, "shard_map"):
+        return False
+    return in_named_axis_context()
+
+
+def top_k_compat(x, k: int):
+    """``lax.top_k``, lowered through (stable) sort when the legacy backend
+    cannot partition the top-k custom op in the current context.  Tie order
+    matches ``top_k`` (ascending original index)."""
+    if not needs_partial_manual_workarounds():
+        return jax.lax.top_k(x, k)
+    import jax.numpy as jnp
+
+    idx = jnp.argsort(-x, axis=-1, stable=True)[..., :k]
+    return jnp.take_along_axis(x, idx, axis=-1), idx
+
+
+def scan_compat(body, carry, xs):
+    """``lax.scan(body, carry, xs)``, unrolled to a python loop when the
+    legacy backend cannot partition scan in the current context (see
+    :func:`needs_partial_manual_workarounds`).  Semantics (including the
+    stacked ``ys`` output) match ``lax.scan``."""
+    if not needs_partial_manual_workarounds():
+        return jax.lax.scan(body, carry, xs)
+    import jax.numpy as jnp
+
+    leaves = jax.tree_util.tree_leaves(xs)
+    n = leaves[0].shape[0] if leaves else 0
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree_util.tree_map(lambda a: a[i], xs))
+        ys.append(y)
+    if not ys:
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *vs: jnp.stack(vs), *ys)
+    return carry, stacked
+
+
+def cost_analysis_compat(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns ``[dict]`` on JAX 0.4.x and a
+    flat dict on >=0.5; always return the dict (empty when unavailable)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def supports_nested_partial_manual() -> bool:
+    """Whether a partial-manual shard_map may nest inside another manual
+    region over disjoint axes (vocab-parallel CE / nested bucket fusion
+    inside the ddp_tp region).  The 0.4.x ``auto=`` machinery rejects the
+    nested specs ("Axis ... is also found in manual_axes"), so callers fall
+    back to the flat GSPMD formulations there."""
+    return hasattr(jax, "shard_map")
+
+
+def axis_size_compat(axis_name):
+    """``jax.lax.axis_size`` (modern) / ``psum(1, axis)`` (0.4.x idiom)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map_compat(fn, *, mesh=None, in_specs, out_specs, axis_names=None,
+                     check: bool = False, use_ambient_mesh: bool = False):
+    """``jax.shard_map`` with partial-manual axes across JAX versions.
+
+    ``axis_names`` is the modern *manual*-axes set; on 0.4.x it is
+    translated to the complementary ``auto=`` frozenset.  ``check`` maps to
+    ``check_vma`` (modern) / ``check_rep`` (0.4.x).  With
+    ``use_ambient_mesh`` the modern path picks up the ambient
+    (partial-manual) mesh context; 0.4.x has no ambient mesh, so the
+    explicit ``mesh`` is used there regardless.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(in_specs=in_specs, out_specs=out_specs, check_vma=check)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if use_ambient_mesh or mesh is None:
+            return jax.shard_map(fn, **kw)
+        return jax.shard_map(fn, mesh=mesh, **kw)
+    from jax.experimental.shard_map import shard_map
+
+    if mesh is None:
+        raise ValueError(
+            "JAX 0.4.x shard_map has no ambient-mesh mode; pass mesh=")
+    kw = dict(in_specs=in_specs, out_specs=out_specs, check_rep=check)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return shard_map(fn, mesh, **kw)

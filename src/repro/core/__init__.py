@@ -6,7 +6,6 @@ from .simulator import SimResult, Simulator
 from .search import (ALL_METHODS, METHOD_DUP, METHOD_NONDUP, METHOD_TENSOR,
                      SearchResult, backtracking_search, random_apply)
 from .baselines import BASELINES, evaluate_baselines
-from .trace import graph_from_jaxpr, trace_grad_graph
 
 __all__ = [
     "DOT", "EW", "FusionGraph", "LAYOUT", "OPAQUE", "PrimOp", "REDUCE",
@@ -19,3 +18,16 @@ __all__ = [
     "BASELINES", "evaluate_baselines",
     "graph_from_jaxpr", "trace_grad_graph",
 ]
+
+_TRACE_EXPORTS = ("graph_from_jaxpr", "trace_grad_graph")
+
+
+def __getattr__(name):
+    # .trace is the one submodule that imports jax; loading it lazily keeps
+    # `import repro.core.<x>` jax-free for the search worker-pool processes
+    # (spawned with a bare interpreter) and for pure-IR consumers.
+    if name in _TRACE_EXPORTS:
+        from . import trace
+
+        return getattr(trace, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

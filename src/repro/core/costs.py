@@ -53,16 +53,10 @@ def profile_graph(g: FusionGraph, hw: Hardware = TPU_V5E) -> FusionGraph:
         )
         for p in g.prims
     ]
-    ng = FusionGraph(prims, [])
-    ng.psuccs = g.psuccs
-    ng.ppreds = g.ppreds
-    ng.groups = dict(g.groups)
-    ng.provider = dict(g.provider)
-    ng._next_gid = g._next_gid
-    ng.grad_prim = dict(g.grad_prim)
-    ng.buckets = list(g.buckets)
-    ng._quotient_cache = None
-    return ng
+    return FusionGraph._from_parts(
+        prims, g.psuccs, g.ppreds, g.groups, g.provider, g._next_gid,
+        g.grad_prim, g.buckets,
+    )
 
 
 # ----------------------------------------------------------------- fused ops
@@ -124,10 +118,12 @@ class OracleEstimator:
         self._cache: dict = {}
 
     def group_time(self, g: FusionGraph, gid: int) -> float:
-        key = (g.groups[gid], g.provider.get(min(g.groups[gid])))
-        # provider affects external IO only via output counting; include the
-        # full member set + whether gid is provider of each member.
-        key = (g.groups[gid], tuple(sorted(g.provider[p] == gid for p in g.groups[gid])))
+        # The fused time depends on (a) the member set, (b) which members
+        # this group provides (external-output accounting), and (c) the prim
+        # lineage — the same pids carry different flops/bytes across traced /
+        # re-profiled graphs, so the family token keeps one shared estimator
+        # from returning stale times across graphs.
+        key = (g.family_token(), g.groups[gid], g.provided_set(gid))
         t = self._cache.get(key)
         if t is None:
             t = group_time_oracle(g, gid, self.hw)

@@ -16,10 +16,43 @@ The IR has two levels:
 Mutations (`fuse_nondup`, `fuse_dup`, `merge_buckets`) are the paper's three
 optimisation methods (Sec. 4.5); each validates DAG-ness of the quotient
 graph and op fusibility before committing.
+
+Incremental invariants
+----------------------
+
+The quotient DAG (``_qsuccs``/``_qpreds``) is maintained *incrementally*
+across mutations rather than rebuilt from the prim DAG per candidate:
+
+* An op-fusion mutation merging groups ``c``/``p`` into a fresh gid ``G``
+  patches only the neighbourhoods of ``c``, ``p`` and ``G``: out-edges are
+  renamed ``c/p -> G``, and ``G``'s in-edges are recomputed by scanning the
+  merged members' external predecessors (the only part whose edge set can
+  *shrink* — a prim consumed from another group may become internal to ``G``
+  under duplicate fusion).
+* All updates are copy-on-write: modified adjacency sets are replaced, never
+  mutated in place, so ``clone()`` can share the quotient structures between
+  a graph and its descendants.
+* Acyclicity is enforced with a targeted DFS: a mutation can only create a
+  cycle through the new group ``G``, so we search ``G``'s successors for a
+  path back to ``G`` instead of re-checking the whole DAG.
+* ``_group_key`` (min member pid, the simulator tie-break), ``_provided``
+  (pids each group provides) and the rolling signature hash are updated in
+  O(|merged group|) at commit time.
+
+Every committed mutation appends a record to ``_journal`` (relative to
+``_base_token``, the id of the last simulator state computed for an ancestor
+of this graph).  :class:`repro.core.simulator.Simulator` uses the journal to
+re-simulate only the suffix of the schedule a mutation can affect; see the
+module docstring there for the exact divergence-bound argument.
+
+``signature()`` is the seed's full sorted fingerprint (kept for tests and
+strategy serialization); ``fast_signature()`` is the rolling 64-bit hash
+maintained by the mutations, used for search memoisation.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Iterable
 
 # Op-type categories used for fusibility and the XLA-like baseline heuristic.
@@ -30,6 +63,13 @@ LAYOUT = "layout"    # reshape/transpose/broadcast/convert
 OPAQUE = "opaque"    # scan/while/custom-call/sort/rng — never fused
 
 FUSIBLE = {EW, REDUCE, DOT, LAYOUT}
+
+_MASK64 = (1 << 64) - 1
+
+# Distinguishes graph "families" (trace/profile lineages) so estimator caches
+# keyed on group membership cannot alias across graphs whose prims carry
+# different flops/bytes for the same pids.
+_family_counter = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +90,10 @@ class PrimOp:
     @property
     def fusible(self) -> bool:
         return self.category in FUSIBLE
+
+
+def _group_hash(members: frozenset[int], provided: frozenset[int]) -> int:
+    return hash((tuple(sorted(members)), tuple(sorted(provided)))) & _MASK64
 
 
 class FusionGraph:
@@ -77,7 +121,72 @@ class FusionGraph:
         )
         self.grad_prim: dict[int, int] = {p.grad_param: p.pid for p in grads}
         self.buckets: list[tuple[int, ...]] = [(p.grad_param,) for p in grads]
-        self._quotient_cache: tuple | None = None
+        self._rebuild_derived()
+
+    @classmethod
+    def _from_parts(cls, prims, psuccs, ppreds, groups, provider, next_gid,
+                    grad_prim, buckets, family: int | None = None) -> "FusionGraph":
+        """Assemble a graph from explicit state (see ``profile_graph``);
+        derived structures are rebuilt from scratch.  ``family`` pins the
+        estimator-cache lineage when the prims are shared with an existing
+        graph (search worker pools)."""
+        g = object.__new__(cls)
+        g.prims = prims
+        g.psuccs = psuccs
+        g.ppreds = ppreds
+        g.groups = dict(groups)
+        g.provider = dict(provider)
+        g._next_gid = next_gid
+        g.grad_prim = dict(grad_prim)
+        g.buckets = list(buckets)
+        g._rebuild_derived()
+        if family is not None:
+            g._family = family
+        return g
+
+    # -------------------------------------------------- derived structures
+    def _rebuild_derived(self) -> None:
+        """(Re)compute every derived structure from (prims, edges, groups,
+        provider).  O(total membership x degree) — used only at construction;
+        mutations keep the structures up to date incrementally."""
+        self._qsuccs, self._qpreds = self._quotient_from_scratch()
+        self._group_key: dict[int, int] = {
+            gid: min(m) for gid, m in self.groups.items()
+        }
+        provided: dict[int, set[int]] = {gid: set() for gid in self.groups}
+        for pid, gid in self.provider.items():
+            provided[gid].add(pid)
+        self._provided: dict[int, frozenset[int]] = {
+            gid: frozenset(s) for gid, s in provided.items()
+        }
+        self._group_hash: dict[int, int] = {
+            gid: _group_hash(m, self._provided[gid])
+            for gid, m in self.groups.items()
+        }
+        self._ghash: int = sum(self._group_hash.values()) & _MASK64
+        self._bucket_bytes_cache: dict[tuple[int, ...], float] = {}
+        self._family: int = next(_family_counter)
+        self._journal: list[tuple] = []
+        self._base_token: int | None = None
+
+    def _quotient_from_scratch(
+        self,
+    ) -> tuple[dict[int, set[int]], dict[int, set[int]]]:
+        """The seed's full O(membership x degree) quotient rebuild.  Kept as
+        the reference implementation: construction uses it, and the golden
+        equivalence tests cross-check the incrementally maintained quotient
+        against it after every mutation."""
+        succs: dict[int, set[int]] = {g: set() for g in self.groups}
+        preds: dict[int, set[int]] = {g: set() for g in self.groups}
+        for gid, members in self.groups.items():
+            for pid in members:
+                for q in self.ppreds[pid]:
+                    if q not in members:
+                        src = self.provider[q]
+                        if src != gid:
+                            succs[src].add(gid)
+                            preds[gid].add(src)
+        return succs, preds
 
     # ------------------------------------------------------------------ util
     def clone(self) -> "FusionGraph":
@@ -90,7 +199,18 @@ class FusionGraph:
         g._next_gid = self._next_gid
         g.grad_prim = self.grad_prim
         g.buckets = list(self.buckets)
-        g._quotient_cache = self._quotient_cache
+        # quotient structures are shared: mutations are copy-on-write (they
+        # replace modified adjacency sets, never mutate them in place)
+        g._qsuccs = self._qsuccs
+        g._qpreds = self._qpreds
+        g._group_key = dict(self._group_key)
+        g._provided = dict(self._provided)
+        g._group_hash = dict(self._group_hash)
+        g._ghash = self._ghash
+        g._bucket_bytes_cache = self._bucket_bytes_cache  # content-keyed
+        g._family = self._family
+        g._journal = list(self._journal)
+        g._base_token = self._base_token
         return g
 
     @property
@@ -100,40 +220,56 @@ class FusionGraph:
     def group_key(self, gid: int) -> frozenset[int]:
         return self.groups[gid]
 
+    def family_token(self) -> int:
+        """Identity of this graph's prim/edge lineage (shared by clones,
+        fresh after re-profiling) — estimator cache-key component."""
+        return self._family
+
+    def provided_set(self, gid: int) -> frozenset[int]:
+        """Members of ``gid`` whose outputs this group provides externally."""
+        return self._provided[gid]
+
     # --------------------------------------------------------- quotient DAG
     def quotient(self) -> tuple[dict[int, set[int]], dict[int, set[int]]]:
         """Edges between groups: provider(q) -> G for q consumed by G from
-        outside G.  Returns (succs, preds) keyed by gid."""
-        if self._quotient_cache is not None:
-            return self._quotient_cache
-        succs: dict[int, set[int]] = {g: set() for g in self.groups}
-        preds: dict[int, set[int]] = {g: set() for g in self.groups}
-        for gid, members in self.groups.items():
-            for pid in members:
-                for q in self.ppreds[pid]:
-                    if q not in members:
-                        src = self.provider[q]
-                        if src != gid:
-                            succs[src].add(gid)
-                            preds[gid].add(src)
-        self._quotient_cache = (succs, preds)
-        return self._quotient_cache
+        outside G.  Returns (succs, preds) keyed by gid.  Maintained
+        incrementally by the mutations — this accessor is O(1)."""
+        return self._qsuccs, self._qpreds
 
-    def _acyclic(self, succs: dict[int, set[int]]) -> bool:
-        indeg = {g: 0 for g in succs}
-        for g, ss in succs.items():
-            for d in ss:
-                indeg[d] += 1
-        stack = [g for g, k in indeg.items() if k == 0]
-        seen = 0
-        while stack:
-            g = stack.pop()
-            seen += 1
-            for d in succs[g]:
-                indeg[d] -= 1
-                if indeg[d] == 0:
-                    stack.append(d)
-        return seen == len(succs)
+    @staticmethod
+    def _cycle_through(succs: dict[int, set[int]], preds: dict[int, set[int]],
+                       gs: set[int], gp: set[int], new_gid: int) -> bool:
+        """Targeted cycle probe: after the merge, a cycle must pass through
+        ``new_gid``, i.e. some successor in ``gs`` must reach some
+        predecessor in ``gp``.  Bidirectional search with exhaustion stop —
+        whichever of the downstream cone of ``gs`` / upstream cone of ``gp``
+        is smaller bounds the work (a merge near either end of the DAG
+        probes only the short side)."""
+        seen_f = set(gs)
+        seen_b = set(gp)
+        if seen_f & seen_b:
+            return True
+        stack_f = list(gs)
+        stack_b = list(gp)
+        while stack_f and stack_b:
+            if len(stack_f) <= len(stack_b):
+                x = stack_f.pop()
+                for d in succs[x]:
+                    if d in seen_b:
+                        return True
+                    if d not in seen_f and d != new_gid:
+                        seen_f.add(d)
+                        stack_f.append(d)
+            else:
+                x = stack_b.pop()
+                for d in preds[x]:
+                    if d in seen_f:
+                        return True
+                    if d not in seen_b and d != new_gid:
+                        seen_b.add(d)
+                        stack_b.append(d)
+        # one side exhausted without meeting the other: no gs ~> gp path
+        return False
 
     def topo_groups(self) -> list[int]:
         succs, preds = self.quotient()
@@ -141,7 +277,7 @@ class FusionGraph:
         # deterministic: prefer smaller min-member pid first
         import heapq
 
-        key = {g: min(m) for g, m in self.groups.items()}
+        key = self._group_key
         heap = [(key[g], g) for g, k in indeg.items() if k == 0]
         heapq.heapify(heap)
         order = []
@@ -161,10 +297,76 @@ class FusionGraph:
         return all(self.prims[p].fusible for p in self.groups[gid])
 
     def group_preds(self, gid: int) -> set[int]:
-        return self.quotient()[1][gid]
+        return self._qpreds[gid]
 
     def group_succs(self, gid: int) -> set[int]:
-        return self.quotient()[0][gid]
+        return self._qsuccs[gid]
+
+    def _merged_quotient(
+        self, removed: tuple[int, ...], merged: frozenset[int], new_gid: int
+    ) -> tuple[dict, dict, set[int]] | None:
+        """Copy-on-write quotient after replacing ``removed`` groups with the
+        group ``new_gid`` = ``merged``.  Returns (succs, preds, preds_of_new)
+        or None when the merge would create a cycle."""
+        rm = set(removed)
+        new_succs = dict(self._qsuccs)
+        new_preds = dict(self._qpreds)
+        # out-edges of the removed groups now originate from new_gid
+        gs: set[int] = set()
+        for r in removed:
+            gs |= self._qsuccs[r]
+        gs -= rm
+        for d in gs:
+            new_preds[d] = (new_preds[d] - rm) | {new_gid}
+        # removed groups vanish from their predecessors' succ sets
+        ps: set[int] = set()
+        for r in removed:
+            ps |= self._qpreds[r]
+        ps -= rm
+        for s in ps:
+            new_succs[s] = new_succs[s] - rm
+        # in-edges of the merged group: scan member externals — a prim that
+        # used to be consumed across groups may now be internal to the merge
+        gp: set[int] = set()
+        provider = self.provider
+        ppreds = self.ppreds
+        for pid in merged:
+            for q in ppreds[pid]:
+                if q not in merged:
+                    gp.add(provider[q])
+        # no member of rm can appear in gp: provider[q] is a group containing
+        # q, and q lies outside the merge while rm's members are all inside
+        for s in gp:
+            new_succs[s] = new_succs[s] | {new_gid}
+        new_succs[new_gid] = gs
+        new_preds[new_gid] = gp
+        for r in removed:
+            del new_succs[r], new_preds[r]
+        # a new cycle must pass through new_gid: targeted reachability probe
+        if self._cycle_through(new_succs, new_preds, gs, gp, new_gid):
+            return None
+        return new_succs, new_preds, gp
+
+    def _commit_merge(self, removed: tuple[int, ...], merged: frozenset[int],
+                      new_gid: int, new_succs: dict, new_preds: dict) -> None:
+        self._qsuccs = new_succs
+        self._qpreds = new_preds
+        prov: set[int] = set()
+        for r in removed:
+            prov |= self._provided[r]
+            del self.groups[r], self._provided[r], self._group_key[r]
+            self._ghash = (self._ghash - self._group_hash.pop(r)) & _MASK64
+        self.groups[new_gid] = merged
+        provided = frozenset(prov)
+        self._provided[new_gid] = provided
+        for pid in provided:
+            self.provider[pid] = new_gid
+        self._group_key[new_gid] = min(merged)
+        h = _group_hash(merged, provided)
+        self._group_hash[new_gid] = h
+        self._ghash = (self._ghash + h) & _MASK64
+        self._next_gid = new_gid + 1
+        self._journal.append(("fuse", removed, new_gid, frozenset(new_preds[new_gid])))
 
     def fuse_nondup(self, consumer: int, producer: int) -> bool:
         """Paper method (i): merge producer group into consumer group.
@@ -175,22 +377,15 @@ class FusionGraph:
             return False
         if not (self._fusible_group(consumer) and self._fusible_group(producer)):
             return False
-        if producer not in self.group_preds(consumer):
+        if producer not in self._qpreds[consumer]:
             return False
         merged = self.groups[consumer] | self.groups[producer]
-        trial = self.clone()
-        gid = trial._next_gid
-        trial._next_gid += 1
-        del trial.groups[consumer], trial.groups[producer]
-        trial.groups[gid] = merged
-        for pid, prov in list(trial.provider.items()):
-            if prov in (consumer, producer):
-                trial.provider[pid] = gid
-        trial._quotient_cache = None
-        succs, _ = trial.quotient()
-        if not trial._acyclic(succs):
+        q = self._merged_quotient((consumer, producer), merged, self._next_gid)
+        if q is None:
             return False
-        self._commit(trial)
+        new_succs, new_preds, _ = q
+        self._commit_merge((consumer, producer), merged, self._next_gid,
+                           new_succs, new_preds)
         return True
 
     def fuse_dup(self, consumer: int, producer: int) -> bool:
@@ -203,28 +398,19 @@ class FusionGraph:
             return False
         if not (self._fusible_group(consumer) and self._fusible_group(producer)):
             return False
-        if producer not in self.group_preds(consumer):
+        if producer not in self._qpreds[consumer]:
             return False
-        # Gradient-producing prims must not be duplicated (their output is
-        # consumed by AllReduce; recomputing is fine but provider stays put —
-        # allowed).  Disallow duplicating OPAQUE already covered by fusible.
-        trial = self.clone()
         merged = self.groups[consumer] | self.groups[producer]
         if merged == self.groups[consumer]:
             return False
-        gid = trial._next_gid
-        trial._next_gid += 1
-        del trial.groups[consumer]
-        trial.groups[gid] = merged
-        for pid, prov in list(trial.provider.items()):
-            if prov == consumer:
-                trial.provider[pid] = gid
-        # provider of producer's members unchanged (duplicate).
-        trial._quotient_cache = None
-        succs, _ = trial.quotient()
-        if not trial._acyclic(succs):
+        # Only the consumer group is replaced; the producer group remains and
+        # its members keep their provider (duplicate copies are internal).
+        q = self._merged_quotient((consumer,), merged, self._next_gid)
+        if q is None:
             return False
-        self._commit(trial)
+        new_succs, new_preds, _ = q
+        self._commit_merge((consumer,), merged, self._next_gid,
+                           new_succs, new_preds)
         return True
 
     def merge_buckets(self, i: int, j: int) -> bool:
@@ -243,13 +429,8 @@ class FusionGraph:
             return False
         lo = min(i, j)
         self.buckets[lo : lo + 2] = [a + b]
+        self._journal.append(("bucket", lo))
         return True
-
-    def _commit(self, trial: "FusionGraph") -> None:
-        self.groups = trial.groups
-        self.provider = trial.provider
-        self._next_gid = trial._next_gid
-        self._quotient_cache = trial._quotient_cache
 
     # ------------------------------------------------------------ accessors
     def group_external_io(self, gid: int) -> tuple[float, float]:
@@ -287,17 +468,29 @@ class FusionGraph:
         return sum(self.prims[p].flops for p in self.groups[gid])
 
     def bucket_bytes(self, bucket: tuple[int, ...]) -> float:
-        return sum(self.prims[self.grad_prim[g]].grad_bytes for g in bucket)
+        # content-keyed memo shared across clones (same prim lineage);
+        # summation order matches the seed's left-to-right element sum
+        t = self._bucket_bytes_cache.get(bucket)
+        if t is None:
+            t = sum(self.prims[self.grad_prim[g]].grad_bytes for g in bucket)
+            self._bucket_bytes_cache[bucket] = t
+        return t
 
     def bucket_ready_groups(self, bucket: tuple[int, ...]) -> set[int]:
         return {self.provider[self.grad_prim[g]] for g in bucket}
 
     def signature(self) -> tuple:
-        """Hashable fingerprint of the strategy (for memoisation)."""
+        """Hashable fingerprint of the strategy (for serialization-grade
+        identity; ``fast_signature`` is the O(1) search-memo variant)."""
         gs = tuple(sorted(tuple(sorted(m)) for m in self.groups.values()))
         pv = tuple(sorted(self.provider.items()))
         bk = tuple(self.buckets)
         return (gs, pv, bk)
+
+    def fast_signature(self) -> tuple[int, int]:
+        """Order-independent rolling hash of (groups, provider, buckets),
+        maintained by the mutations — O(#buckets) instead of O(V log V)."""
+        return (self._ghash, hash(tuple(self.buckets)))
 
     # --------------------------------------------------------------- stats
     def describe(self) -> dict:

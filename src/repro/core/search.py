@@ -7,16 +7,29 @@ candidates within ``alpha x Cost(H_opt)`` are re-enqueued for backtracking;
 the search stops when the queue empties or H_opt is unchanged for
 ``unchanged_limit`` steps (paper: 1000; default reduced for CPU budget —
 see DESIGN.md Sec. 6).
+
+Per Alg. 1, "unchanged" is counted **once per dequeued step** that fails to
+improve H_opt — not once per method draw, which would make the effective
+patience depend on ``len(methods)``.
+
+Candidate evaluation can optionally be spread over a process pool
+(``workers=N``): candidates are still *generated* sequentially (the RNG
+stream, and therefore the search trajectory, is identical to the serial
+path), but their simulations run concurrently, each worker holding its own
+estimator cache.  Cost memoisation uses the graph's O(1) rolling
+``fast_signature`` instead of the full O(V log V) sorted fingerprint.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+import pickle
 import random
 import time as _time
 from typing import Callable, Sequence
 
+from .costs import OracleEstimator
 from .graph import FusionGraph
 from .simulator import Simulator
 
@@ -63,6 +76,68 @@ def random_apply(g: FusionGraph, method: str, n: int, rng: random.Random) -> boo
     return changed
 
 
+# --------------------------------------------------------- worker-pool eval
+_WORKER_CTX = None
+
+
+def _pool_init(payload: bytes) -> None:
+    global _WORKER_CTX
+    prims, psuccs, ppreds, grad_prim, family, hw, n_devices = pickle.loads(payload)
+    sim = Simulator(hw=hw, n_devices=n_devices, incremental=False)
+    _WORKER_CTX = (prims, psuccs, ppreds, grad_prim, family, sim)
+
+
+def _pool_cost(state: tuple) -> float:
+    groups, provider, next_gid, buckets = state
+    prims, psuccs, ppreds, grad_prim, family, sim = _WORKER_CTX
+    g = FusionGraph._from_parts(prims, psuccs, ppreds, groups, provider,
+                                next_gid, grad_prim, buckets, family=family)
+    return sim.cost(g)
+
+
+class _CandidatePool:
+    """Process pool evaluating candidate costs; each worker keeps its own
+    estimator cache keyed to the shared prim family."""
+
+    def __init__(self, sim: Simulator, base: FusionGraph, workers: int):
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+
+        payload = pickle.dumps(
+            (base.prims, base.psuccs, base.ppreds, base.grad_prim,
+             base.family_token(), sim.hw, sim.n_devices)
+        )
+        # spawn: workers only import repro.core (pure python, no jax), and
+        # forking a process that already holds jax's thread pools can hang
+        self._ex = ProcessPoolExecutor(
+            max_workers=workers, initializer=_pool_init, initargs=(payload,),
+            mp_context=multiprocessing.get_context("spawn"),
+        )
+
+    def evaluate(self, graphs: Sequence[FusionGraph]) -> list[float]:
+        futs = [
+            self._ex.submit(
+                _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets)
+            )
+            for g in graphs
+        ]
+        return [f.result() for f in futs]
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False, cancel_futures=True)
+
+
+def _make_pool(sim, g0, workers) -> _CandidatePool | None:
+    if not workers or workers < 2:
+        return None
+    if not isinstance(getattr(sim, "estimator", None), OracleEstimator):
+        return None  # GNN/custom estimators are not shippable to workers
+    try:
+        return _CandidatePool(sim, g0, workers)
+    except Exception:
+        return None
+
+
 def backtracking_search(
     g0: FusionGraph,
     sim: Simulator,
@@ -75,15 +150,17 @@ def backtracking_search(
     max_queue: int = 512,
     max_steps: int | None = None,
     on_step: Callable | None = None,
+    workers: int | None = None,
 ) -> SearchResult:
     rng = random.Random(seed)
     tick = itertools.count()
     cost_cache: dict = {}
     sims = 0
+    pool = _make_pool(sim, g0, workers)
 
     def cost(g: FusionGraph) -> float:
         nonlocal sims
-        key = g.signature()
+        key = g.fast_signature()
         c = cost_cache.get(key)
         if c is None:
             c = sim.cost(g)
@@ -99,31 +176,57 @@ def backtracking_search(
     steps = 0
     history = [(0, c0)]
 
-    while q and unchanged < unchanged_limit:
-        if max_steps is not None and steps >= max_steps:
-            break
-        c_h, _, h = heapq.heappop(q)
-        steps += 1
-        for s in methods:
-            n = rng.randint(0, beta)
-            if n == 0:
+    try:
+        while q and unchanged < unchanged_limit:
+            if max_steps is not None and steps >= max_steps:
+                break
+            c_h, _, h = heapq.heappop(q)
+            steps += 1
+            # generate all of this step's candidates first — the RNG stream
+            # (and thus the trajectory) is independent of how they are costed
+            cands: list[FusionGraph] = []
+            for s in methods:
+                n = rng.randint(0, beta)
+                if n == 0:
+                    continue
+                h2 = h.clone()
+                if random_apply(h2, s, n, rng):
+                    cands.append(h2)
+            if pool is not None and len(cands) > 1:
+                fresh = {}
+                for h2 in cands:
+                    kk = h2.fast_signature()
+                    if kk not in cost_cache and kk not in fresh:
+                        fresh[kk] = h2
+                if fresh:
+                    try:
+                        costs = pool.evaluate(list(fresh.values()))
+                    except Exception:
+                        pool.close()
+                        pool = None
+                    else:
+                        for kk, c2 in zip(fresh, costs):
+                            cost_cache[kk] = c2
+                            sims += 1
+            improved = False
+            for h2 in cands:
+                c2 = cost(h2)  # validity is enforced inside the mutations
+                if c2 < best_cost:
+                    best, best_cost = h2, c2
+                    improved = True
+                    history.append((steps, best_cost))
+                if c2 <= alpha * best_cost and len(q) < max_queue:
+                    heapq.heappush(q, (c2, next(tick), h2))
+            # Alg. 1: H_opt "unchanged" is per dequeued step, not per method
+            if not improved:
                 unchanged += 1
-                continue
-            h2 = h.clone()
-            if not random_apply(h2, s, n, rng):
-                unchanged += 1
-                continue
-            c2 = cost(h2)  # validity is enforced inside the mutations
-            if c2 < best_cost:
-                best, best_cost = h2, c2
-                unchanged = 0
-                history.append((steps, best_cost))
             else:
-                unchanged += 1
-            if c2 <= alpha * best_cost and len(q) < max_queue:
-                heapq.heappush(q, (c2, next(tick), h2))
-        if on_step is not None:
-            on_step(steps, best_cost)
+                unchanged = 0
+            if on_step is not None:
+                on_step(steps, best_cost)
+    finally:
+        if pool is not None:
+            pool.close()
     return SearchResult(
         best=best,
         best_cost=best_cost,

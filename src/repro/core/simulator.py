@@ -11,15 +11,52 @@ Replays a :class:`FusionGraph` on one device:
 Per-iteration time = max(last compute completion, last AllReduce completion).
 The FO (full-overlap) bound is ``max(total_compute, total_comm)`` — maximal
 overlap ignoring dependencies (paper Sec. 6.2).
+
+Incremental (delta) cost evaluation
+-----------------------------------
+
+``Simulator`` memoises the full schedule of every graph it replays (pop
+order, per-group completion times, running busy time) in an LRU keyed by a
+state token stamped onto the graph.  A mutated clone carries a *journal* of
+mutations relative to its ancestor's token (see :mod:`repro.core.graph`),
+and ``run()`` re-simulates only the suffix of the schedule the journal can
+affect:
+
+* The compute stream is serialized and the pop order is independent of op
+  times, so the schedule prefix up to the *divergence bound* ``k`` is reused
+  verbatim.  ``k`` is the earliest position at which any group removed by
+  the journal was popped, or at which a journal-created group could first
+  have been popped (one past the max position of its quotient
+  predecessors) — before ``k`` the old and new ready heaps pop identically.
+* From ``k`` the replay continues with the maintained quotient: remaining
+  in-degrees are counted against the already-popped prefix, completion
+  times accumulate from the cached prefix sums, and AllReduce bucket
+  readiness is re-derived as the max completion over each bucket's provider
+  groups.  Floating-point accumulation order matches the full replay, so
+  delta results are **bit-identical** to a from-scratch run.
+* Tensor-fusion (bucket) mutations never perturb the compute stream: only
+  the O(B log B) communication pass is recomputed.
+
+The delta path **falls back to full replay** whenever it would not be
+exact: no cached ancestor state (evicted or never simulated), a journal
+longer than ``max_journal``, a timeline request, or any inconsistency
+detected while replaying (missing groups, cyclic quotient).  ``Simulator.stats``
+counts full/delta/fallback evaluations.  Construct with
+``incremental=False`` for the seed full-replay-only behaviour (the golden
+equivalence tests run both paths and assert identical results).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
+from collections import OrderedDict
 
 from .costs import OracleEstimator, total_comm_time, total_compute_time
 from .graph import FusionGraph
 from .hw import Hardware, TPU_V5E, allreduce_time
+
+_token_counter = itertools.count(1)
 
 
 @dataclasses.dataclass
@@ -33,29 +70,82 @@ class SimResult:
     timeline: list | None = None
 
 
+@dataclasses.dataclass
+class _SimState:
+    """Cached schedule of one full/delta replay (delta-resume substrate)."""
+    order: list            # gids in pop order
+    done_at: dict          # gid -> completion time
+    busy_after: list       # cumulative compute-busy after each pop
+    times: dict            # gid -> fused-op time (gids are never reused
+    #                        across a state's descendants, so these stay
+    #                        valid for every journal that resumes from it)
+    result: SimResult
+    _pos: dict | None = None
+
+    @property
+    def pos(self) -> dict:
+        # built lazily: about half of all states are never resumed from
+        if self._pos is None:
+            self._pos = {gid: i for i, gid in enumerate(self.order)}
+        return self._pos
+
+
 class Simulator:
     """Cost model Cost(H) driving the backtracking search."""
 
     def __init__(self, estimator=None, hw: Hardware = TPU_V5E, n_devices: int = 256,
-                 keep_timeline: bool = False):
+                 keep_timeline: bool = False, incremental: bool = True,
+                 state_cache_size: int = 64, max_journal: int = 24):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
         self.n_devices = n_devices
         self.keep_timeline = keep_timeline
+        self.incremental = incremental
+        self.max_journal = max_journal
+        self._states: OrderedDict[int, _SimState] = OrderedDict()
+        self._state_cache_size = state_cache_size
+        self.stats = {"full": 0, "delta": 0, "cached": 0, "fallback": 0}
 
     def cost(self, g: FusionGraph) -> float:
         return self.run(g).iteration_time
 
     def run(self, g: FusionGraph) -> SimResult:
+        if not self.incremental or self.keep_timeline:
+            return self._run_full(g, record=False).result
+        base = None
+        if g._base_token is not None:
+            base = self._states.get(g._base_token)
+            if base is not None:
+                self._states.move_to_end(g._base_token)
+        if base is not None and not g._journal:
+            self.stats["cached"] += 1
+            return base.result
+        state = None
+        if base is not None and len(g._journal) <= self.max_journal:
+            state = self._run_delta(g, base)
+            if state is None:
+                self.stats["fallback"] += 1
+        if state is None:
+            state = self._run_full(g, record=True)
+            self.stats["full"] += 1
+        else:
+            self.stats["delta"] += 1
+        self._remember(g, state)
+        return state.result
+
+    # ------------------------------------------------------------ full path
+    def _run_full(self, g: FusionGraph, record: bool) -> _SimState:
         succs, preds = g.quotient()
         indeg = {gid: len(ps) for gid, ps in preds.items()}
-        key = {gid: min(m) for gid, m in g.groups.items()}
+        key = g._group_key
         done_at: dict[int, float] = {}
         ready = [(key[gid], gid) for gid, k in indeg.items() if k == 0]
         heapq.heapify(ready)
         device_free = 0.0
         timeline = [] if self.keep_timeline else None
         compute_busy = 0.0
+        order: list[int] = []
+        busy_after: list[float] = []
         # bucket i becomes ready when all provider groups of its grads done
         bucket_waiting = {
             i: set(g.bucket_ready_groups(b)) for i, b in enumerate(g.buckets)
@@ -68,14 +158,22 @@ class Simulator:
             for gid in w:
                 group_to_buckets.setdefault(gid, []).append(i)
 
+        times: dict[int, float] = {}
         while ready:
             _, gid = heapq.heappop(ready)
             t = self.estimator.group_time(g, gid)
-            start = max(device_free, max((done_at[p] for p in preds[gid]), default=0.0))
+            # the compute stream is serialized and a group only becomes
+            # ready once its preds have finished, so start == device_free
+            # (== max(device_free, preds' done_at) of the seed formulation)
+            start = device_free
             end = start + t
             done_at[gid] = end
             device_free = end
             compute_busy += t
+            if record:
+                times[gid] = t
+                order.append(gid)
+                busy_after.append(compute_busy)
             if timeline is not None:
                 timeline.append(("compute", gid, start, end))
             for i in group_to_buckets.get(gid, ()):
@@ -89,6 +187,100 @@ class Simulator:
         if len(done_at) != len(g.groups):
             raise RuntimeError("cyclic fusion graph in simulator")
 
+        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, timeline)
+        compute_finish = device_free
+        result = self._make_result(compute_busy, comm_busy, compute_finish,
+                                   comm_finish, timeline)
+        return _SimState(order=order, done_at=done_at,
+                         busy_after=busy_after, times=times, result=result)
+
+    # ----------------------------------------------------------- delta path
+    def _run_delta(self, g: FusionGraph, base: _SimState) -> _SimState | None:
+        """Exact suffix replay from the journal's divergence bound; returns
+        None when the delta is invalid (caller falls back to full replay)."""
+        n_base = len(base.order)
+        k = n_base
+        pos = base.pos
+        for rec in g._journal:
+            if rec[0] != "fuse":
+                continue
+            _, removed, _new_gid, new_preds = rec
+            for x in removed:
+                p = pos.get(x)
+                if p is not None:
+                    k = min(k, p)
+            known = [pos[x] for x in new_preds if x in pos]
+            k = min(k, (max(known) + 1) if known else 0)
+
+        succs, preds = g.quotient()
+        prefix = base.order[:k]
+        popped = set(prefix)
+        groups = g.groups
+        for gid in prefix:
+            if gid not in groups:
+                return None  # journal/state mismatch
+        done_at = dict(base.done_at)
+        remaining = [gid for gid in groups if gid not in popped]
+        indeg: dict[int, int] = {}
+        for gid in remaining:
+            c = 0
+            for x in preds[gid]:
+                if x not in popped:
+                    c += 1
+            indeg[gid] = c
+        key = g._group_key
+        ready = [(key[gid], gid) for gid in remaining if indeg[gid] == 0]
+        heapq.heapify(ready)
+        device_free = done_at[prefix[-1]] if k > 0 else 0.0
+        compute_busy = base.busy_after[k - 1] if k > 0 else 0.0
+        order = list(prefix)
+        busy_after = base.busy_after[:k]
+        times = dict(base.times)
+        group_time = self.estimator.group_time
+        while ready:
+            _, gid = heapq.heappop(ready)
+            # a surviving gid always denotes the same fused group, so its
+            # cached time from the base schedule is still exact
+            t = times.get(gid)
+            if t is None:
+                t = group_time(g, gid)
+                times[gid] = t
+            end = device_free + t
+            done_at[gid] = end
+            device_free = end
+            compute_busy += t
+            order.append(gid)
+            busy_after.append(compute_busy)
+            for d in succs[gid]:
+                if d in indeg:
+                    indeg[d] -= 1
+                    if indeg[d] == 0:
+                        heapq.heappush(ready, (key[d], d))
+        if len(order) != len(groups):
+            return None  # cyclic or inconsistent — let the full path decide
+
+        bucket_ready_at: dict[int, float] = {}
+        for i, b in enumerate(g.buckets):
+            provs = g.bucket_ready_groups(b)
+            try:
+                bucket_ready_at[i] = max(done_at[x] for x in provs)
+            except KeyError:
+                return None
+        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, None)
+        compute_finish = device_free if order else 0.0
+        result = self._make_result(compute_busy, comm_busy, compute_finish,
+                                   comm_finish, None)
+        # stale (removed-gid) entries are harmless — gids are never reused
+        # within a lineage — but prune once they dominate the dicts
+        if len(done_at) > 2 * len(groups):
+            done_at = {gid: done_at[gid] for gid in groups}
+            times = {gid: times[gid] for gid in groups}
+        return _SimState(order=order, done_at=done_at,
+                         busy_after=busy_after, times=times, result=result)
+
+    # -------------------------------------------------------------- shared
+    def _comm_pass(self, g: FusionGraph, bucket_ready_at: dict[int, float],
+                   timeline: list | None) -> tuple[float, float]:
         # communication channel: buckets transfer in order of readiness
         # (paper: "in order of production of their respective gradient
         # tensors"), serialized on one channel, overlapping compute.
@@ -104,8 +296,11 @@ class Simulator:
             comm_finish = chan_free
             if timeline is not None:
                 timeline.append(("allreduce", i, start, chan_free))
+        return comm_busy, comm_finish
 
-        compute_finish = device_free
+    @staticmethod
+    def _make_result(compute_busy, comm_busy, compute_finish, comm_finish,
+                     timeline) -> SimResult:
         it = max(compute_finish, comm_finish)
         return SimResult(
             iteration_time=it,
@@ -116,6 +311,14 @@ class Simulator:
             overlap_ratio=(compute_busy + comm_busy) / it if it > 0 else 1.0,
             timeline=timeline,
         )
+
+    def _remember(self, g: FusionGraph, state: _SimState) -> None:
+        tok = next(_token_counter)
+        self._states[tok] = state
+        if len(self._states) > self._state_cache_size:
+            self._states.popitem(last=False)
+        g._base_token = tok
+        g._journal = []
 
     # ------------------------------------------------------------- FO bound
     def full_overlap_bound(self, g: FusionGraph) -> float:

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import compat
+from ..compat import axis_size_compat, shard_map_compat
 from ..models import model as M
 from ..models.config import ModelConfig
 from ..optim import adamw, apply_updates, clip_by_global_norm
@@ -112,7 +114,7 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
     def fuse_and_reduce(leaves_local: list):
         dp = 1
         for a in dp_axes:
-            dp *= jax.lax.axis_size(a)
+            dp *= axis_size_compat(a)
         out: list = [None] * len(leaves_local)
         prev_fused = None
         for bucket in strategy.buckets:
@@ -134,17 +136,22 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
                 off += n
         return tuple(out)
 
-    if mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1:
+    if (mesh is None or "model" not in mesh.shape or mesh.shape["model"] == 1
+            or not compat.supports_nested_partial_manual()):
+        # flat path: psum over the data axes on the (model-auto-sharded)
+        # gradients directly — also the 0.4.x route, which cannot nest a
+        # partial-manual shard_map over `model` inside the data region
         return jax.tree_util.tree_unflatten(treedef, fuse_and_reduce(leaves))
 
     specs = tuple(jax.tree_util.tree_leaves(
         pspecs, is_leaf=lambda x: isinstance(x, P)))
     assert len(specs) == len(leaves)
-    # nested shard_map picks up the ambient (partial-manual) mesh context
-    synced = jax.shard_map(
+    # nested shard_map picks up the ambient (partial-manual) mesh context on
+    # modern JAX; 0.4.x nests with the explicit mesh instead
+    synced = shard_map_compat(
         lambda *ls: fuse_and_reduce(list(ls)),
-        in_specs=specs, out_specs=specs,
-        axis_names={"model"}, check_vma=False,
+        mesh=mesh, in_specs=specs, out_specs=specs,
+        axis_names={"model"}, check=False, use_ambient_mesh=True,
     )(*leaves)
     return jax.tree_util.tree_unflatten(treedef, list(synced))
 
@@ -188,8 +195,11 @@ def build_train_step(
     # shard_map is not nested inside a manual region (fsdp/auto mode);
     # the non-VP chunked CE is used there instead (see DESIGN.md).
     # In pure-DP layout everything is replicated: no vocab parallelism.
-    vp_ce = mode == "ddp_tp" and layout != "dp"
-    vp = None if layout == "dp" else mesh
+    # JAX 0.4.x cannot nest the partial-manual VP shard_map at all — the
+    # same non-VP chunked CE fallback applies there.
+    nested_ok = compat.supports_nested_partial_manual()
+    vp_ce = mode == "ddp_tp" and layout != "dp" and nested_ok
+    vp = None if (layout == "dp" or not nested_ok) else mesh
 
     def local_loss(params, batch):
         return loss_fn(params, cfg, batch, remat=remat, vp_mesh=vp,
@@ -207,7 +217,7 @@ def build_train_step(
             zero = (jnp.zeros(()),
                     jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                  params))
-            (loss, grads), _ = jax.lax.scan(body, zero, micro)
+            (loss, grads), _ = compat.scan_compat(body, zero, micro)
             scale = 1.0 / grad_accum
             return loss * scale, jax.tree.map(lambda g: g * scale, grads)
         return jax.value_and_grad(local_loss)(params, batch)
@@ -245,11 +255,11 @@ def build_train_step(
             for k in batch_keys:
                 lead = dp_axes if len(dp_axes) > 1 else dp_axes[0]
                 bspec[k] = P(lead)
-            fn = jax.shard_map(local_step, mesh=mesh,
-                               in_specs=(P(), P(), bspec),
-                               out_specs=(P(), P(), P()),
-                               axis_names=set(dp_axes),
-                               check_vma=False)
+            fn = shard_map_compat(local_step, mesh=mesh,
+                                  in_specs=(P(), P(), bspec),
+                                  out_specs=(P(), P(), P()),
+                                  axis_names=set(dp_axes),
+                                  check=False)
             return fn
 
         def step(params, opt_state, batch):

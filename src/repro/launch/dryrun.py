@@ -146,9 +146,11 @@ def build_dryrun_prefill(cfg, mesh, shape: str, fsdp: bool = False):
     cache_specs = jax.tree.map(
         lambda l: P(None, lead, *([None] * (l.ndim - 2))), out_shape[1])
     bspec = {k: P(lead) for k in specs}
-    smfn = jax.shard_map(fn, mesh=mesh, in_specs=(P(), bspec),
-                         out_specs=(logits_spec, cache_specs),
-                         axis_names=set(dp_axes), check_vma=False)
+    from repro.compat import shard_map_compat
+
+    smfn = shard_map_compat(fn, mesh=mesh, in_specs=(P(), bspec),
+                            out_specs=(logits_spec, cache_specs),
+                            axis_names=set(dp_axes), check=False)
     # NOTE: under the data-manual region, params must not be data-sharded
     # (they enter with spec P()); big-arch serving shards experts over
     # `model` only — weights stream from the EP shards.
@@ -224,7 +226,9 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.perf_counter() - t0
 
-    ca = compiled.cost_analysis() or {}
+    from ..compat import cost_analysis_compat
+
+    ca = cost_analysis_compat(compiled)
     ma = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text())
     result.update({

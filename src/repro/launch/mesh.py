@@ -8,11 +8,40 @@ jax device state).  The dry-run launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing
 jax so 512 placeholder host devices exist; smoke tests and benches see the
 default single device.
+
+``make_mesh_compat`` papers over the JAX API skew around mesh axis types:
+JAX >= 0.5 grew ``jax.sharding.AxisType`` and a ``jax.make_mesh(...,
+axis_types=...)`` keyword; on stock JAX 0.4.x neither exists and every mesh
+axis is implicitly "auto" — so the fallback simply omits the argument.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh_compat(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with ``axis_types=(AxisType.Auto, ...)`` where the
+    installed JAX supports it, plain ``jax.make_mesh`` (or the ``Mesh``
+    constructor) otherwise."""
+    try:
+        from jax.sharding import AxisType  # JAX >= 0.5
+        axis_types = (AxisType.Auto,) * len(axes)
+    except ImportError:
+        axis_types = None
+    if hasattr(jax, "make_mesh"):
+        if axis_types is not None:
+            try:
+                return jax.make_mesh(shape, axes, devices=devices,
+                                     axis_types=axis_types)
+            except TypeError:
+                pass  # make_mesh predates the axis_types kwarg
+        return jax.make_mesh(shape, axes, devices=devices)
+    # very old JAX: build the Mesh directly
+    import numpy as np
+
+    devs = list(devices) if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,8 +54,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices (set XLA_FLAGS="
             f"--xla_force_host_platform_device_count=512 before importing "
             f"jax); have {len(devices)}")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=devices[:n])
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
@@ -37,5 +65,4 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     devices = jax.devices()
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=devices[:n])

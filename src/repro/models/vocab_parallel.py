@@ -34,11 +34,11 @@ def _inside_manual() -> bool:
 
 
 def _smap(fn, mesh, in_specs, out_specs):
-    kw = dict(in_specs=in_specs, out_specs=out_specs, axis_names={"model"},
-              check_vma=False)
-    if _inside_manual():
-        return jax.shard_map(fn, **kw)          # ambient partial-manual mesh
-    return jax.shard_map(fn, mesh=mesh, **kw)
+    from repro.compat import shard_map_compat
+
+    return shard_map_compat(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, axis_names={"model"},
+                            check=False, use_ambient_mesh=_inside_manual())
 
 
 def applicable(mesh, vocab: int) -> bool:

@@ -1,0 +1,74 @@
+"""Property-testing shim: re-exports ``hypothesis`` when it is installed,
+otherwise provides a minimal deterministic fallback (seeded ``random``
+sampling) with the same ``given`` / ``settings`` / ``strategies`` surface the
+test-suite uses.  CI images without network access (no pip) stay green; dev
+machines with hypothesis get real shrinking/edge-case generation.
+
+Usage in tests::
+
+    from _propcheck import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 100  # hypothesis' own default
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=(1 << 31) - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_pc_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # deterministic per-test seed (PYTHONHASHSEED-independent)
+                name = f"{fn.__module__}:{fn.__qualname__}"
+                rng = random.Random(zlib.crc32(name.encode()))
+                for _ in range(n):
+                    drawn_args = [s._draw(rng) for s in arg_strategies]
+                    drawn_kw = {k: s._draw(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn_args, **kwargs, **drawn_kw)
+
+            # pytest must not resolve the original params as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+st = strategies

@@ -3,7 +3,7 @@ structural invariants the simulator and search rely on."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.graph import DOT, EW, FusionGraph, LAYOUT, OPAQUE, PrimOp, REDUCE
 
