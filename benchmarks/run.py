@@ -25,6 +25,7 @@ def main() -> None:
     import fig9_estimator
     import fig10_ablation
     import fig11_gnn_search
+    import fig_cluster_sweep
     import table2_sim_accuracy
     import table34_hparams
     import roofline
@@ -47,6 +48,9 @@ def main() -> None:
          lambda: table34_hparams.run(unchanged_limit=max(lim // 2, 30))),
         ("Fig11 (ours): GNN-in-the-loop search vs oracle search",
          lambda: fig11_gnn_search.run(unchanged_limit=max(lim // 2, 30))),
+        ("FigC (ours): cluster-topology sweep of searched strategies",
+         lambda: fig_cluster_sweep.run(unchanged_limit=max(lim // 2, 30),
+                                       max_steps=lim)),
         ("Roofline: per (arch x shape x mesh) terms",
          lambda: roofline.run()),
     ]

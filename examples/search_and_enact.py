@@ -1,10 +1,15 @@
 """Search -> save -> enact: the full DisCo workflow (paper Sec. 3.1).
 
     PYTHONPATH=src python examples/search_and_enact.py
+    PYTHONPATH=src python examples/search_and_enact.py \
+        --cluster a100_nvlink_ib
 
 Search Phase: backtracking search over the traced step; the winning tensor-
 fusion strategy is written to strategy.json (the paper's "optimized HLO
-module" configuration file).
+module" configuration file).  With ``--cluster <preset>`` the search prices
+collectives on that topology (see ``repro.cluster.list_presets()``) and
+also picks a collective algorithm per bucket; without it, the legacy flat
+model is used (bit-identical to the seed).
 
 Enactment Phase: the strategy is loaded and built into the distributed train
 step; we lower both the per-tensor baseline and the DisCo-bucketed step and
@@ -42,6 +47,16 @@ def allreduce_count(cfg, mesh, strategy, params, opt, specs):
 
 
 def main():
+    import argparse
+
+    from repro.cluster import list_presets
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", default=None, choices=list_presets(),
+                    help="cluster preset to search against; default: "
+                         "legacy flat model")
+    args = ap.parse_args()
+
     cfg = get_config("qwen2-0.5b").reduced()
     key = jax.random.PRNGKey(0)
     params = ST.init_params(key, cfg)
@@ -51,13 +66,24 @@ def main():
     print("search phase ...")
     g = profile_graph(trace_grad_graph(
         lambda p, bt: ST.loss_fn(p, cfg, bt), params, batch))
-    sim = Simulator(n_devices=4)
+    if args.cluster:
+        from repro.cluster import get_preset
+
+        spec = get_preset(args.cluster)
+        print(f"  pricing collectives on {spec.name} "
+              f"({spec.n_devices} devices, {len(spec.levels)} link levels)")
+        sim = Simulator(cluster=spec)
+    else:
+        sim = Simulator(n_devices=4)
     res = backtracking_search(g, sim, unchanged_limit=120, seed=0)
     strat = GradSyncStrategy.from_fusion_graph(res.best, params)
     path = os.path.join(tempfile.gettempdir(), "disco_strategy.json")
     strat.save(path)
     print(f"  {len(g.buckets)} gradient tensors -> "
           f"{len(strat.buckets)} fused AllReduce buckets; saved {path}")
+    if args.cluster:
+        algos = res.best.describe()["bucket_algos"]
+        print(f"  searched collective-algorithm mix: {algos}")
 
     # ---- Enactment Phase (ENABLE_SEARCH=0) ----
     print("enactment phase ...")

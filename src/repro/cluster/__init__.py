@@ -1,0 +1,26 @@
+"""Topology-aware cluster & collective-algorithm modeling (DESIGN.md Sec. 7).
+
+``ClusterSpec`` describes hierarchical, heterogeneous interconnects;
+``collectives`` prices ring / recursive-halving-doubling / hierarchical
+AllReduce on them.  ``repro.core`` threads a spec through the cost substrate
+and the backtracking search so the collective algorithm is a *searched*
+dimension alongside op and tensor fusion.
+
+Import-light on purpose: no jax, no repro.core at module load (the search
+worker pool spawns bare interpreters that must import this cheaply; the
+``from_mesh`` bridge lives in :mod:`repro.launch.mesh`).
+"""
+from .topology import (ClusterSpec, LinkLevel, PRESETS, dcn_level,
+                       get_preset, list_presets, tpu_pod_levels)
+from .collectives import (ALGO_HIER, ALGO_RING, ALGO_TREE, ALGORITHMS,
+                          COLLECTIVE_ALGOS, DEFAULT_ALGO, allreduce_coeffs,
+                          best_algo, bucket_time, hier_allreduce,
+                          ring_allreduce, tree_allreduce)
+
+__all__ = [
+    "ClusterSpec", "LinkLevel", "PRESETS", "dcn_level", "get_preset",
+    "list_presets", "tpu_pod_levels",
+    "ALGO_HIER", "ALGO_RING", "ALGO_TREE", "ALGORITHMS", "COLLECTIVE_ALGOS",
+    "DEFAULT_ALGO", "allreduce_coeffs", "best_algo", "bucket_time",
+    "hier_allreduce", "ring_allreduce", "tree_allreduce",
+]

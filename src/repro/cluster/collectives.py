@@ -1,0 +1,187 @@
+"""Collective-algorithm cost models over a :class:`ClusterSpec`.
+
+Three AllReduce algorithms, each a closed-form alpha-beta cost (the level of
+detail DistIR shows a strategy-ranking simulator needs — per-topology, not
+per-packet):
+
+* ``ring`` — one flat ring over all N devices.  Bandwidth-optimal volume
+  ``2 (N-1)/N x`` but every one of the ``2 (N-1)`` synchronous steps is
+  gated by the slowest (bottleneck) level the ring crosses.  A ring
+  confined to a *single* link level is neighbour-aligned by construction
+  and pays no ``contention``; a ring spanning several levels fights the
+  fabric at its bottleneck.  On the flat back-compat spec the coefficients
+  come straight from ``repro.core.hw.ring_allreduce_coeffs`` so the cost is
+  bit-identical to the paper's ``T = C x + D`` seed model.
+
+* ``tree`` — recursive-halving reduce-scatter + recursive-doubling
+  all-gather (Rabenseifner), scheduled inner-first so the large early
+  exchanges stay on fast links and only ``x / N_below`` crosses each outer
+  level.  ``2 log2(N)`` steps total; its long-haul pairwise exchanges are
+  *not* adjacency-aligned (distance-``2^k`` partners on a torus axis, wide
+  routes on an oversubscribed fat tree), so every level charges its
+  ``contention`` factor, and non-power-of-two degrees pay one extra
+  preparation exchange (the classic 2^k restriction).
+
+* ``hier`` — two-level-style hierarchical AllReduce generalised to L
+  levels: ring reduce-scatter inward level by level (shrinking the live
+  shard by ``degree`` each time), a ring AllReduce of ``x / N_inner`` at the
+  outermost level, then ring all-gathers back out.  Structured, rail-aligned
+  rings are exempt from ``contention``; inter-host volume drops by the
+  product of the inner degrees — why it wins whenever the outer link is the
+  bottleneck (provably never worse than ``ring`` when inner levels are
+  uniformly faster; see tests/test_cluster.py).  On a spec with no inner
+  fan-out it degenerates to — and is priced exactly as — the flat ring.
+
+The flat back-compat spec is **algorithm-blind**: the seed's fixed-``D``
+linear model cannot distinguish algorithms, so all three degenerate to the
+legacy formula there (and the search drops the algo mutation method).
+
+Every model is linear in message size for a fixed (spec, algo), so
+``allreduce_coeffs`` derives the ``(C, D)`` pair once per pair and memoises
+it — ``bucket_time`` in the simulator's hot comm pass is then one
+multiply-add, not a topology walk.  All models return 0.0 for empty
+(<= 0 byte) transfers: an AllReduce that moves nothing costs nothing
+(zero-byte-bucket fix, DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+from .topology import ClusterSpec
+
+ALGO_RING = "ring"
+ALGO_TREE = "tree"
+ALGO_HIER = "hier"
+# order matters: best_algo ties resolve to the earliest entry (ring, the
+# legacy default, wins exact ties so flat specs keep seed behaviour)
+COLLECTIVE_ALGOS = (ALGO_RING, ALGO_TREE, ALGO_HIER)
+
+DEFAULT_ALGO = ALGO_RING
+
+
+# ------------------------------------------------------------- coefficients
+def _ring_coeffs(spec: ClusterSpec) -> tuple[float, float]:
+    n = spec.n_devices
+    spans = [l for l in spec.levels if l.degree > 1]
+    if n <= 1 or not spans:
+        return 0.0, 0.0
+    b = spec.bottleneck()
+    # a single-axis ring is neighbour traffic (dilation 1): no contention
+    beta = b.beta_contended() if len(spans) > 1 else b.beta
+    return (2.0 * (n - 1) / n) * beta, 2.0 * (n - 1) * b.alpha
+
+
+def _tree_coeffs(spec: ClusterSpec) -> tuple[float, float]:
+    if spec.n_devices <= 1:
+        return 0.0, 0.0
+    c = 0.0
+    d_lat = 0.0
+    below = 1
+    for l in spec.levels:
+        d = l.degree
+        if d <= 1:
+            continue
+        beta = l.beta_contended()
+        steps = math.ceil(math.log2(d))
+        # volume crossing this level per device (reduce-scatter half; the
+        # all-gather mirror doubles it)
+        c += 2.0 * (1.0 / below - 1.0 / (below * d)) * beta
+        d_lat += 2.0 * steps * l.alpha
+        if d & (d - 1):  # non-power-of-two: one extra preparation exchange
+            c += 2.0 * (1.0 / below) * beta
+            d_lat += 2.0 * l.alpha
+        below *= d
+    return c, d_lat
+
+
+def _hier_coeffs(spec: ClusterSpec) -> tuple[float, float]:
+    if spec.n_devices <= 1:
+        return 0.0, 0.0
+    inner_fanout = 1
+    for l in spec.levels[:-1]:
+        inner_fanout *= l.degree
+    if inner_fanout <= 1:
+        # no inner hierarchy to exploit: "hierarchical" IS the flat ring
+        # (same physical schedule, same contention) — never price it cheaper
+        return _ring_coeffs(spec)
+    c = 0.0
+    d_lat = 0.0
+    scale = 1.0  # live shard fraction after the inner reduce-scatters
+    for l in spec.levels[:-1]:
+        d = l.degree
+        if d > 1:
+            # ring reduce-scatter + all-gather at this level, (d-1) steps
+            # and (d-1)/d of the live shard each way, rail-aligned
+            c += 2.0 * ((d - 1) / d) * scale * l.beta
+            d_lat += 2.0 * (d - 1) * l.alpha
+        scale /= d
+    outer = spec.levels[-1]
+    h = outer.degree
+    if h > 1:
+        c += (2.0 * (h - 1) / h) * scale * outer.beta
+        d_lat += 2.0 * (h - 1) * outer.alpha
+    return c, d_lat
+
+
+_COEFF_FNS = {
+    ALGO_RING: _ring_coeffs,
+    ALGO_TREE: _tree_coeffs,
+    ALGO_HIER: _hier_coeffs,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def allreduce_coeffs(spec: ClusterSpec,
+                     algo: str = DEFAULT_ALGO) -> tuple[float, float]:
+    """``(C, D)`` of the linear cost ``T = C x + D`` for ``x > 0``.
+
+    On the flat back-compat spec every algorithm returns the seed's
+    ``ring_allreduce_coeffs`` pair — the legacy model is algorithm-blind,
+    and ring cost stays bit-identical to ``hw.allreduce_time``."""
+    if spec.compat_hw is not None:
+        from repro.core.hw import ring_allreduce_coeffs
+
+        return ring_allreduce_coeffs(spec.compat_hw, spec.n_devices)
+    return _COEFF_FNS[algo](spec)
+
+
+def bucket_time(nbytes: float, spec: ClusterSpec,
+                algo: str = DEFAULT_ALGO) -> float:
+    """Cost of AllReducing one fused gradient bucket of ``nbytes`` under
+    ``algo``.  Empty buckets are free."""
+    if nbytes <= 0.0:
+        return 0.0
+    c, d = allreduce_coeffs(spec, algo)
+    return c * nbytes + d
+
+
+def ring_allreduce(nbytes: float, spec: ClusterSpec) -> float:
+    return bucket_time(nbytes, spec, ALGO_RING)
+
+
+def tree_allreduce(nbytes: float, spec: ClusterSpec) -> float:
+    return bucket_time(nbytes, spec, ALGO_TREE)
+
+
+def hier_allreduce(nbytes: float, spec: ClusterSpec) -> float:
+    return bucket_time(nbytes, spec, ALGO_HIER)
+
+
+ALGORITHMS = {
+    ALGO_RING: ring_allreduce,
+    ALGO_TREE: tree_allreduce,
+    ALGO_HIER: hier_allreduce,
+}
+
+
+def best_algo(nbytes: float, spec: ClusterSpec) -> tuple[str, float]:
+    """Cheapest algorithm for this message size on this topology."""
+    best_name, best_t = DEFAULT_ALGO, bucket_time(nbytes, spec, DEFAULT_ALGO)
+    for name in COLLECTIVE_ALGOS:
+        if name == DEFAULT_ALGO:
+            continue
+        t = bucket_time(nbytes, spec, name)
+        if t < best_t:
+            best_name, best_t = name, t
+    return best_name, best_t

@@ -1,10 +1,13 @@
 """The paper's comparison baselines, re-implemented as graph rewrites
 (Sec. 6.1): XLA-style post-order heuristic op fusion, XLA AllReduce-combiner
 threshold tensor fusion, PyTorch-DDP-style reverse-order bucketing, and the
-full-overlap (FO) bound.
+full-overlap (FO) bound.  On a non-flat :class:`repro.cluster.ClusterSpec`,
+``evaluate_baselines`` adds two topology-aware rows: Horovod-style
+hierarchical AllReduce and NCCL-style per-bucket algorithm auto-tuning.
 """
 from __future__ import annotations
 
+from ..cluster import ClusterSpec, best_algo
 from .graph import DOT, EW, FusionGraph, LAYOUT, REDUCE
 from .simulator import Simulator
 
@@ -82,6 +85,20 @@ def pytorch_ddp(g: FusionGraph) -> FusionGraph:
     return threshold_tensor_fusion(g, threshold=DDP_BUCKET_CAP, reverse=True)
 
 
+def assign_bucket_algos(g: FusionGraph, cluster: ClusterSpec,
+                        algo: str = "auto") -> FusionGraph:
+    """Set every bucket's collective algorithm: a fixed one, or per-bucket
+    ``best_algo`` when ``algo="auto"`` (NCCL-tuner style)."""
+    g = g.clone()
+    for i, b in enumerate(g.buckets):
+        nb = g.bucket_bytes(b)
+        if nb <= 0.0:
+            continue
+        g.set_bucket_algo(i, best_algo(nb, cluster)[0] if algo == "auto"
+                          else algo)
+    return g
+
+
 BASELINES = {
     "JAX_no_fusion": jax_no_fusion,
     "JAX_op_fusion": jax_op_fusion,
@@ -94,4 +111,12 @@ BASELINES = {
 def evaluate_baselines(g: FusionGraph, sim: Simulator) -> dict[str, float]:
     out = {name: sim.cost(fn(g)) for name, fn in BASELINES.items()}
     out["FO"] = sim.full_overlap_bound(jax_default(g))
+    # topology-aware rows only make sense on a real cluster spec; the flat
+    # back-compat shim keeps the seed baseline set (and values) unchanged
+    cluster = getattr(sim, "cluster", None)
+    if cluster is not None and not cluster.is_flat_compat:
+        out["Horovod_hierarchical"] = sim.cost(
+            assign_bucket_algos(jax_default(g), cluster, "hier"))
+        out["NCCL_auto_algo"] = sim.cost(
+            assign_bucket_algos(jax_default(g), cluster, "auto"))
     return out

@@ -20,8 +20,9 @@ from __future__ import annotations
 import math
 from typing import Iterable, Sequence
 
+from ..cluster import ClusterSpec, bucket_time
 from .graph import DOT, EW, FusionGraph, LAYOUT, OPAQUE, PrimOp, REDUCE
-from .hw import Hardware, TPU_V5E, allreduce_time
+from .hw import Hardware, TPU_V5E
 
 
 # --------------------------------------------------------------------- prims
@@ -55,7 +56,7 @@ def profile_graph(g: FusionGraph, hw: Hardware = TPU_V5E) -> FusionGraph:
     ]
     return FusionGraph._from_parts(
         prims, g.psuccs, g.ppreds, g.groups, g.provider, g._next_gid,
-        g.grad_prim, g.buckets,
+        g.grad_prim, g.buckets, bucket_algos=g.bucket_algos,
     )
 
 
@@ -135,7 +136,20 @@ def total_compute_time(g: FusionGraph, estimator, hw: Hardware = TPU_V5E) -> flo
     return sum(estimator.group_time(g, gid) for gid in g.groups)
 
 
-def total_comm_time(g: FusionGraph, hw: Hardware, n_devices: int) -> float:
-    return sum(
-        allreduce_time(g.bucket_bytes(b), hw, n_devices) for b in g.buckets
-    )
+def total_comm_time(g: FusionGraph, hw: Hardware = TPU_V5E,
+                    n_devices: int = 256,
+                    cluster: ClusterSpec | None = None) -> float:
+    """Busy time of the communication channel: each bucket priced by its
+    chosen collective algorithm on ``cluster`` (a legacy ``(hw, n_devices)``
+    call maps to the flat back-compat spec — bit-identical to the seed's
+    per-bucket ``allreduce_time`` sum).  Empty/zero-byte buckets transfer
+    nothing and are skipped (no fixed latency D charged)."""
+    if cluster is None:
+        cluster = ClusterSpec.flat(hw, n_devices)
+    total = 0.0
+    for i, b in enumerate(g.buckets):
+        nb = g.bucket_bytes(b)
+        if nb <= 0.0:
+            continue
+        total += bucket_time(nb, cluster, g.bucket_algos[i])
+    return total

@@ -11,11 +11,15 @@ The IR has two levels:
   Duplicate fusion (paper Fig. 1(iii)) lets a prim be a member of several
   groups; exactly one group is its *provider* — the occurrence whose
   completion makes the prim's output available to external consumers.
-  AllReduce instructions are partitioned into *buckets* (tensor fusion).
+  AllReduce instructions are partitioned into *buckets* (tensor fusion);
+  each bucket additionally carries a *collective algorithm* choice
+  (``bucket_algos``: ring / tree / hier, priced by :mod:`repro.cluster`).
 
 Mutations (`fuse_nondup`, `fuse_dup`, `merge_buckets`) are the paper's three
 optimisation methods (Sec. 4.5); each validates DAG-ness of the quotient
-graph and op fusibility before committing.
+graph and op fusibility before committing.  ``set_bucket_algo`` is the
+cluster extension's fourth method: the search is joint over op fusion x
+tensor fusion x collective algorithm (DESIGN.md Sec. 7).
 
 Incremental invariants
 ----------------------
@@ -121,11 +125,14 @@ class FusionGraph:
         )
         self.grad_prim: dict[int, int] = {p.grad_param: p.pid for p in grads}
         self.buckets: list[tuple[int, ...]] = [(p.grad_param,) for p in grads]
+        # per-bucket collective algorithm ("ring" reproduces the seed model)
+        self.bucket_algos: list[str] = ["ring"] * len(self.buckets)
         self._rebuild_derived()
 
     @classmethod
     def _from_parts(cls, prims, psuccs, ppreds, groups, provider, next_gid,
-                    grad_prim, buckets, family: int | None = None) -> "FusionGraph":
+                    grad_prim, buckets, family: int | None = None,
+                    bucket_algos=None) -> "FusionGraph":
         """Assemble a graph from explicit state (see ``profile_graph``);
         derived structures are rebuilt from scratch.  ``family`` pins the
         estimator-cache lineage when the prims are shared with an existing
@@ -139,6 +146,8 @@ class FusionGraph:
         g._next_gid = next_gid
         g.grad_prim = dict(grad_prim)
         g.buckets = list(buckets)
+        g.bucket_algos = (list(bucket_algos) if bucket_algos is not None
+                          else ["ring"] * len(g.buckets))
         g._rebuild_derived()
         if family is not None:
             g._family = family
@@ -199,6 +208,7 @@ class FusionGraph:
         g._next_gid = self._next_gid
         g.grad_prim = self.grad_prim
         g.buckets = list(self.buckets)
+        g.bucket_algos = list(self.bucket_algos)
         # quotient structures are shared: mutations are copy-on-write (they
         # replace modified adjacency sets, never mutate them in place)
         g._qsuccs = self._qsuccs
@@ -429,7 +439,28 @@ class FusionGraph:
             return False
         lo = min(i, j)
         self.buckets[lo : lo + 2] = [a + b]
+        # the merged bucket keeps the leading bucket's collective algorithm
+        self.bucket_algos[lo : lo + 2] = [self.bucket_algos[lo]]
         self._journal.append(("bucket", lo))
+        return True
+
+    def set_bucket_algo(self, i: int, algo: str) -> bool:
+        """Cluster-extension method (iv): pick the collective algorithm for
+        bucket ``i`` (see :mod:`repro.cluster.collectives`).  A no-op choice
+        returns False so the search does not re-enqueue identical states."""
+        from ..cluster import COLLECTIVE_ALGOS
+
+        if algo not in COLLECTIVE_ALGOS:
+            # fail at the call site, not as a KeyError deep in a (possibly
+            # remote worker-pool) simulation
+            raise ValueError(f"unknown collective algorithm {algo!r}; "
+                             f"expected one of {COLLECTIVE_ALGOS}")
+        if not 0 <= i < len(self.buckets):
+            return False
+        if self.bucket_algos[i] == algo:
+            return False
+        self.bucket_algos[i] = algo
+        self._journal.append(("algo", i))
         return True
 
     # ------------------------------------------------------------ accessors
@@ -485,12 +516,14 @@ class FusionGraph:
         gs = tuple(sorted(tuple(sorted(m)) for m in self.groups.values()))
         pv = tuple(sorted(self.provider.items()))
         bk = tuple(self.buckets)
-        return (gs, pv, bk)
+        return (gs, pv, bk, tuple(self.bucket_algos))
 
     def fast_signature(self) -> tuple[int, int]:
-        """Order-independent rolling hash of (groups, provider, buckets),
-        maintained by the mutations — O(#buckets) instead of O(V log V)."""
-        return (self._ghash, hash(tuple(self.buckets)))
+        """Order-independent rolling hash of (groups, provider, buckets,
+        bucket algos), maintained by the mutations — O(#buckets) instead of
+        O(V log V)."""
+        return (self._ghash,
+                hash((tuple(self.buckets), tuple(self.bucket_algos))))
 
     # --------------------------------------------------------------- stats
     def describe(self) -> dict:
@@ -506,4 +539,7 @@ class FusionGraph:
             ),
             "allreduce_buckets": len(self.buckets),
             "grad_tensors": len(self.grad_prim),
+            "bucket_algos": {
+                a: self.bucket_algos.count(a) for a in set(self.bucket_algos)
+            },
         }

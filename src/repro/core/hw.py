@@ -36,6 +36,11 @@ def ring_allreduce_coeffs(hw: Hardware, n_devices: int) -> tuple[float, float]:
     """Linear AllReduce model T = C*x + D (paper Sec. 4.2, Parallax formula).
 
     C = 2(N-1)/(N*B) for a full-duplex ring over the slowest link B.
+
+    This single-link model is the *flat* special case: hierarchical,
+    heterogeneous interconnects and alternative collective algorithms live
+    in :mod:`repro.cluster` (DESIGN.md Sec. 7), whose flat back-compat spec
+    reproduces this formula bit-for-bit.
     """
     if n_devices <= 1:
         return 0.0, 0.0

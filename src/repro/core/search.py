@@ -2,7 +2,11 @@
 
 Faithful reproduction: a priority queue of candidate HLO modules ordered by
 Cost(.); each step dequeues the cheapest candidate and applies each of the
-three optimisation methods ``RandomApply``-style n ~ U[0, beta] times;
+optimisation methods ``RandomApply``-style n ~ U[0, beta] times — the
+paper's three (non-duplicate fusion, duplicate fusion, tensor fusion) plus
+the cluster extension's per-bucket collective-algorithm choice
+(``METHOD_ALGO``), making the search joint over op fusion x tensor fusion x
+algorithm (DESIGN.md Sec. 7);
 candidates within ``alpha x Cost(H_opt)`` are re-enqueued for backtracking;
 the search stops when the queue empties or H_opt is unchanged for
 ``unchanged_limit`` steps (paper: 1000; default reduced for CPU budget —
@@ -29,6 +33,7 @@ import random
 import time as _time
 from typing import Callable, Sequence
 
+from ..cluster import COLLECTIVE_ALGOS
 from .costs import OracleEstimator
 from .graph import FusionGraph
 from .simulator import Simulator
@@ -36,7 +41,8 @@ from .simulator import Simulator
 METHOD_NONDUP = "nondup"
 METHOD_DUP = "dup"
 METHOD_TENSOR = "tensor"
-ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR)
+METHOD_ALGO = "algo"
+ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO)
 
 
 @dataclasses.dataclass
@@ -61,6 +67,12 @@ def random_apply(g: FusionGraph, method: str, n: int, rng: random.Random) -> boo
             i = rng.randrange(len(g.buckets) - 1)
             changed |= g.merge_buckets(i, i + 1)
             continue
+        if method == METHOD_ALGO:
+            if not g.buckets:
+                break
+            i = rng.randrange(len(g.buckets))
+            changed |= g.set_bucket_algo(i, rng.choice(COLLECTIVE_ALGOS))
+            continue
         gids = list(g.groups)
         # a handful of attempts to find a valid (consumer, producer) pair
         for _attempt in range(4):
@@ -82,16 +94,19 @@ _WORKER_CTX = None
 
 def _pool_init(payload: bytes) -> None:
     global _WORKER_CTX
-    prims, psuccs, ppreds, grad_prim, family, hw, n_devices = pickle.loads(payload)
-    sim = Simulator(hw=hw, n_devices=n_devices, incremental=False)
+    (prims, psuccs, ppreds, grad_prim, family, hw, n_devices,
+     cluster) = pickle.loads(payload)
+    sim = Simulator(hw=hw, n_devices=n_devices, incremental=False,
+                    cluster=cluster)
     _WORKER_CTX = (prims, psuccs, ppreds, grad_prim, family, sim)
 
 
 def _pool_cost(state: tuple) -> float:
-    groups, provider, next_gid, buckets = state
+    groups, provider, next_gid, buckets, bucket_algos = state
     prims, psuccs, ppreds, grad_prim, family, sim = _WORKER_CTX
     g = FusionGraph._from_parts(prims, psuccs, ppreds, groups, provider,
-                                next_gid, grad_prim, buckets, family=family)
+                                next_gid, grad_prim, buckets, family=family,
+                                bucket_algos=bucket_algos)
     return sim.cost(g)
 
 
@@ -105,7 +120,8 @@ class _CandidatePool:
 
         payload = pickle.dumps(
             (base.prims, base.psuccs, base.ppreds, base.grad_prim,
-             base.family_token(), sim.hw, sim.n_devices)
+             base.family_token(), sim.hw, sim.n_devices,
+             getattr(sim, "cluster", None))
         )
         # spawn: workers only import repro.core (pure python, no jax), and
         # forking a process that already holds jax's thread pools can hang
@@ -117,7 +133,8 @@ class _CandidatePool:
     def evaluate(self, graphs: Sequence[FusionGraph]) -> list[float]:
         futs = [
             self._ex.submit(
-                _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets)
+                _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets,
+                             g.bucket_algos)
             )
             for g in graphs
         ]
@@ -156,6 +173,14 @@ def backtracking_search(
     tick = itertools.count()
     cost_cache: dict = {}
     sims = 0
+    # the flat back-compat spec is algorithm-blind (every collective model
+    # degenerates to the legacy formula), so algo flips can never improve —
+    # drop the method instead of burning candidate evaluations on it.  Sims
+    # that expose no cluster at all (custom cost stubs, seed emulations)
+    # are treated the same so their trajectories match the flat default.
+    cluster = getattr(sim, "cluster", None)
+    if cluster is None or cluster.is_flat_compat:
+        methods = tuple(m for m in methods if m != METHOD_ALGO)
     pool = _make_pool(sim, g0, workers)
 
     def cost(g: FusionGraph) -> float:

@@ -34,8 +34,8 @@ affect:
   readiness is re-derived as the max completion over each bucket's provider
   groups.  Floating-point accumulation order matches the full replay, so
   delta results are **bit-identical** to a from-scratch run.
-* Tensor-fusion (bucket) mutations never perturb the compute stream: only
-  the O(B log B) communication pass is recomputed.
+* Tensor-fusion (bucket) and collective-algorithm mutations never perturb
+  the compute stream: only the O(B log B) communication pass is recomputed.
 
 The delta path **falls back to full replay** whenever it would not be
 exact: no cached ancestor state (evicted or never simulated), a journal
@@ -52,9 +52,10 @@ import heapq
 import itertools
 from collections import OrderedDict
 
+from ..cluster import COLLECTIVE_ALGOS, ClusterSpec, allreduce_coeffs
 from .costs import OracleEstimator, total_comm_time, total_compute_time
 from .graph import FusionGraph
-from .hw import Hardware, TPU_V5E, allreduce_time
+from .hw import Hardware, TPU_V5E
 
 _token_counter = itertools.count(1)
 
@@ -95,10 +96,25 @@ class Simulator:
 
     def __init__(self, estimator=None, hw: Hardware = TPU_V5E, n_devices: int = 256,
                  keep_timeline: bool = False, incremental: bool = True,
-                 state_cache_size: int = 64, max_journal: int = 24):
+                 state_cache_size: int = 64, max_journal: int = 24,
+                 cluster: ClusterSpec | None = None):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
+        # legacy (hw, n_devices) maps to the flat back-compat spec — comm
+        # times stay bit-identical to the seed's allreduce_time model.  A
+        # real ClusterSpec overrides n_devices and prices each bucket by its
+        # chosen collective algorithm (DESIGN.md Sec. 7).
+        if cluster is None:
+            cluster = ClusterSpec.flat(hw, n_devices)
+        else:
+            n_devices = cluster.n_devices
+        self.cluster = cluster
         self.n_devices = n_devices
+        # every collective model is linear in bytes: resolve the (C, D)
+        # pairs once so the hot comm pass is a dict hit + multiply-add
+        self._comm_coeffs = {
+            algo: allreduce_coeffs(cluster, algo) for algo in COLLECTIVE_ALGOS
+        }
         self.keep_timeline = keep_timeline
         self.incremental = incremental
         self.max_journal = max_journal
@@ -288,8 +304,14 @@ class Simulator:
         comm_busy = 0.0
         comm_finish = 0.0
         order = sorted(bucket_ready_at.items(), key=lambda kv: (kv[1], kv[0]))
+        coeffs = self._comm_coeffs
+        algos = g.bucket_algos
         for i, ready_t in order:
-            t = allreduce_time(g.bucket_bytes(g.buckets[i]), self.hw, self.n_devices)
+            nbytes = g.bucket_bytes(g.buckets[i])
+            if nbytes <= 0.0:
+                continue  # nothing to transfer: no latency D charged
+            c, d = coeffs[algos[i]]
+            t = c * nbytes + d
             start = max(chan_free, ready_t)
             chan_free = start + t
             comm_busy += t
@@ -323,5 +345,5 @@ class Simulator:
     # ------------------------------------------------------------- FO bound
     def full_overlap_bound(self, g: FusionGraph) -> float:
         comp = total_compute_time(g, self.estimator, self.hw)
-        comm = total_comm_time(g, self.hw, self.n_devices)
+        comm = total_comm_time(g, cluster=self.cluster)
         return max(comp, comm)

@@ -5,8 +5,13 @@ artifact.
     PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
     PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-3b \
         --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k --cluster a100_nvlink_ib
 
-Outputs one JSON per combination under experiments/dryrun/.
+Outputs one JSON per combination under experiments/dryrun/, including a
+``cluster`` block that prices the compiled collectives on a
+:class:`repro.cluster.ClusterSpec` (``--cluster <preset>`` to pick one of
+the preset zoo; default derives the topology from the mesh).
 """
 import os
 # MUST run before any jax import: device count locks on first init.
@@ -29,7 +34,9 @@ from ..distributed.train_step import (GradSyncStrategy, build_train_step,
                                       jit_train_step)
 from ..models import stacked as ST
 from ..optim import adamw
-from .mesh import make_production_mesh
+from ..cluster import (COLLECTIVE_ALGOS, best_algo, bucket_time, get_preset,
+                       list_presets)
+from .mesh import cluster_from_mesh, make_production_mesh
 from .shapes import (FSDP_ARCHS, GRAD_ACCUM, SHAPES, ZERO1_ARCHS,
                      applicability, cache_capacity, input_specs)
 
@@ -193,9 +200,34 @@ def build_dryrun_decode(cfg, mesh, shape: str, fsdp: bool = False):
     return jf, tuple(args)
 
 
+def collective_cost_model(coll: dict, spec) -> dict:
+    """Price the compiled HLO's collective traffic on a ClusterSpec: the
+    all-reduce traffic under each algorithm, and the cheapest choice.
+    Priced as ``count`` collectives of the mean size so the per-collective
+    latency term is charged once per op, not once for the aggregate.
+    A topology-blind consumer can still read ``ici_traffic_bytes``; this
+    block says what the traffic *costs* on the actual interconnect."""
+    ar = coll["per_op"].get("all-reduce", {})
+    ar_bytes = ar.get("bytes", 0.0)
+    count = max(int(ar.get("count", 0)), 1)
+    mean_bytes = ar_bytes / count
+    name, t = best_algo(mean_bytes, spec)
+    return {
+        "spec": spec.describe(),
+        "allreduce_bytes": ar_bytes,
+        "allreduce_count": ar.get("count", 0),
+        "allreduce_time_s": {
+            algo: count * bucket_time(mean_bytes, spec, algo)
+            for algo in COLLECTIVE_ALGOS
+        },
+        "best_algo": name,
+        "best_time_s": count * t,
+    }
+
+
 # -------------------------------------------------------------------- main
 def dryrun_one(arch: str, shape: str, multi_pod: bool,
-               verbose: bool = True) -> dict:
+               verbose: bool = True, cluster: str | None = None) -> dict:
     cfg0 = get_config(arch)
     ok, reason, cfg = applicability(cfg0, shape)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -231,6 +263,10 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool,
     ca = cost_analysis_compat(compiled)
     ma = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text())
+    # price the collectives on the requested preset, or on the topology the
+    # mesh itself implies (--cluster <preset> overrides the mesh bridge)
+    spec = get_preset(cluster) if cluster else cluster_from_mesh(mesh)
+    result["cluster"] = collective_cost_model(coll, spec)
     result.update({
         "kind": kind,
         "lower_s": round(t_lower, 2),
@@ -265,6 +301,10 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cluster", default=None, choices=list_presets(),
+                    help="cluster preset to price collectives on; "
+                         "default: derived from the mesh via "
+                         "cluster_from_mesh")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -279,7 +319,7 @@ def main():
                 tag = f"{arch}__{shape}__{'pod2x16x16' if mp else 'pod16x16'}"
                 path = os.path.join(args.out, tag + ".json")
                 try:
-                    res = dryrun_one(arch, shape, mp)
+                    res = dryrun_one(arch, shape, mp, cluster=args.cluster)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append(tag)

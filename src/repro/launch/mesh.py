@@ -13,6 +13,11 @@ default single device.
 JAX >= 0.5 grew ``jax.sharding.AxisType`` and a ``jax.make_mesh(...,
 axis_types=...)`` keyword; on stock JAX 0.4.x neither exists and every mesh
 axis is implicitly "auto" — so the fallback simply omits the argument.
+
+``cluster_from_mesh`` bridges a mesh to the topology model of
+:mod:`repro.cluster` (intra-pod axes -> one ICI level, a ``pod`` axis -> an
+outer DCN level) so dry-runs and searches can price collectives on the
+interconnect the mesh actually spans.
 """
 from __future__ import annotations
 
@@ -55,6 +60,34 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"--xla_force_host_platform_device_count=512 before importing "
             f"jax); have {len(devices)}")
     return make_mesh_compat(shape, axes, devices=devices[:n])
+
+
+def cluster_from_mesh(mesh, hw=None):
+    """``from_mesh`` bridge: lift a jax Mesh onto a
+    :class:`repro.cluster.ClusterSpec` (DESIGN.md Sec. 7).
+
+    Intra-pod axes collapse into the v5e-style ICI torus levels
+    (``tpu_pod_levels``, at ``hw.ici_bw``); a ``pod`` axis (the multi-pod
+    production mesh) becomes an outer DCN level (``dcn_level`` — same
+    constants as the ``cross_dc_2pod`` preset, single source).  Only
+    ``mesh.shape`` (an axis-name -> size mapping) is consulted, so any
+    mesh-shaped object works — no jax device state is touched.
+    """
+    from repro.cluster import ClusterSpec, dcn_level, tpu_pod_levels
+    from repro.core.hw import TPU_V5E
+
+    hw = hw or TPU_V5E
+    shape = dict(mesh.shape)
+    pods = int(shape.pop("pod", 1))
+    ici = 1
+    for v in shape.values():
+        ici *= int(v)
+    levels = tpu_pod_levels(ici, bw=hw.ici_bw)
+    if pods > 1:
+        levels = levels + (dcn_level(pods),)
+    name = "mesh_" + "x".join(str(s) for s in
+                              ([pods] if pods > 1 else []) + list(shape.values()))
+    return ClusterSpec(name, levels)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):

@@ -35,13 +35,19 @@ from .mesh import make_debug_mesh
 
 
 def search_strategy(cfg, params, batch, n_devices: int,
-                    unchanged_limit: int = 80, seed: int = 0):
-    """Trace the step, run the DisCo search, lift the bucket partition."""
+                    unchanged_limit: int = 80, seed: int = 0, cluster=None):
+    """Trace the step, run the DisCo search, lift the bucket partition.
+    ``cluster`` (a preset name or ClusterSpec) prices collectives on that
+    topology; default is the legacy flat model."""
     def loss(p, bt):
         return ST.loss_fn(p, cfg, bt)
 
+    if isinstance(cluster, str):
+        from ..cluster import get_preset
+
+        cluster = get_preset(cluster)
     g = profile_graph(trace_grad_graph(loss, params, batch))
-    sim = Simulator(n_devices=n_devices)
+    sim = Simulator(n_devices=n_devices, cluster=cluster)
     res = backtracking_search(g, sim, unchanged_limit=unchanged_limit,
                               seed=seed)
     strat = GradSyncStrategy.from_fusion_graph(res.best, params)
@@ -61,6 +67,11 @@ def main():
                     choices=["auto", "per-tensor", "ddp", "single-bucket"],
                     help="auto = DisCo backtracking search")
     ap.add_argument("--strategy-file", default=None)
+    from ..cluster import list_presets
+
+    ap.add_argument("--cluster", default=None, choices=list_presets(),
+                    help="cluster preset the strategy search prices "
+                         "collectives on")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=20)
@@ -91,7 +102,8 @@ def main():
         print(f"loaded strategy: {len(strat.buckets)} buckets")
     elif args.strategy == "auto":
         t0 = time.time()
-        strat, res = search_strategy(cfg, params, example, n_devices=dp)
+        strat, res = search_strategy(cfg, params, example, n_devices=dp,
+                                     cluster=args.cluster)
         print(f"DisCo search: {res.initial_cost * 1e6:.1f} -> "
               f"{res.best_cost * 1e6:.1f} us simulated "
               f"({res.simulations} sims, {time.time() - t0:.1f}s); "

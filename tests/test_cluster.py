@@ -1,0 +1,340 @@
+"""repro.cluster: topology specs, collective cost models, and their joint
+threading through the cost substrate / simulator / search (property tests
+run through tests/_propcheck.py when hypothesis is absent)."""
+import random
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import (ALGO_HIER, ALGO_RING, ALGO_TREE, COLLECTIVE_ALGOS,
+                           ClusterSpec, LinkLevel, PRESETS, best_algo,
+                           bucket_time, get_preset, hier_allreduce,
+                           list_presets, ring_allreduce, tree_allreduce)
+from repro.core import (FusionGraph, PrimOp, Simulator, backtracking_search,
+                        profile_graph, total_comm_time)
+from repro.core.graph import EW
+from repro.core.hw import TPU_V5E, allreduce_time
+from repro.core.search import ALL_METHODS, METHOD_ALGO, random_apply
+
+
+def chain_graph(n=12, grads=(3, 6, 9), grad_bytes=256.0):
+    prims = []
+    for i in range(n):
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW, flops=100.0, in_bytes=64.0,
+            out_bytes=64.0, time=1e-6,
+            grad_param=list(grads).index(i) if i in grads else -1,
+            grad_bytes=grad_bytes if i in grads else 0.0,
+            grad_sig="f32" if i in grads else ""))
+    return profile_graph(FusionGraph(prims, [(i, i + 1) for i in range(n - 1)]))
+
+
+# ------------------------------------------------------------ flat-spec shim
+@settings(max_examples=200, deadline=None)
+@given(nbytes=st.floats(min_value=1.0, max_value=1e10),
+       n=st.integers(1, 4096))
+def test_flat_shim_bit_identical_to_hw_allreduce(nbytes, n):
+    spec = ClusterSpec.flat(TPU_V5E, n)
+    assert ring_allreduce(nbytes, spec) == allreduce_time(nbytes, TPU_V5E, n)
+    # the default bucket algorithm routes through the same path
+    assert bucket_time(nbytes, spec) == allreduce_time(nbytes, TPU_V5E, n)
+
+
+def test_flat_shim_shape():
+    spec = ClusterSpec.flat(TPU_V5E, 64)
+    assert spec.is_flat_compat
+    assert spec.n_devices == 64
+    assert len(spec.levels) == 1
+
+
+# ----------------------------------------------------------------- presets
+def test_preset_zoo():
+    assert set(list_presets()) == set(PRESETS)
+    assert len(PRESETS) >= 6
+    for name in PRESETS:
+        spec = get_preset(name)
+        assert spec.n_devices >= 2
+        assert not spec.is_flat_compat
+        assert spec.describe()["levels"]
+    # the zoo covers hierarchy and heterogeneity
+    assert any(len(s.levels) >= 2 for s in PRESETS.values())
+    assert any(l.straggler > 1.0 for s in PRESETS.values() for l in s.levels)
+    with pytest.raises(KeyError):
+        get_preset("no_such_cluster")
+
+
+def _random_spec(rng: random.Random, max_levels=3) -> ClusterSpec:
+    n_levels = rng.randint(1, max_levels)
+    levels = []
+    for i in range(n_levels):
+        levels.append(LinkLevel(
+            name=f"l{i}", degree=rng.randint(2, 16),
+            bandwidth=10.0 ** rng.uniform(9, 11.7),
+            alpha=10.0 ** rng.uniform(-6.3, -3.5),
+            straggler=rng.choice([1.0, 1.0, 2.0, 8.0]),
+            contention=rng.choice([1.0, 1.0, 1.5, 4.0])))
+    return ClusterSpec("rand", tuple(levels))
+
+
+@settings(max_examples=120, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       x1=st.floats(min_value=0.0, max_value=1e9),
+       x2=st.floats(min_value=0.0, max_value=1e9))
+def test_collectives_monotonic_in_bytes(seed, x1, x2):
+    """Every model (and the auto choice) is monotonically non-decreasing in
+    message size, on random specs and the whole preset zoo."""
+    lo, hi = sorted((x1, x2))
+    rng = random.Random(seed)
+    specs = [_random_spec(rng), rng.choice(list(PRESETS.values())),
+             ClusterSpec.flat(TPU_V5E, rng.randint(1, 512))]
+    for spec in specs:
+        for algo in COLLECTIVE_ALGOS:
+            assert bucket_time(lo, spec, algo) <= bucket_time(hi, spec, algo) + 1e-15
+        assert best_algo(lo, spec)[1] <= best_algo(hi, spec)[1] + 1e-15
+
+
+@settings(max_examples=150, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       nbytes=st.floats(min_value=0.0, max_value=1e10))
+def test_hier_never_loses_to_ring_when_inter_host_bottlenecked(seed, nbytes):
+    """With inner levels uniformly faster (alpha and effective beta) than the
+    outer level — the inter-host-bottleneck regime — hierarchical AllReduce
+    is never worse than the flat ring."""
+    rng = random.Random(seed)
+    bw_out = 10.0 ** rng.uniform(9, 10.5)
+    alpha_out = 10.0 ** rng.uniform(-5.5, -3.5)
+    contention_out = rng.choice([1.0, 2.0, 4.0])
+    inner = LinkLevel(
+        "intra", rng.randint(2, 16),
+        # inner effective beta <= outer effective beta (even after the
+        # outer level's contention is discounted)
+        bandwidth=bw_out * rng.uniform(1.0, 50.0),
+        alpha=alpha_out * rng.uniform(0.01, 1.0))
+    outer = LinkLevel("inter", rng.randint(2, 16), bw_out, alpha_out,
+                      contention=contention_out)
+    spec = ClusterSpec("two_level", (inner, outer))
+    t_hier = hier_allreduce(nbytes, spec)
+    t_ring = ring_allreduce(nbytes, spec)
+    assert t_hier <= t_ring * (1 + 1e-12) + 1e-15
+
+
+def test_compat_spec_is_algorithm_blind():
+    """The seed's fixed-D linear model cannot distinguish algorithms: on
+    the flat back-compat spec every model degenerates to the legacy formula
+    (no fictitious tree/hier latencies from treating D as per-step)."""
+    spec = ClusterSpec.flat(TPU_V5E, 256)
+    for x in (1.0, 1e4, 1e8):
+        t = allreduce_time(x, TPU_V5E, 256)
+        for algo in COLLECTIVE_ALGOS:
+            assert bucket_time(x, spec, algo) == t
+
+
+def test_hier_without_inner_hierarchy_is_the_flat_ring():
+    """'Hierarchical' on a spec with no inner fan-out IS the flat ring —
+    it must pay the same contention, not be priced cheaper under a
+    different label."""
+    lone = ClusterSpec("ib_only",
+                       (LinkLevel("ib", 16, 25e9, 15e-6, contention=2.0),))
+    degenerate = ClusterSpec(
+        "unit_inner",
+        (LinkLevel("nvlink", 1, 300e9, 3e-6),
+         LinkLevel("ib", 16, 25e9, 15e-6, contention=2.0)))
+    for spec in (lone, degenerate):
+        for x in (1e3, 1e6, 1e9):
+            assert hier_allreduce(x, spec) == ring_allreduce(x, spec)
+
+
+def test_trivial_sizes_are_free():
+    for spec in [ClusterSpec.flat(TPU_V5E, 8), *PRESETS.values()]:
+        for algo in COLLECTIVE_ALGOS:
+            assert bucket_time(0.0, spec, algo) == 0.0
+            assert bucket_time(-1.0, spec, algo) == 0.0
+    one = ClusterSpec("solo", (LinkLevel("ici", 1, 50e9, 1e-6),))
+    for fn in (ring_allreduce, tree_allreduce, hier_allreduce):
+        assert fn(1e6, one) == 0.0
+
+
+def test_ring_tree_crossover_on_torus_axis():
+    """On a single torus axis the ring is neighbour-aligned (no contention)
+    while halving-doubling pays link dilation: tree wins small messages on
+    latency, ring wins large messages on bandwidth — a real trade-off, not
+    a dominated choice."""
+    spec = get_preset("tpu_v5e_pod_16")
+    assert tree_allreduce(1e3, spec) < ring_allreduce(1e3, spec)
+    assert ring_allreduce(1e8, spec) < tree_allreduce(1e8, spec)
+
+
+def test_coeffs_match_model_and_cache():
+    """bucket_time is one multiply-add over memoised (C, D) coefficients;
+    the coefficients must reproduce the model exactly."""
+    from repro.cluster import allreduce_coeffs
+
+    for spec in PRESETS.values():
+        for algo in COLLECTIVE_ALGOS:
+            c, d = allreduce_coeffs(spec, algo)
+            assert allreduce_coeffs(spec, algo) == (c, d)  # memo stable
+            for x in (1.0, 1e6):
+                assert bucket_time(x, spec, algo) == c * x + d
+
+
+def test_best_algo_is_argmin():
+    for spec in PRESETS.values():
+        for x in (1e2, 1e5, 1e8):
+            name, t = best_algo(x, spec)
+            times = {a: bucket_time(x, spec, a) for a in COLLECTIVE_ALGOS}
+            assert t == min(times.values())
+            assert times[name] == t
+
+
+def test_hier_beats_ring_on_interhost_presets():
+    """The zoo contains inter-host-bottlenecked presets where the
+    hierarchical algorithm strictly beats the flat ring at DNN gradient
+    sizes (the fig_cluster_sweep acceptance bar)."""
+    winners = [
+        name for name, spec in PRESETS.items()
+        if hier_allreduce(1e8, spec) < ring_allreduce(1e8, spec)
+    ]
+    assert "a100_nvlink_ib" in winners
+    assert "cross_dc_2pod" in winners
+    assert len(winners) >= 2
+
+
+# --------------------------------------------------- zero-byte bucket fix
+def test_zero_byte_bucket_costs_nothing():
+    g = chain_graph(grads=(3, 6, 9), grad_bytes=0.0)
+    assert len(g.buckets) == 3
+    assert total_comm_time(g, TPU_V5E, 64) == 0.0
+    r = Simulator(n_devices=64).run(g)
+    assert r.comm_time == 0.0
+    assert r.comm_finish == 0.0
+    # and on a hierarchical spec through every algorithm
+    sim = Simulator(cluster=get_preset("a100_nvlink_ib"))
+    h = g.clone()
+    for i, a in enumerate(COLLECTIVE_ALGOS):
+        h.set_bucket_algo(i, a)
+    assert sim.run(h).comm_time == 0.0
+
+
+# ------------------------------------------------- threading & the search
+def test_simulator_flat_default_unchanged():
+    """Default-constructed Simulator == explicit flat spec == seed values."""
+    g = chain_graph()
+    r1 = Simulator(n_devices=64).run(g)
+    r2 = Simulator(cluster=ClusterSpec.flat(TPU_V5E, 64)).run(g)
+    assert r1.comm_time == r2.comm_time
+    assert r1.iteration_time == r2.iteration_time
+    exp = sum(allreduce_time(256.0, TPU_V5E, 64) for _ in range(3))
+    assert r1.comm_time == exp
+
+
+def test_cluster_overrides_n_devices():
+    spec = get_preset("a100_nvlink_ib")
+    sim = Simulator(n_devices=7, cluster=spec)
+    assert sim.n_devices == spec.n_devices == 32
+
+
+def test_algo_choice_changes_cost_and_signatures():
+    spec = get_preset("cross_dc_2pod")
+    sim = Simulator(cluster=spec)
+    g = chain_graph(grad_bytes=float(1 << 22))
+    c_ring = sim.cost(g)
+    h = g.clone()
+    with pytest.raises(ValueError):
+        h.set_bucket_algo(0, "heir")  # typo fails fast at the call site
+    assert h.set_bucket_algo(0, ALGO_HIER)
+    assert not h.set_bucket_algo(0, ALGO_HIER)  # no-op choice rejected
+    assert h.fast_signature() != g.fast_signature()
+    assert h.signature() != g.signature()
+    c_hier = sim.cost(h)
+    assert c_hier != c_ring
+    # merged buckets keep the leading bucket's algorithm
+    assert h.merge_buckets(0, 1)
+    assert h.bucket_algos[0] == ALGO_HIER and len(h.bucket_algos) == 2
+
+
+def test_incremental_equals_full_with_algo_mutations():
+    """Golden equivalence extends to the cluster dimension: delta replay
+    after algo/bucket/fusion mutations matches full replay bit-for-bit on a
+    hierarchical spec."""
+    spec = get_preset("h100_superpod")
+    sim_inc = Simulator(cluster=spec, incremental=True)
+    sim_full = Simulator(cluster=spec, incremental=False)
+    rng = random.Random(3)
+    parent = chain_graph(n=16, grads=(3, 6, 9, 12), grad_bytes=float(1 << 20))
+    saw_algo = False
+    for step in range(50):
+        child = parent.clone()
+        for _ in range(rng.randint(1, 3)):
+            m = rng.choice(ALL_METHODS)
+            changed = random_apply(child, m, 1, rng)
+            saw_algo |= changed and m == METHOD_ALGO
+        ri = sim_inc.run(child)
+        rf = sim_full.run(child)
+        assert ri.iteration_time == rf.iteration_time, step
+        assert ri.comm_time == rf.comm_time, step
+        assert ri.comm_finish == rf.comm_finish, step
+        if rng.random() < 0.6:
+            parent = child
+    assert saw_algo, "algo mutation never drawn"
+    assert sim_inc.stats["delta"] > 0
+
+
+def test_search_is_joint_over_algorithms():
+    """On an inter-host-bottlenecked preset the search flips buckets away
+    from the default ring (the joint dimension actually gets used)."""
+    spec = get_preset("a100_straggler_ib")
+    g = chain_graph(n=20, grads=(3, 7, 11, 15), grad_bytes=float(1 << 24))
+    res = backtracking_search(g, Simulator(cluster=spec),
+                              unchanged_limit=60, max_steps=120, seed=0)
+    algos = set(res.best.bucket_algos)
+    assert algos - {ALGO_RING}, algos
+    assert res.best_cost <= res.initial_cost
+
+
+def test_flat_search_skips_algo_method():
+    """On the algorithm-blind flat spec the search drops METHOD_ALGO: no
+    candidate evaluations are spent on flips that cannot improve, and the
+    winning strategy stays all-ring."""
+    g = chain_graph(n=16, grads=(3, 6, 9, 12), grad_bytes=float(1 << 20))
+    res = backtracking_search(g, Simulator(n_devices=64),
+                              unchanged_limit=30, max_steps=50, seed=0)
+    assert set(res.best.bucket_algos) == {ALGO_RING}
+
+
+def test_worker_pool_ships_cluster_and_algos():
+    spec = get_preset("a100_nvlink_ib")
+    g = chain_graph(n=10, grads=(4, 8), grad_bytes=float(1 << 20))
+    kw = dict(unchanged_limit=20, max_steps=25, seed=5)
+    r_ser = backtracking_search(g, Simulator(cluster=spec), **kw)
+    r_par = backtracking_search(g, Simulator(cluster=spec), workers=2, **kw)
+    assert r_par.best_cost == r_ser.best_cost
+    assert r_par.best.signature() == r_ser.best.signature()
+
+
+def test_cluster_from_mesh_bridge():
+    """The launch bridge maps mesh axes to link levels (pure shape logic —
+    no jax device state needed)."""
+    import types
+
+    from repro.launch.mesh import cluster_from_mesh
+
+    single = cluster_from_mesh(types.SimpleNamespace(
+        shape={"data": 16, "model": 16}))
+    assert single.n_devices == 256
+    assert [l.name for l in single.levels] == ["ici_x", "ici_y"]
+    assert single.levels[0].bandwidth == TPU_V5E.ici_bw
+
+    multi = cluster_from_mesh(types.SimpleNamespace(
+        shape={"pod": 2, "data": 16, "model": 16}))
+    assert multi.n_devices == 512
+    assert [l.name for l in multi.levels] == ["ici_x", "ici_y", "dcn"]
+    assert multi.levels[-1].degree == 2
+    # DCN is the bottleneck of the multi-pod mesh, and the bridge shares
+    # its level constants with the preset zoo (single source)
+    assert multi.bottleneck().name == "dcn"
+    assert multi.levels[-1] == get_preset("cross_dc_2pod").levels[-1]
+    assert multi.levels[:2] == get_preset("tpu_v5e_pod_256").levels
+
+    small = cluster_from_mesh(types.SimpleNamespace(
+        shape={"data": 4, "model": 2}))
+    assert small.n_devices == 8
