@@ -22,6 +22,12 @@ Measures, per config:
         [--cands N] [--steps N] [--workers N] [--seed-budget SECONDS]
 
 Writes ``experiments/perf/search_engine.json``.
+
+``--smoke`` is the CI regression lane (nightly workflow): a small bounded
+run on ``transformer-paper`` that **fails** (exit 1) when the incremental
+engine's candidate-evaluation throughput drops below ``--smoke-min-speedup``
+x the seed engine — catching event-engine (or other comm-pass) overhead
+creeping onto the search hot path.
 """
 from __future__ import annotations
 
@@ -167,7 +173,17 @@ def main():
     ap.add_argument("--seed-budget", type=float, default=30.0,
                     help="wall-clock budget for the deepseek scale probe")
     ap.add_argument("--skip-deepseek", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI regression check: bounded run, fail if "
+                         "the incremental engine's throughput advantage "
+                         "over the seed engine regresses")
+    ap.add_argument("--smoke-min-speedup", type=float, default=2.0)
     args = ap.parse_args()
+    if args.smoke:
+        args.archs = "transformer-paper"
+        args.cands = min(args.cands, 200)
+        args.steps = min(args.steps, 25)
+        args.skip_deepseek = True
     os.makedirs(OUT, exist_ok=True)
     report: dict = {}
     for arch in args.archs.split(","):
@@ -195,6 +211,17 @@ def main():
     path = os.path.join(OUT, "search_engine.json")
     json.dump(report, open(path, "w"), indent=1)
     print(f"wrote {path}")
+    if args.smoke:
+        speedups = {a: r["throughput"]["speedup"] for a, r in report.items()
+                    if "throughput" in r}
+        bad = {a: s for a, s in speedups.items()
+               if s < args.smoke_min_speedup}
+        if bad:
+            print(f"SMOKE FAIL: incremental/seed throughput below "
+                  f"{args.smoke_min_speedup}x: {bad}")
+            raise SystemExit(1)
+        print(f"smoke OK: incremental/seed throughput {speedups} "
+              f"(floor {args.smoke_min_speedup}x)")
 
 
 if __name__ == "__main__":

@@ -13,14 +13,20 @@ worker pool spawns bare interpreters that must import this cheaply; the
 from .topology import (ClusterSpec, LinkLevel, PRESETS, dcn_level,
                        get_preset, list_presets, tpu_pod_levels)
 from .collectives import (ALGO_HIER, ALGO_RING, ALGO_TREE, ALGORITHMS,
-                          COLLECTIVE_ALGOS, DEFAULT_ALGO, allreduce_coeffs,
-                          best_algo, bucket_time, hier_allreduce,
-                          ring_allreduce, tree_allreduce)
+                          BUCKET_COMM_KINDS, COLLECTIVE_ALGOS, CommPhase,
+                          DEFAULT_ALGO, DEFAULT_COMM_KIND, KIND_AG, KIND_AR,
+                          KIND_RS, KIND_RS_AG, allreduce_coeffs, best_algo,
+                          bucket_time, comm_coeffs, comm_time,
+                          hier_allreduce, phases, ring_allreduce,
+                          tree_allreduce)
 
 __all__ = [
     "ClusterSpec", "LinkLevel", "PRESETS", "dcn_level", "get_preset",
     "list_presets", "tpu_pod_levels",
     "ALGO_HIER", "ALGO_RING", "ALGO_TREE", "ALGORITHMS", "COLLECTIVE_ALGOS",
-    "DEFAULT_ALGO", "allreduce_coeffs", "best_algo", "bucket_time",
-    "hier_allreduce", "ring_allreduce", "tree_allreduce",
+    "BUCKET_COMM_KINDS", "CommPhase", "DEFAULT_ALGO", "DEFAULT_COMM_KIND",
+    "KIND_AG", "KIND_AR", "KIND_RS", "KIND_RS_AG",
+    "allreduce_coeffs", "best_algo", "bucket_time", "comm_coeffs",
+    "comm_time", "hier_allreduce", "phases", "ring_allreduce",
+    "tree_allreduce",
 ]

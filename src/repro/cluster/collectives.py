@@ -42,9 +42,30 @@ it — ``bucket_time`` in the simulator's hot comm pass is then one
 multiply-add, not a topology walk.  All models return 0.0 for empty
 (<= 0 byte) transfers: an AllReduce that moves nothing costs nothing
 (zero-byte-bucket fix, DESIGN.md Sec. 7).
+
+Phase decomposition (DESIGN.md Sec. 8)
+--------------------------------------
+
+``phases(spec, algo, kind)`` decomposes a collective into the sequence of
+:class:`CommPhase` steps the event engine (:mod:`repro.core.events`)
+schedules on per-link-level resources: hierarchical AllReduce becomes
+intra-host reduce-scatter -> inter-host allreduce -> intra-host all-gather,
+each phase tagged with the ``LinkLevel`` index it occupies and carrying its
+own linear ``(c, d)`` pair.  Phase coefficients sum to the opaque-interval
+coefficients (same physics, finer granularity), so the serialized engine
+and the phase engine agree on total channel work.
+
+Besides AllReduce (``kind="ar"``) the same machinery prices the ZeRO-3
+gradient path: ``kind="rs"`` (reduce-scatter of a gradient bucket across
+all devices) and ``kind="ag"`` (all-gather of the updated shard), each
+exactly one half of the matching AllReduce — ring RS + ring AG equals ring
+AR term by term, so the ``rs_ag`` bucket kind never gets a fictitious
+discount.  ``BUCKET_COMM_KINDS`` lists the per-bucket choices the search
+mutates (``FusionGraph.set_bucket_comm``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -58,6 +79,15 @@ ALGO_HIER = "hier"
 COLLECTIVE_ALGOS = (ALGO_RING, ALGO_TREE, ALGO_HIER)
 
 DEFAULT_ALGO = ALGO_RING
+
+# communication-op kinds a gradient bucket can use: one fused AllReduce
+# (the paper's DDP path) or ZeRO-3-style reduce-scatter + all-gather
+KIND_AR = "ar"
+KIND_RS = "rs"
+KIND_AG = "ag"
+KIND_RS_AG = "rs_ag"
+BUCKET_COMM_KINDS = (KIND_AR, KIND_RS_AG)
+DEFAULT_COMM_KIND = KIND_AR
 
 
 # ------------------------------------------------------------- coefficients
@@ -185,3 +215,182 @@ def best_algo(nbytes: float, spec: ClusterSpec) -> tuple[str, float]:
         if t < best_t:
             best_name, best_t = name, t
     return best_name, best_t
+
+
+# ------------------------------------------------------ phase decomposition
+PHASE_RS = "reduce_scatter"
+PHASE_AR = "allreduce"
+PHASE_AG = "all_gather"
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPhase:
+    """One step of a collective: a linear-cost transfer occupying exactly one
+    link level.  ``seconds(x)`` is the phase's duration at full level
+    bandwidth; under fair-share contention the event engine stretches it."""
+    kind: str     # PHASE_RS / PHASE_AR / PHASE_AG
+    level: int    # index into spec.levels
+    c: float      # seconds/byte at full bandwidth
+    d: float      # fixed latency seconds
+
+    def seconds(self, nbytes: float) -> float:
+        return self.c * nbytes + self.d
+
+
+def _ring_phases(spec: ClusterSpec, kind: str) -> tuple[CommPhase, ...]:
+    c, d = _ring_coeffs(spec)
+    if c == 0.0 and d == 0.0:
+        return ()
+    b = spec.bottleneck_index()
+    if kind == KIND_AR:
+        return (CommPhase(PHASE_AR, b, c, d),)
+    # ring reduce-scatter / all-gather: (N-1)/N volume and (N-1) steps —
+    # exactly one half of the AllReduce, term by term
+    pk = PHASE_RS if kind == KIND_RS else PHASE_AG
+    return (CommPhase(pk, b, 0.5 * c, 0.5 * d),)
+
+
+def _tree_phases(spec: ClusterSpec, kind: str) -> tuple[CommPhase, ...]:
+    """Recursive-halving reduce-scatter inward / recursive-doubling
+    all-gather outward; each level's contribution of ``_tree_coeffs`` splits
+    half to the RS leg and half to the AG mirror."""
+    if spec.n_devices <= 1:
+        return ()
+    rs: list[CommPhase] = []
+    ag: list[CommPhase] = []
+    below = 1
+    for i, l in enumerate(spec.levels):
+        deg = l.degree
+        if deg <= 1:
+            continue
+        beta = l.beta_contended()
+        steps = math.ceil(math.log2(deg))
+        c_l = (1.0 / below - 1.0 / (below * deg)) * beta
+        d_l = steps * l.alpha
+        if deg & (deg - 1):
+            c_l += (1.0 / below) * beta
+            d_l += l.alpha
+        rs.append(CommPhase(PHASE_RS, i, c_l, d_l))
+        ag.append(CommPhase(PHASE_AG, i, c_l, d_l))
+        below *= deg
+    ag.reverse()
+    if kind == KIND_RS:
+        return tuple(rs)
+    if kind == KIND_AG:
+        return tuple(ag)
+    return tuple(rs + ag)
+
+
+def _hier_phases(spec: ClusterSpec, kind: str) -> tuple[CommPhase, ...]:
+    """Per-level rings: reduce-scatter inward, the outermost level's
+    collective on the residual shard, all-gather back outward (the phase
+    sequence of ``_hier_coeffs``)."""
+    if spec.n_devices <= 1:
+        return ()
+    inner_fanout = 1
+    for l in spec.levels[:-1]:
+        inner_fanout *= l.degree
+    if inner_fanout <= 1:
+        return _ring_phases(spec, kind)  # no inner hierarchy: IS the flat ring
+    rs: list[CommPhase] = []
+    ag: list[CommPhase] = []
+    scale = 1.0
+    for i, l in enumerate(spec.levels[:-1]):
+        deg = l.degree
+        if deg > 1:
+            c_l = ((deg - 1) / deg) * scale * l.beta
+            d_l = (deg - 1) * l.alpha
+            rs.append(CommPhase(PHASE_RS, i, c_l, d_l))
+            ag.append(CommPhase(PHASE_AG, i, c_l, d_l))
+        scale /= deg
+    ag.reverse()
+    outer = spec.levels[-1]
+    oi = len(spec.levels) - 1
+    h = outer.degree
+    mid: list[CommPhase] = []
+    if h > 1:
+        c_o = ((h - 1) / h) * scale * outer.beta
+        d_o = (h - 1) * outer.alpha
+        if kind == KIND_AR:
+            mid = [CommPhase(PHASE_AR, oi, 2.0 * c_o, 2.0 * d_o)]
+        elif kind == KIND_RS:
+            mid = [CommPhase(PHASE_RS, oi, c_o, d_o)]
+        else:
+            mid = [CommPhase(PHASE_AG, oi, c_o, d_o)]
+    if kind == KIND_RS:
+        return tuple(rs + mid)
+    if kind == KIND_AG:
+        return tuple(mid + ag)
+    return tuple(rs + mid + ag)
+
+
+_PHASE_FNS = {
+    ALGO_RING: _ring_phases,
+    ALGO_TREE: _tree_phases,
+    ALGO_HIER: _hier_phases,
+}
+
+
+def _phases_uncached(spec: ClusterSpec, algo: str,
+                     kind: str) -> tuple[CommPhase, ...]:
+    if kind == KIND_RS_AG:
+        return (_phases_uncached(spec, algo, KIND_RS)
+                + _phases_uncached(spec, algo, KIND_AG))
+    if spec.compat_hw is not None:
+        # the legacy model is one opaque channel: a single phase carrying the
+        # seed's exact (C, D); RS/AG are each half of it
+        c, d = allreduce_coeffs(spec, algo)
+        if kind == KIND_AR:
+            return (CommPhase(PHASE_AR, 0, c, d),)
+        pk = PHASE_RS if kind == KIND_RS else PHASE_AG
+        return (CommPhase(pk, 0, 0.5 * c, 0.5 * d),)
+    return _PHASE_FNS[algo](spec, kind)
+
+
+@functools.lru_cache(maxsize=None)
+def phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
+           kind: str = KIND_AR) -> tuple[CommPhase, ...]:
+    """Phase decomposition of one collective of ``kind`` under ``algo`` —
+    the schedule unit of the event engine (DESIGN.md Sec. 8)."""
+    if kind not in (KIND_AR, KIND_RS, KIND_AG, KIND_RS_AG):
+        raise ValueError(f"unknown comm kind {kind!r}")
+    return _phases_uncached(spec, algo, kind)
+
+
+def _comm_coeffs_uncached(spec: ClusterSpec, algo: str,
+                          kind: str) -> tuple[float, float]:
+    if kind == KIND_AR:
+        # delegate so the AllReduce path stays bit-identical to the
+        # memoised legacy coefficients
+        if spec.compat_hw is not None:
+            return allreduce_coeffs(spec, algo)
+        return _COEFF_FNS[algo](spec)
+    c = 0.0
+    d = 0.0
+    for p in _phases_uncached(spec, algo, kind):
+        c += p.c
+        d += p.d
+    return c, d
+
+
+@functools.lru_cache(maxsize=None)
+def comm_coeffs(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
+                kind: str = KIND_AR) -> tuple[float, float]:
+    """``(C, D)`` of the opaque-interval cost of one collective of ``kind``
+    (``ar`` / ``rs`` / ``ag`` / ``rs_ag``) — ``kind="ar"`` is exactly
+    :func:`allreduce_coeffs`."""
+    if kind == KIND_AR:
+        return allreduce_coeffs(spec, algo)
+    if kind not in (KIND_RS, KIND_AG, KIND_RS_AG):
+        raise ValueError(f"unknown comm kind {kind!r}")
+    return _comm_coeffs_uncached(spec, algo, kind)
+
+
+def comm_time(nbytes: float, spec: ClusterSpec, algo: str = DEFAULT_ALGO,
+              kind: str = KIND_AR) -> float:
+    """Serialized (single-channel) cost of one collective of ``kind``;
+    empty transfers are free."""
+    if nbytes <= 0.0:
+        return 0.0
+    c, d = comm_coeffs(spec, algo, kind)
+    return c * nbytes + d

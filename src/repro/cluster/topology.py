@@ -110,18 +110,22 @@ class ClusterSpec:
             sizes.append(sizes[-1] * l.degree)
         return sizes
 
-    def bottleneck(self) -> LinkLevel:
-        """The level a flat collective is gated by (max contended beta over
-        levels with fan-out, outermost wins ties — long-haul links
-        dominate)."""
-        cands = [l for l in self.levels if l.degree > 1]
+    def bottleneck_index(self) -> int:
+        """Index of the level a flat collective is gated by (max contended
+        beta over levels with fan-out, outermost wins ties — long-haul
+        links dominate)."""
+        cands = [i for i, l in enumerate(self.levels) if l.degree > 1]
         if not cands:
-            return self.levels[-1]
+            return len(self.levels) - 1
         best = cands[0]
-        for l in cands[1:]:
-            if l.beta_contended() >= best.beta_contended():
-                best = l
+        for i in cands[1:]:
+            if (self.levels[i].beta_contended()
+                    >= self.levels[best].beta_contended()):
+                best = i
         return best
+
+    def bottleneck(self) -> LinkLevel:
+        return self.levels[self.bottleneck_index()]
 
     def describe(self) -> dict:
         return {

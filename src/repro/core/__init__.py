@@ -3,20 +3,24 @@ from .hw import Hardware, TPU_V5E, allreduce_time, ring_allreduce_coeffs
 from .costs import (OracleEstimator, group_time_oracle, prim_time,
                     profile_graph, total_comm_time, total_compute_time)
 from .simulator import SimResult, Simulator
-from .search import (ALL_METHODS, METHOD_ALGO, METHOD_DUP, METHOD_NONDUP,
-                     METHOD_TENSOR, SearchResult, backtracking_search,
-                     random_apply)
-from .baselines import BASELINES, assign_bucket_algos, evaluate_baselines
+from .events import CommEngine, CommJob
+from .search import (ALL_METHODS, METHOD_ALGO, METHOD_COMM, METHOD_DUP,
+                     METHOD_NONDUP, METHOD_TENSOR, SearchResult,
+                     backtracking_search, random_apply)
+from .baselines import (BASELINES, assign_bucket_algos, assign_bucket_comm,
+                        evaluate_baselines)
 
 __all__ = [
     "DOT", "EW", "FusionGraph", "LAYOUT", "OPAQUE", "PrimOp", "REDUCE",
     "Hardware", "TPU_V5E", "allreduce_time", "ring_allreduce_coeffs",
     "OracleEstimator", "group_time_oracle", "prim_time", "profile_graph",
     "total_comm_time", "total_compute_time",
-    "SimResult", "Simulator",
-    "ALL_METHODS", "METHOD_ALGO", "METHOD_DUP", "METHOD_NONDUP",
-    "METHOD_TENSOR", "SearchResult", "backtracking_search", "random_apply",
-    "BASELINES", "assign_bucket_algos", "evaluate_baselines",
+    "SimResult", "Simulator", "CommEngine", "CommJob",
+    "ALL_METHODS", "METHOD_ALGO", "METHOD_COMM", "METHOD_DUP",
+    "METHOD_NONDUP", "METHOD_TENSOR", "SearchResult", "backtracking_search",
+    "random_apply",
+    "BASELINES", "assign_bucket_algos", "assign_bucket_comm",
+    "evaluate_baselines",
     "graph_from_jaxpr", "trace_grad_graph",
 ]
 

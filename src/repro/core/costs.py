@@ -20,7 +20,7 @@ from __future__ import annotations
 import math
 from typing import Iterable, Sequence
 
-from ..cluster import ClusterSpec, bucket_time
+from ..cluster import ClusterSpec, comm_time
 from .graph import DOT, EW, FusionGraph, LAYOUT, OPAQUE, PrimOp, REDUCE
 from .hw import Hardware, TPU_V5E
 
@@ -57,6 +57,7 @@ def profile_graph(g: FusionGraph, hw: Hardware = TPU_V5E) -> FusionGraph:
     return FusionGraph._from_parts(
         prims, g.psuccs, g.ppreds, g.groups, g.provider, g._next_gid,
         g.grad_prim, g.buckets, bucket_algos=g.bucket_algos,
+        bucket_comm=g.bucket_comm,
     )
 
 
@@ -140,10 +141,11 @@ def total_comm_time(g: FusionGraph, hw: Hardware = TPU_V5E,
                     n_devices: int = 256,
                     cluster: ClusterSpec | None = None) -> float:
     """Busy time of the communication channel: each bucket priced by its
-    chosen collective algorithm on ``cluster`` (a legacy ``(hw, n_devices)``
-    call maps to the flat back-compat spec — bit-identical to the seed's
-    per-bucket ``allreduce_time`` sum).  Empty/zero-byte buckets transfer
-    nothing and are skipped (no fixed latency D charged)."""
+    chosen collective algorithm and comm kind (AllReduce or ZeRO-3 RS+AG)
+    on ``cluster`` (a legacy ``(hw, n_devices)`` call maps to the flat
+    back-compat spec — bit-identical to the seed's per-bucket
+    ``allreduce_time`` sum).  Empty/zero-byte buckets transfer nothing and
+    are skipped (no fixed latency D charged)."""
     if cluster is None:
         cluster = ClusterSpec.flat(hw, n_devices)
     total = 0.0
@@ -151,5 +153,5 @@ def total_comm_time(g: FusionGraph, hw: Hardware = TPU_V5E,
         nb = g.bucket_bytes(b)
         if nb <= 0.0:
             continue
-        total += bucket_time(nb, cluster, g.bucket_algos[i])
+        total += comm_time(nb, cluster, g.bucket_algos[i], g.bucket_comm[i])
     return total

@@ -1,0 +1,208 @@
+"""Phase-level, multi-resource communication event engine (DESIGN.md Sec. 8).
+
+The seed simulator priced communication as one serialized channel: each
+bucket's collective was a single opaque interval, FIFO in readiness order.
+That model cannot see the effects that dominate on hierarchical clusters —
+two buckets whose phases occupy *different* link levels (one still inside
+its intra-host reduce-scatter while another crosses the inter-host fabric)
+genuinely overlap, and buckets contending on the *same* level share its
+bandwidth rather than queueing politely.
+
+This engine schedules :class:`CommJob` s (one per gradient bucket) as
+sequences of :class:`repro.cluster.collectives.CommPhase` steps over one
+resource per :class:`~repro.cluster.topology.LinkLevel`:
+
+* ``streams`` bounds how many jobs are in flight concurrently (NCCL-channel
+  style).  ``streams=1`` is the **serialized channel**: jobs run one at a
+  time as opaque intervals, and the arithmetic is bit-identical to the
+  seed's ``_comm_pass`` (same ordering, same ``c*x + d`` multiply-add, same
+  ``max(chan_free, ready)`` — the PR-1/PR-2 golden equivalence tests pass
+  unmodified).
+* With ``streams > 1`` each job executes its phase sequence in order; when
+  ``k`` active phases occupy one level, each progresses at rate ``1/k``
+  (fair-share / processor-sharing fluid model), so no level is ever driven
+  past its capacity.  Phases on different levels proceed at full rate
+  concurrently — the pipelining win of hierarchical collectives.
+
+The engine is jax-free and allocation-light: phase decompositions and
+opaque-interval coefficients are memoised per (algo, kind), so the hot
+serialized path is a dict hit + multiply-add exactly like the seed.
+
+Timeline records are 6-tuples ``(kind, bucket, algo, level, start, end)``
+where ``kind`` is ``allreduce`` / ``reduce_scatter`` / ``all_gather`` (or
+the opaque ``rs_ag`` in serialized mode), distinguishing ring vs tree vs
+hierarchical phases and the ZeRO-3 RS/AG path in ``--timeline`` output.
+``record_load=True`` additionally keeps per-level utilisation segments
+``(level, t0, t1, work_seconds)`` — the seconds of work the level actually
+advanced during the segment — so tests can assert no oversubscription from
+observed progress (``work_seconds <= t1 - t0``), not from the prescribed
+shares.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..cluster import ClusterSpec
+from ..cluster.collectives import (KIND_AR, KIND_RS_AG, comm_coeffs, phases)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommJob:
+    """One bucket's collective: ready time, volume, and how to run it."""
+    bucket: int
+    ready: float
+    nbytes: float
+    algo: str = "ring"
+    kind: str = KIND_AR
+
+
+class _Active:
+    """A job in flight: its phase worklist and current-phase progress."""
+    __slots__ = ("bucket", "algo", "steps", "idx", "level", "kind",
+                 "remaining", "work", "phase_start")
+
+    def __init__(self, job: CommJob, steps: list[tuple[str, int, float]]):
+        self.bucket = job.bucket
+        self.algo = job.algo
+        self.steps = steps     # [(phase_kind, level, work_seconds), ...]
+        self.idx = -1
+
+    def advance(self, now: float) -> bool:
+        """Move to the next non-empty phase; False when the job is done."""
+        while True:
+            self.idx += 1
+            if self.idx >= len(self.steps):
+                return False
+            kind, level, work = self.steps[self.idx]
+            if work > 0.0:
+                self.kind = kind
+                self.level = level
+                self.work = work
+                self.remaining = work
+                self.phase_start = now
+                return True
+
+
+class CommEngine:
+    """Schedules one iteration's communication jobs on the link levels of a
+    :class:`ClusterSpec`; returns ``(busy_seconds, finish_time)``."""
+
+    def __init__(self, spec: ClusterSpec, streams: int = 1,
+                 record_load: bool = False):
+        self.spec = spec
+        self.streams = max(int(streams), 1)
+        self.record_load = record_load
+        self.level_load: list[tuple[int, float, float, float]] = []
+        self._coeffs: dict[tuple[str, str], tuple[float, float]] = {}
+        self._steps: dict[tuple[str, str], tuple] = {}
+        self._chan_level = spec.levels[spec.bottleneck_index()].name
+
+    # ------------------------------------------------------------- helpers
+    def _job_coeffs(self, algo: str, kind: str) -> tuple[float, float]:
+        key = (algo, kind)
+        cd = self._coeffs.get(key)
+        if cd is None:
+            cd = comm_coeffs(self.spec, algo, kind)
+            self._coeffs[key] = cd
+        return cd
+
+    def _job_steps(self, job: CommJob) -> list[tuple[str, int, float]]:
+        key = (job.algo, job.kind)
+        ph = self._steps.get(key)
+        if ph is None:
+            ph = phases(self.spec, job.algo, job.kind)
+            self._steps[key] = ph
+        return [(p.kind, p.level, p.c * job.nbytes + p.d) for p in ph]
+
+    # ----------------------------------------------------------------- run
+    def run(self, jobs: list[CommJob],
+            timeline: list | None = None) -> tuple[float, float]:
+        # each run is an independent schedule starting at t=0: utilisation
+        # segments must not accumulate across runs
+        self.level_load = []
+        if self.streams == 1:
+            return self._run_serialized(jobs, timeline)
+        return self._run_phased(jobs, timeline)
+
+    def _run_serialized(self, jobs: list[CommJob],
+                        timeline: list | None) -> tuple[float, float]:
+        # the seed's comm pass: buckets transfer in order of readiness
+        # (ties by index), serialized on one channel.  Arithmetic must stay
+        # bit-identical: one c*x + d per job, start = max(chan_free, ready).
+        chan_free = 0.0
+        busy = 0.0
+        finish = 0.0
+        for job in sorted(jobs, key=lambda j: (j.ready, j.bucket)):
+            if job.nbytes <= 0.0:
+                continue  # nothing to transfer: no latency D charged
+            c, d = self._job_coeffs(job.algo, job.kind)
+            t = c * job.nbytes + d
+            start = max(chan_free, job.ready)
+            chan_free = start + t
+            busy += t
+            finish = chan_free
+            if timeline is not None:
+                kind = "allreduce" if job.kind == KIND_AR else KIND_RS_AG
+                timeline.append((kind, job.bucket, job.algo,
+                                 self._chan_level, start, chan_free))
+        return busy, finish
+
+    def _run_phased(self, jobs: list[CommJob],
+                    timeline: list | None) -> tuple[float, float]:
+        pending = sorted((j for j in jobs if j.nbytes > 0.0),
+                         key=lambda j: (j.ready, j.bucket), reverse=True)
+        active: list[_Active] = []
+        t = 0.0
+        busy = 0.0
+        finish = 0.0
+        names = [l.name for l in self.spec.levels]
+        while pending or active:
+            while pending and len(active) < self.streams \
+                    and pending[-1].ready <= t:
+                job = pending.pop()
+                a = _Active(job, self._job_steps(job))
+                if a.advance(t):
+                    active.append(a)
+                else:
+                    finish = max(finish, t)  # all-empty phase list
+            if not active:
+                t = pending[-1].ready
+                continue
+            counts: dict[int, int] = {}
+            for a in active:
+                counts[a.level] = counts.get(a.level, 0) + 1
+            # next event: earliest phase completion under the current
+            # fair-share rates, or the next admissible arrival
+            dt = min(a.remaining * counts[a.level] for a in active)
+            if pending and len(active) < self.streams:
+                dt = min(dt, pending[-1].ready - t)
+            dt = max(dt, 0.0)
+            t1 = t + dt
+            progressed: dict[int, float] = {}
+            for a in active:
+                step = dt / counts[a.level]
+                a.remaining -= step
+                if self.record_load:
+                    progressed[a.level] = progressed.get(a.level, 0.0) + step
+            if self.record_load and dt > 0.0:
+                # record the *observed* seconds of work each level advanced
+                # during [t, t1] — the capacity test divides by the segment
+                # span, so a rate bug cannot hide behind the prescription
+                for lvl, w in progressed.items():
+                    self.level_load.append((lvl, t, t1, w))
+            t = t1
+            still: list[_Active] = []
+            for a in active:
+                if a.remaining <= 1e-12 * a.work:
+                    busy += a.work
+                    if timeline is not None:
+                        timeline.append((a.kind, a.bucket, a.algo,
+                                         names[a.level], a.phase_start, t))
+                    if a.advance(t):
+                        still.append(a)
+                    else:
+                        finish = max(finish, t)
+                else:
+                    still.append(a)
+            active = still
+        return busy, finish

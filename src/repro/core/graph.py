@@ -13,13 +13,17 @@ The IR has two levels:
   completion makes the prim's output available to external consumers.
   AllReduce instructions are partitioned into *buckets* (tensor fusion);
   each bucket additionally carries a *collective algorithm* choice
-  (``bucket_algos``: ring / tree / hier, priced by :mod:`repro.cluster`).
+  (``bucket_algos``: ring / tree / hier, priced by :mod:`repro.cluster`)
+  and a *communication kind* (``bucket_comm``: one fused AllReduce, or
+  ZeRO-3-style reduce-scatter + all-gather priced per link level by the
+  event engine — DESIGN.md Sec. 8).
 
 Mutations (`fuse_nondup`, `fuse_dup`, `merge_buckets`) are the paper's three
 optimisation methods (Sec. 4.5); each validates DAG-ness of the quotient
 graph and op fusibility before committing.  ``set_bucket_algo`` is the
-cluster extension's fourth method: the search is joint over op fusion x
-tensor fusion x collective algorithm (DESIGN.md Sec. 7).
+cluster extension's fourth method and ``set_bucket_comm`` the event-engine
+extension's fifth: the search is joint over op fusion x tensor fusion x
+collective algorithm x comm kind (DESIGN.md Sec. 7-8).
 
 Incremental invariants
 ----------------------
@@ -127,12 +131,15 @@ class FusionGraph:
         self.buckets: list[tuple[int, ...]] = [(p.grad_param,) for p in grads]
         # per-bucket collective algorithm ("ring" reproduces the seed model)
         self.bucket_algos: list[str] = ["ring"] * len(self.buckets)
+        # per-bucket communication kind: fused AllReduce ("ar", the seed
+        # model) or ZeRO-3-style reduce-scatter + all-gather ("rs_ag")
+        self.bucket_comm: list[str] = ["ar"] * len(self.buckets)
         self._rebuild_derived()
 
     @classmethod
     def _from_parts(cls, prims, psuccs, ppreds, groups, provider, next_gid,
                     grad_prim, buckets, family: int | None = None,
-                    bucket_algos=None) -> "FusionGraph":
+                    bucket_algos=None, bucket_comm=None) -> "FusionGraph":
         """Assemble a graph from explicit state (see ``profile_graph``);
         derived structures are rebuilt from scratch.  ``family`` pins the
         estimator-cache lineage when the prims are shared with an existing
@@ -148,6 +155,8 @@ class FusionGraph:
         g.buckets = list(buckets)
         g.bucket_algos = (list(bucket_algos) if bucket_algos is not None
                           else ["ring"] * len(g.buckets))
+        g.bucket_comm = (list(bucket_comm) if bucket_comm is not None
+                         else ["ar"] * len(g.buckets))
         g._rebuild_derived()
         if family is not None:
             g._family = family
@@ -209,6 +218,7 @@ class FusionGraph:
         g.grad_prim = self.grad_prim
         g.buckets = list(self.buckets)
         g.bucket_algos = list(self.bucket_algos)
+        g.bucket_comm = list(self.bucket_comm)
         # quotient structures are shared: mutations are copy-on-write (they
         # replace modified adjacency sets, never mutate them in place)
         g._qsuccs = self._qsuccs
@@ -439,8 +449,9 @@ class FusionGraph:
             return False
         lo = min(i, j)
         self.buckets[lo : lo + 2] = [a + b]
-        # the merged bucket keeps the leading bucket's collective algorithm
+        # the merged bucket keeps the leading bucket's algorithm & comm kind
         self.bucket_algos[lo : lo + 2] = [self.bucket_algos[lo]]
+        self.bucket_comm[lo : lo + 2] = [self.bucket_comm[lo]]
         self._journal.append(("bucket", lo))
         return True
 
@@ -461,6 +472,24 @@ class FusionGraph:
             return False
         self.bucket_algos[i] = algo
         self._journal.append(("algo", i))
+        return True
+
+    def set_bucket_comm(self, i: int, kind: str) -> bool:
+        """Event-engine method (v): pick bucket ``i``'s communication kind —
+        one fused AllReduce (``"ar"``) or ZeRO-3-style reduce-scatter +
+        all-gather (``"rs_ag"``), priced per link level by the event engine
+        (DESIGN.md Sec. 8).  A no-op choice returns False."""
+        from ..cluster import BUCKET_COMM_KINDS
+
+        if kind not in BUCKET_COMM_KINDS:
+            raise ValueError(f"unknown bucket comm kind {kind!r}; "
+                             f"expected one of {BUCKET_COMM_KINDS}")
+        if not 0 <= i < len(self.buckets):
+            return False
+        if self.bucket_comm[i] == kind:
+            return False
+        self.bucket_comm[i] = kind
+        self._journal.append(("comm", i))
         return True
 
     # ------------------------------------------------------------ accessors
@@ -516,14 +545,15 @@ class FusionGraph:
         gs = tuple(sorted(tuple(sorted(m)) for m in self.groups.values()))
         pv = tuple(sorted(self.provider.items()))
         bk = tuple(self.buckets)
-        return (gs, pv, bk, tuple(self.bucket_algos))
+        return (gs, pv, bk, tuple(self.bucket_algos), tuple(self.bucket_comm))
 
     def fast_signature(self) -> tuple[int, int]:
         """Order-independent rolling hash of (groups, provider, buckets,
-        bucket algos), maintained by the mutations — O(#buckets) instead of
-        O(V log V)."""
+        bucket algos, bucket comm kinds), maintained by the mutations —
+        O(#buckets) instead of O(V log V)."""
         return (self._ghash,
-                hash((tuple(self.buckets), tuple(self.bucket_algos))))
+                hash((tuple(self.buckets), tuple(self.bucket_algos),
+                      tuple(self.bucket_comm))))
 
     # --------------------------------------------------------------- stats
     def describe(self) -> dict:
@@ -541,5 +571,8 @@ class FusionGraph:
             "grad_tensors": len(self.grad_prim),
             "bucket_algos": {
                 a: self.bucket_algos.count(a) for a in set(self.bucket_algos)
+            },
+            "bucket_comm": {
+                k: self.bucket_comm.count(k) for k in set(self.bucket_comm)
             },
         }

@@ -5,8 +5,11 @@ Cost(.); each step dequeues the cheapest candidate and applies each of the
 optimisation methods ``RandomApply``-style n ~ U[0, beta] times — the
 paper's three (non-duplicate fusion, duplicate fusion, tensor fusion) plus
 the cluster extension's per-bucket collective-algorithm choice
-(``METHOD_ALGO``), making the search joint over op fusion x tensor fusion x
-algorithm (DESIGN.md Sec. 7);
+(``METHOD_ALGO``, DESIGN.md Sec. 7) and the event-engine extension's
+per-bucket comm-kind choice (``METHOD_COMM``: fused AllReduce vs ZeRO-3
+reduce-scatter + all-gather, active on multi-stream sims — DESIGN.md
+Sec. 8), making the search joint over op fusion x tensor fusion x
+algorithm x comm kind;
 candidates within ``alpha x Cost(H_opt)`` are re-enqueued for backtracking;
 the search stops when the queue empties or H_opt is unchanged for
 ``unchanged_limit`` steps (paper: 1000; default reduced for CPU budget —
@@ -33,7 +36,7 @@ import random
 import time as _time
 from typing import Callable, Sequence
 
-from ..cluster import COLLECTIVE_ALGOS
+from ..cluster import BUCKET_COMM_KINDS, COLLECTIVE_ALGOS
 from .costs import OracleEstimator
 from .graph import FusionGraph
 from .simulator import Simulator
@@ -42,7 +45,9 @@ METHOD_NONDUP = "nondup"
 METHOD_DUP = "dup"
 METHOD_TENSOR = "tensor"
 METHOD_ALGO = "algo"
-ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO)
+METHOD_COMM = "comm"
+ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO,
+               METHOD_COMM)
 
 
 @dataclasses.dataclass
@@ -73,6 +78,12 @@ def random_apply(g: FusionGraph, method: str, n: int, rng: random.Random) -> boo
             i = rng.randrange(len(g.buckets))
             changed |= g.set_bucket_algo(i, rng.choice(COLLECTIVE_ALGOS))
             continue
+        if method == METHOD_COMM:
+            if not g.buckets:
+                break
+            i = rng.randrange(len(g.buckets))
+            changed |= g.set_bucket_comm(i, rng.choice(BUCKET_COMM_KINDS))
+            continue
         gids = list(g.groups)
         # a handful of attempts to find a valid (consumer, producer) pair
         for _attempt in range(4):
@@ -95,18 +106,19 @@ _WORKER_CTX = None
 def _pool_init(payload: bytes) -> None:
     global _WORKER_CTX
     (prims, psuccs, ppreds, grad_prim, family, hw, n_devices,
-     cluster) = pickle.loads(payload)
+     cluster, streams) = pickle.loads(payload)
     sim = Simulator(hw=hw, n_devices=n_devices, incremental=False,
-                    cluster=cluster)
+                    cluster=cluster, streams=streams)
     _WORKER_CTX = (prims, psuccs, ppreds, grad_prim, family, sim)
 
 
 def _pool_cost(state: tuple) -> float:
-    groups, provider, next_gid, buckets, bucket_algos = state
+    groups, provider, next_gid, buckets, bucket_algos, bucket_comm = state
     prims, psuccs, ppreds, grad_prim, family, sim = _WORKER_CTX
     g = FusionGraph._from_parts(prims, psuccs, ppreds, groups, provider,
                                 next_gid, grad_prim, buckets, family=family,
-                                bucket_algos=bucket_algos)
+                                bucket_algos=bucket_algos,
+                                bucket_comm=bucket_comm)
     return sim.cost(g)
 
 
@@ -121,7 +133,7 @@ class _CandidatePool:
         payload = pickle.dumps(
             (base.prims, base.psuccs, base.ppreds, base.grad_prim,
              base.family_token(), sim.hw, sim.n_devices,
-             getattr(sim, "cluster", None))
+             getattr(sim, "cluster", None), getattr(sim, "streams", 1))
         )
         # spawn: workers only import repro.core (pure python, no jax), and
         # forking a process that already holds jax's thread pools can hang
@@ -134,7 +146,7 @@ class _CandidatePool:
         futs = [
             self._ex.submit(
                 _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets,
-                             g.bucket_algos)
+                             g.bucket_algos, g.bucket_comm)
             )
             for g in graphs
         ]
@@ -180,7 +192,15 @@ def backtracking_search(
     # are treated the same so their trajectories match the flat default.
     cluster = getattr(sim, "cluster", None)
     if cluster is None or cluster.is_flat_compat:
-        methods = tuple(m for m in methods if m != METHOD_ALGO)
+        methods = tuple(m for m in methods if m not in (METHOD_ALGO,
+                                                        METHOD_COMM))
+    elif getattr(sim, "streams", 1) <= 1:
+        # on a serialized channel the ZeRO-3 RS+AG split prices identically
+        # to the fused AllReduce (RS + AG == AR term by term), so comm-kind
+        # flips only matter once the event engine can pipeline phases —
+        # dropping the method keeps the PR-2 trajectory (and throughput)
+        # unchanged for streams=1 searches.
+        methods = tuple(m for m in methods if m != METHOD_COMM)
     pool = _make_pool(sim, g0, workers)
 
     def cost(g: FusionGraph) -> float:

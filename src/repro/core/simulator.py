@@ -12,6 +12,12 @@ Per-iteration time = max(last compute completion, last AllReduce completion).
 The FO (full-overlap) bound is ``max(total_compute, total_comm)`` — maximal
 overlap ignoring dependencies (paper Sec. 6.2).
 
+The communication channel is priced by the phase-level event engine
+(:mod:`repro.core.events`): with the default ``streams=1`` it is the
+serialized channel above, bit-identical to the seed; with ``streams > 1``
+buckets pipeline their per-link-level phases concurrently under fair-share
+bandwidth division (DESIGN.md Sec. 8).
+
 Incremental (delta) cost evaluation
 -----------------------------------
 
@@ -52,8 +58,10 @@ import heapq
 import itertools
 from collections import OrderedDict
 
-from ..cluster import COLLECTIVE_ALGOS, ClusterSpec, allreduce_coeffs
+from ..cluster import (COLLECTIVE_ALGOS, ClusterSpec, KIND_AR, KIND_RS_AG,
+                       comm_coeffs, phases)
 from .costs import OracleEstimator, total_comm_time, total_compute_time
+from .events import CommEngine, CommJob
 from .graph import FusionGraph
 from .hw import Hardware, TPU_V5E
 
@@ -97,7 +105,7 @@ class Simulator:
     def __init__(self, estimator=None, hw: Hardware = TPU_V5E, n_devices: int = 256,
                  keep_timeline: bool = False, incremental: bool = True,
                  state_cache_size: int = 64, max_journal: int = 24,
-                 cluster: ClusterSpec | None = None):
+                 cluster: ClusterSpec | None = None, streams: int = 1):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
         # legacy (hw, n_devices) maps to the flat back-compat spec — comm
@@ -110,10 +118,20 @@ class Simulator:
             n_devices = cluster.n_devices
         self.cluster = cluster
         self.n_devices = n_devices
-        # every collective model is linear in bytes: resolve the (C, D)
-        # pairs once so the hot comm pass is a dict hit + multiply-add
-        self._comm_coeffs = {
-            algo: allreduce_coeffs(cluster, algo) for algo in COLLECTIVE_ALGOS
+        # the comm pass is the phase-level event engine; streams=1 is the
+        # serialized channel, bit-identical to the seed (DESIGN.md Sec. 8).
+        # Every collective model is linear in bytes: resolve the (C, D)
+        # pairs per (algo, comm-kind) once so the hot serialized pass stays
+        # a dict hit + multiply-add (no per-bucket job objects).
+        self.streams = max(int(streams), 1)
+        self._engine = CommEngine(cluster, streams=self.streams)
+        self._ar_coeffs = {
+            algo: comm_coeffs(cluster, algo, KIND_AR)
+            for algo in COLLECTIVE_ALGOS
+        }
+        self._rs_ag_coeffs = {
+            algo: comm_coeffs(cluster, algo, KIND_RS_AG)
+            for algo in COLLECTIVE_ALGOS
         }
         self.keep_timeline = keep_timeline
         self.incremental = incremental
@@ -297,27 +315,44 @@ class Simulator:
     # -------------------------------------------------------------- shared
     def _comm_pass(self, g: FusionGraph, bucket_ready_at: dict[int, float],
                    timeline: list | None) -> tuple[float, float]:
-        # communication channel: buckets transfer in order of readiness
-        # (paper: "in order of production of their respective gradient
-        # tensors"), serialized on one channel, overlapping compute.
+        # communication: buckets transfer in order of readiness (paper: "in
+        # order of production of their respective gradient tensors").
+        algos = g.bucket_algos
+        kinds = g.bucket_comm
+        buckets = g.buckets
+        if self.streams > 1:
+            # phase-level event engine: per-link-level pipelining with
+            # fair-share contention (DESIGN.md Sec. 8)
+            jobs = [
+                CommJob(bucket=i, ready=r, nbytes=g.bucket_bytes(buckets[i]),
+                        algo=algos[i], kind=kinds[i])
+                for i, r in bucket_ready_at.items()
+            ]
+            return self._engine.run(jobs, timeline)
+        # streams=1 hot path: the serialized channel inline, identical to
+        # CommEngine(streams=1) without per-bucket job objects — and
+        # bit-identical to the seed's comm pass for all-AllReduce buckets
         chan_free = 0.0
         comm_busy = 0.0
         comm_finish = 0.0
         order = sorted(bucket_ready_at.items(), key=lambda kv: (kv[1], kv[0]))
-        coeffs = self._comm_coeffs
-        algos = g.bucket_algos
+        ar_coeffs = self._ar_coeffs
+        rs_ag_coeffs = self._rs_ag_coeffs
         for i, ready_t in order:
-            nbytes = g.bucket_bytes(g.buckets[i])
+            nbytes = g.bucket_bytes(buckets[i])
             if nbytes <= 0.0:
                 continue  # nothing to transfer: no latency D charged
-            c, d = coeffs[algos[i]]
+            kind = kinds[i]
+            c, d = (ar_coeffs if kind == KIND_AR else rs_ag_coeffs)[algos[i]]
             t = c * nbytes + d
             start = max(chan_free, ready_t)
             chan_free = start + t
             comm_busy += t
             comm_finish = chan_free
             if timeline is not None:
-                timeline.append(("allreduce", i, start, chan_free))
+                timeline.append((
+                    "allreduce" if kind == KIND_AR else KIND_RS_AG, i,
+                    algos[i], self._engine._chan_level, start, chan_free))
         return comm_busy, comm_finish
 
     @staticmethod
@@ -344,6 +379,25 @@ class Simulator:
 
     # ------------------------------------------------------------- FO bound
     def full_overlap_bound(self, g: FusionGraph) -> float:
+        """Lower bound on iteration time under maximal overlap.
+
+        The comm floor depends on the channel model: serialized (streams=1)
+        communication cannot finish before the sum of all bucket times (the
+        seed's ``total_comm_time``, bit-identical); the multi-stream engine
+        can pipeline buckets across link levels, but every level still has
+        to advance its total phase work at capacity 1 — the floor is the
+        busiest level's work sum."""
         comp = total_compute_time(g, self.estimator, self.hw)
-        comm = total_comm_time(g, cluster=self.cluster)
+        if self.streams == 1:
+            comm = total_comm_time(g, cluster=self.cluster)
+        else:
+            level_work = [0.0] * len(self.cluster.levels)
+            for i, b in enumerate(g.buckets):
+                nb = g.bucket_bytes(b)
+                if nb <= 0.0:
+                    continue
+                for p in phases(self.cluster, g.bucket_algos[i],
+                                g.bucket_comm[i]):
+                    level_work[p.level] += p.c * nb + p.d
+            comm = max(level_work, default=0.0)
         return max(comp, comm)

@@ -34,8 +34,8 @@ from ..distributed.train_step import (GradSyncStrategy, build_train_step,
                                       jit_train_step)
 from ..models import stacked as ST
 from ..optim import adamw
-from ..cluster import (COLLECTIVE_ALGOS, best_algo, bucket_time, get_preset,
-                       list_presets)
+from ..cluster import (COLLECTIVE_ALGOS, best_algo, bucket_time, comm_time,
+                       get_preset, list_presets)
 from .mesh import cluster_from_mesh, make_production_mesh
 from .shapes import (FSDP_ARCHS, GRAD_ACCUM, SHAPES, ZERO1_ARCHS,
                      applicability, cache_capacity, input_specs)
@@ -200,19 +200,26 @@ def build_dryrun_decode(cfg, mesh, shape: str, fsdp: bool = False):
     return jf, tuple(args)
 
 
-def collective_cost_model(coll: dict, spec) -> dict:
+def collective_cost_model(coll: dict, spec, streams: int = 1) -> dict:
     """Price the compiled HLO's collective traffic on a ClusterSpec: the
     all-reduce traffic under each algorithm, and the cheapest choice.
     Priced as ``count`` collectives of the mean size so the per-collective
     latency term is charged once per op, not once for the aggregate.
     A topology-blind consumer can still read ``ici_traffic_bytes``; this
-    block says what the traffic *costs* on the actual interconnect."""
+    block says what the traffic *costs* on the actual interconnect.
+
+    ZeRO-3 / ``fsdp_tp`` modules compile to reduce-scatter + all-gather
+    instead of all-reduce; the ``rs_ag`` block prices those per level so
+    FSDP strategies get topology-aware ranking too.  With ``--streams N``
+    the ``streams`` block additionally reports the event-engine finish time
+    of the AllReduce set under N concurrent streams (pipelined hierarchical
+    phases) next to the serialized channel."""
     ar = coll["per_op"].get("all-reduce", {})
     ar_bytes = ar.get("bytes", 0.0)
     count = max(int(ar.get("count", 0)), 1)
     mean_bytes = ar_bytes / count
     name, t = best_algo(mean_bytes, spec)
-    return {
+    out = {
         "spec": spec.describe(),
         "allreduce_bytes": ar_bytes,
         "allreduce_count": ar.get("count", 0),
@@ -223,11 +230,52 @@ def collective_cost_model(coll: dict, spec) -> dict:
         "best_algo": name,
         "best_time_s": count * t,
     }
+    rs_ag = {}
+    for op, kind in (("reduce-scatter", "rs"), ("all-gather", "ag")):
+        d = coll["per_op"].get(op)
+        if not d or not d.get("count"):
+            continue
+        mean = d["bytes"] / d["count"]
+        times = {algo: d["count"] * comm_time(mean, spec, algo, kind)
+                 for algo in COLLECTIVE_ALGOS}
+        rs_ag[op] = {
+            "bytes": d["bytes"],
+            "count": d["count"],
+            "time_s": times,
+            "best_algo": min(times, key=times.get),
+        }
+    if rs_ag:
+        out["rs_ag"] = rs_ag
+    if streams > 1 and ar.get("count", 0) > 0:
+        from repro.core.events import CommEngine, CommJob
+
+        n_jobs = min(int(ar["count"]), 128)  # cap the event-loop size
+        # readiness staggered (gradients are produced over the backward
+        # pass) at a rate that backlogs the serialized channel: arrivals
+        # every t_one/streams keep `streams` jobs in flight, so the block
+        # reports the engine's steady-state pipeline against the serialized
+        # FIFO.  Simultaneous identical jobs would progress in lockstep
+        # under fair share and show no pipeline at all.
+        t_one = comm_time(mean_bytes, spec, name)
+        jobs = [CommJob(bucket=i, ready=i * t_one / streams,
+                        nbytes=mean_bytes, algo=name) for i in range(n_jobs)]
+        ser = CommEngine(spec, streams=1).run(list(jobs))[1]
+        pip = CommEngine(spec, streams=streams).run(list(jobs))[1]
+        out["streams"] = {
+            "streams": streams,
+            "jobs": n_jobs,
+            "algo": name,
+            "serialized_finish_s": ser,
+            "pipelined_finish_s": pip,
+            "speedup": ser / pip if pip > 0 else 1.0,
+        }
+    return out
 
 
 # -------------------------------------------------------------------- main
 def dryrun_one(arch: str, shape: str, multi_pod: bool,
-               verbose: bool = True, cluster: str | None = None) -> dict:
+               verbose: bool = True, cluster: str | None = None,
+               streams: int = 1) -> dict:
     cfg0 = get_config(arch)
     ok, reason, cfg = applicability(cfg0, shape)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -266,7 +314,7 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool,
     # price the collectives on the requested preset, or on the topology the
     # mesh itself implies (--cluster <preset> overrides the mesh bridge)
     spec = get_preset(cluster) if cluster else cluster_from_mesh(mesh)
-    result["cluster"] = collective_cost_model(coll, spec)
+    result["cluster"] = collective_cost_model(coll, spec, streams=streams)
     result.update({
         "kind": kind,
         "lower_s": round(t_lower, 2),
@@ -305,6 +353,9 @@ def main():
                     help="cluster preset to price collectives on; "
                          "default: derived from the mesh via "
                          "cluster_from_mesh")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="price the AllReduce set under N concurrent event-"
+                         "engine streams next to the serialized channel")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -319,7 +370,8 @@ def main():
                 tag = f"{arch}__{shape}__{'pod2x16x16' if mp else 'pod16x16'}"
                 path = os.path.join(args.out, tag + ".json")
                 try:
-                    res = dryrun_one(arch, shape, mp, cluster=args.cluster)
+                    res = dryrun_one(arch, shape, mp, cluster=args.cluster,
+                                     streams=args.streams)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append(tag)

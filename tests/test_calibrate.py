@@ -1,0 +1,128 @@
+"""repro.cluster.calibrate: least-squares (alpha, beta) fitting round-trips
+on synthetic timings (ROADMAP "calibrate from measured traces")."""
+import random
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import (COLLECTIVE_ALGOS, ClusterSpec, LinkLevel,
+                           comm_time, get_preset)
+from repro.cluster.calibrate import (TimingSample, fit_levels,
+                                     samples_from_dryrun, spec_from_describe)
+
+SIZES = (1e4, 1e5, 1e6, 1e7, 1e8, 1e9)
+
+
+def synth_samples(spec, sizes=SIZES, kinds=("ar",)):
+    return [TimingSample(x, comm_time(x, spec, a, k), a, k)
+            for x in sizes for a in COLLECTIVE_ALGOS for k in kinds]
+
+
+def test_round_trip_two_level():
+    """Timings generated from a ground-truth spec recover its per-level
+    (alpha, beta) from wrong datasheet starting constants."""
+    true = ClusterSpec("true", (
+        LinkLevel("nvlink", 8, 280e9, 2.4e-6),
+        LinkLevel("ib", 4, 21e9, 18e-6, contention=2.0)))
+    start = ClusterSpec("guess", (
+        LinkLevel("nvlink", 8, 300e9, 3e-6),
+        LinkLevel("ib", 4, 25e9, 15e-6, contention=2.0)))
+    res = fit_levels(synth_samples(true), start)
+    assert res.rel_rmse < 1e-8
+    assert all(res.identifiable)
+    for lt, lf in zip(true.levels, res.spec.levels):
+        assert lf.bandwidth == pytest.approx(lt.bandwidth, rel=1e-3)
+        assert lf.alpha == pytest.approx(lt.alpha, rel=1e-3)
+    # structure is preserved, only (alpha, beta) moved
+    assert [l.degree for l in res.spec.levels] == [8, 4]
+    assert res.spec.levels[1].contention == 2.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_round_trip_random_perturbation(seed):
+    """Random true/start perturbations of a zoo preset still round-trip
+    (including RS/AG samples — the ZeRO-3 pricing path is calibratable)."""
+    rng = random.Random(seed)
+    base = get_preset("a100_nvlink_ib")
+    import dataclasses
+    true = ClusterSpec("true", tuple(
+        dataclasses.replace(l, bandwidth=l.bandwidth * rng.uniform(0.4, 2.5),
+                            alpha=l.alpha * rng.uniform(0.4, 2.5))
+        for l in base.levels))
+    samples = synth_samples(true, kinds=("ar", "rs", "ag"))
+    res = fit_levels(samples, base)
+    assert res.rel_rmse < 1e-6
+    for lt, lf in zip(true.levels, res.spec.levels):
+        assert lf.bandwidth == pytest.approx(lt.bandwidth, rel=1e-2)
+        assert lf.alpha == pytest.approx(lt.alpha, rel=1e-2)
+
+
+def test_unidentifiable_level_keeps_datasheet_value():
+    """A degree-1 level is invisible to every collective: the fit must keep
+    its datasheet constants and flag it unidentifiable."""
+    true = ClusterSpec("true", (
+        LinkLevel("solo", 1, 123e9, 7e-6),
+        LinkLevel("ib", 16, 20e9, 12e-6)))
+    start = ClusterSpec("guess", (
+        LinkLevel("solo", 1, 123e9, 7e-6),
+        LinkLevel("ib", 16, 30e9, 9e-6)))
+    res = fit_levels(synth_samples(true), start)
+    assert res.identifiable == [False, True]
+    assert res.spec.levels[0].bandwidth == 123e9
+    assert res.spec.levels[0].alpha == 7e-6
+    assert res.spec.levels[1].bandwidth == pytest.approx(20e9, rel=1e-3)
+
+
+def test_non_physical_fit_keeps_datasheet_value_and_flags_it():
+    """Contradictory timings that drive a level's beta negative must not
+    silently yield ~infinite bandwidth: the datasheet value is kept and the
+    level is flagged ``clamped``."""
+    start = ClusterSpec("guess", (
+        LinkLevel("nvlink", 8, 300e9, 3e-6),
+        LinkLevel("ib", 4, 25e9, 15e-6)))
+    # timings far *below* what any positive ib beta could produce at large
+    # sizes, while the nvlink term is pinned by the small-size samples
+    samples = [TimingSample(x, comm_time(x, start, a) * (1e-4 if x > 1e6
+                                                         else 1.0), a)
+               for x in SIZES for a in COLLECTIVE_ALGOS]
+    res = fit_levels(samples, start, iters=1)
+    for l, l0, cl in zip(res.spec.levels, start.levels, res.clamped):
+        if cl:
+            assert l.bandwidth == l0.bandwidth and l.alpha >= 0.0
+        assert l.bandwidth <= 1e15  # never priced as free
+    assert any(res.clamped)
+
+
+def test_rejects_flat_compat_and_empty():
+    from repro.core.hw import TPU_V5E
+
+    with pytest.raises(ValueError):
+        fit_levels([], get_preset("a100_nvlink_ib"))
+    with pytest.raises(ValueError):
+        fit_levels([TimingSample(1e6, 1e-3)], ClusterSpec.flat(TPU_V5E, 8))
+
+
+def test_dryrun_adapter_round_trip():
+    """A dryrun-shaped cluster block (as written by collective_cost_model)
+    feeds the fit: spec rebuild + per-algo samples + RS/AG block."""
+    spec = get_preset("h100_superpod")
+    assert spec_from_describe(spec.describe()).describe() == spec.describe()
+    count, mean = 10, 2e7
+    doc = {"cluster": {
+        "spec": spec.describe(),
+        "allreduce_bytes": count * mean,
+        "allreduce_count": count,
+        "allreduce_time_s": {
+            a: count * comm_time(mean, spec, a) for a in COLLECTIVE_ALGOS},
+        "rs_ag": {"reduce-scatter": {
+            "bytes": count * mean, "count": count,
+            "time_s": {a: count * comm_time(mean, spec, a, "rs")
+                       for a in COLLECTIVE_ALGOS}}},
+    }}
+    samples, got = samples_from_dryrun(doc)
+    assert got.describe() == spec.describe()
+    assert len(samples) == 2 * len(COLLECTIVE_ALGOS)
+    for s in samples:
+        assert s.time_s == pytest.approx(
+            comm_time(s.nbytes, spec, s.algo, s.kind), rel=1e-12)

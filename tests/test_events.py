@@ -1,0 +1,264 @@
+"""Phase-level comm event engine (DESIGN.md Sec. 8) property tests:
+
+(a) ``streams=1`` is bit-identical to the seed's serialized ``_comm_pass``
+    on flat *and* hierarchical specs (golden equivalence of the refactor);
+(b) no link level is ever oversubscribed beyond its capacity in any
+    produced schedule (fair-share invariant);
+(c) incremental delta simulation == full replay under stream / algo /
+    comm-kind mutations (the engine composes with the PR-1 delta path).
+"""
+import random
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import (BUCKET_COMM_KINDS, COLLECTIVE_ALGOS, ClusterSpec,
+                           PRESETS, comm_coeffs, get_preset, phases)
+from repro.core import (CommEngine, CommJob, FusionGraph, PrimOp, Simulator,
+                        backtracking_search, profile_graph)
+from repro.core.graph import EW
+from repro.core.hw import TPU_V5E
+from repro.core.search import ALL_METHODS, METHOD_COMM, random_apply
+
+
+def serialized_reference(jobs, spec):
+    """The seed's `_comm_pass` arithmetic, verbatim: readiness-ordered FIFO
+    on one channel, one c*x+d opaque interval per non-empty bucket."""
+    chan_free = 0.0
+    busy = 0.0
+    finish = 0.0
+    for job in sorted(jobs, key=lambda j: (j.ready, j.bucket)):
+        if job.nbytes <= 0.0:
+            continue
+        c, d = comm_coeffs(spec, job.algo, job.kind)
+        t = c * job.nbytes + d
+        start = max(chan_free, job.ready)
+        chan_free = start + t
+        busy += t
+        finish = chan_free
+    return busy, finish
+
+
+def random_jobs(rng: random.Random, n: int, kinds=("ar",)) -> list[CommJob]:
+    return [
+        CommJob(bucket=i, ready=rng.uniform(0.0, 2e-3),
+                nbytes=rng.choice([0.0, float(rng.randint(1, 1 << 26))]),
+                algo=rng.choice(COLLECTIVE_ALGOS),
+                kind=rng.choice(kinds))
+        for i in range(n)
+    ]
+
+
+SPECS = [ClusterSpec.flat(TPU_V5E, 64), ClusterSpec.flat(TPU_V5E, 1),
+         *PRESETS.values()]
+
+
+# ----------------------------------------------------- (a) golden identity
+@settings(max_examples=120, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 12))
+def test_streams1_bit_identical_to_serialized_comm_pass(seed, n):
+    rng = random.Random(seed)
+    spec = rng.choice(SPECS)
+    kinds = ("ar",) if spec.is_flat_compat else BUCKET_COMM_KINDS
+    jobs = random_jobs(rng, n, kinds)
+    eng = CommEngine(spec, streams=1)
+    busy, finish = eng.run(list(jobs))
+    rbusy, rfinish = serialized_reference(jobs, spec)
+    assert busy == rbusy
+    assert finish == rfinish
+
+
+def test_simulator_default_streams_is_seed_channel():
+    """Simulator() still prices comm exactly as the seed formula."""
+    from repro.core.hw import allreduce_time
+
+    g = chain_graph(grad_bytes=float(1 << 22))
+    r = Simulator(n_devices=64).run(g)
+    assert r.comm_time == sum(
+        allreduce_time(float(1 << 22), TPU_V5E, 64) for _ in range(3))
+
+
+# ------------------------------------------------- (b) capacity invariant
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 16),
+       streams=st.integers(2, 5))
+def test_no_level_oversubscribed(seed, n, streams):
+    rng = random.Random(seed)
+    spec = rng.choice([s for s in SPECS if not s.is_flat_compat])
+    eng = CommEngine(spec, streams=streams, record_load=True)
+    jobs = random_jobs(rng, n, BUCKET_COMM_KINDS)
+    busy, finish = eng.run(list(jobs), timeline := [])
+    # fair-share: the *observed* progress rate on a level (work the level
+    # actually advanced / segment span) never exceeds its capacity of one
+    # full-bandwidth stream-equivalent
+    for level, t0, t1, work in eng.level_load:
+        assert 0 <= level < len(spec.levels)
+        assert t1 > t0
+        assert work / (t1 - t0) <= 1.0 + 1e-9
+    # and total level-busy integral is bounded by the makespan
+    for level in range(len(spec.levels)):
+        occupied = sum(work for l, t0, t1, work in eng.level_load
+                       if l == level)
+        assert occupied <= finish + 1e-9
+    # timeline phases stay inside the schedule span
+    for kind, bucket, algo, level, start, end in timeline:
+        assert start >= 0.0 and end <= finish + 1e-12
+        assert kind in ("allreduce", "reduce_scatter", "all_gather")
+
+
+# -------------------------------------------- (c) incremental == full
+def chain_graph(n=16, grads=(3, 6, 9), grad_bytes=256.0):
+    prims = []
+    for i in range(n):
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW, flops=100.0, in_bytes=64.0,
+            out_bytes=64.0, time=1e-6,
+            grad_param=list(grads).index(i) if i in grads else -1,
+            grad_bytes=grad_bytes if i in grads else 0.0,
+            grad_sig="f32" if i in grads else ""))
+    return profile_graph(FusionGraph(prims, [(i, i + 1) for i in range(n - 1)]))
+
+
+@pytest.mark.parametrize("streams", [1, 4])
+def test_incremental_equals_full_with_stream_and_comm_mutations(streams):
+    spec = get_preset("a100_nvlink_ib")
+    sim_inc = Simulator(cluster=spec, streams=streams, incremental=True)
+    sim_full = Simulator(cluster=spec, streams=streams, incremental=False)
+    rng = random.Random(11)
+    parent = chain_graph(n=18, grads=(3, 7, 11, 15),
+                         grad_bytes=float(1 << 22))
+    saw_comm = False
+    for step in range(60):
+        child = parent.clone()
+        for _ in range(rng.randint(1, 3)):
+            m = rng.choice(ALL_METHODS)
+            changed = random_apply(child, m, 1, rng)
+            saw_comm |= changed and m == METHOD_COMM
+        ri = sim_inc.run(child)
+        rf = sim_full.run(child)
+        assert ri.iteration_time == rf.iteration_time, step
+        assert ri.comm_time == rf.comm_time, step
+        assert ri.comm_finish == rf.comm_finish, step
+        if rng.random() < 0.6:
+            parent = child
+    assert saw_comm, "comm-kind mutation never drawn"
+    assert sim_inc.stats["delta"] > 0
+
+
+# ------------------------------------------------------- engine semantics
+def test_rs_ag_prices_like_allreduce_on_serialized_channel():
+    """RS + AG legs equal the AllReduce term by term, so the ZeRO-3 split
+    never gets a fictitious discount on the serialized channel."""
+    for spec in (get_preset("a100_nvlink_ib"), get_preset("cross_dc_2pod"),
+                 ClusterSpec.flat(TPU_V5E, 32)):
+        for algo in COLLECTIVE_ALGOS:
+            c_ar, d_ar = comm_coeffs(spec, algo, "ar")
+            c, d = comm_coeffs(spec, algo, "rs_ag")
+            assert c == pytest.approx(c_ar, rel=1e-12, abs=1e-30)
+            assert d == pytest.approx(d_ar, rel=1e-12, abs=1e-30)
+
+
+def test_phase_decomposition_sums_to_opaque_coeffs():
+    for spec in PRESETS.values():
+        for algo in COLLECTIVE_ALGOS:
+            for kind in ("ar", "rs", "ag", "rs_ag"):
+                ph = phases(spec, algo, kind)
+                c, d = comm_coeffs(spec, algo, kind)
+                assert sum(p.c for p in ph) == pytest.approx(c, rel=1e-12)
+                assert sum(p.d for p in ph) == pytest.approx(d, rel=1e-12)
+                for p in ph:
+                    assert 0 <= p.level < len(spec.levels)
+
+
+def test_hier_phase_sequence_is_rs_ar_ag():
+    """Hierarchical AllReduce decomposes into intra reduce-scatter ->
+    inter allreduce -> intra all-gather, inner levels outward-in."""
+    spec = get_preset("a100_nvlink_ib")  # nvlink x ib
+    ph = phases(spec, "hier", "ar")
+    kinds = [p.kind for p in ph]
+    assert kinds == ["reduce_scatter", "allreduce", "all_gather"]
+    assert [p.level for p in ph] == [0, 1, 0]
+
+
+def test_pipelined_streams_strictly_beat_serialized_channel():
+    """Two hierarchical buckets with staggered readiness (gradients finish
+    at different compute times): bucket B's intra-host phase overlaps
+    bucket A's inter-host phase on a 2-stream engine — strictly earlier
+    finish than the serialized channel.  (Simultaneous identical jobs
+    progress in lockstep under fair share and gain nothing — the win comes
+    from phase offset, which real schedules always have.)"""
+    spec = get_preset("a100_nvlink_ib")
+    nb = float(1 << 26)
+    stagger = phases(spec, "hier", "ar")[0].seconds(nb)  # A's intra-RS span
+    jobs = [CommJob(0, 0.0, nb, "hier"),
+            CommJob(1, stagger, nb, "hier")]
+    _, ser = CommEngine(spec, streams=1).run(list(jobs))
+    _, pip = CommEngine(spec, streams=2).run(list(jobs))
+    assert pip < ser
+    # but never faster than one bucket alone (the fabric is conserved)
+    _, solo = CommEngine(spec, streams=1).run([jobs[0]])
+    assert pip >= solo - 1e-15
+
+
+def test_phased_timeline_distinguishes_phases():
+    spec = get_preset("a100_nvlink_ib")
+    jobs = [CommJob(0, 0.0, float(1 << 24), "hier"),
+            CommJob(1, 0.0, float(1 << 24), "hier", kind="rs_ag")]
+    tl = []
+    CommEngine(spec, streams=2).run(jobs, tl)
+    kinds = {e[0] for e in tl}
+    assert "reduce_scatter" in kinds and "all_gather" in kinds
+    levels = {e[3] for e in tl}
+    assert levels == {"nvlink", "ib_hdr"}
+    # records are (kind, bucket, algo, level, start, end), time-ordered ends
+    for e in tl:
+        assert len(e) == 6 and e[5] >= e[4] >= 0.0
+
+
+def test_engine_reuse_resets_utilisation_segments():
+    """A second run() on the same engine is an independent schedule:
+    level_load must not accumulate segments across runs."""
+    spec = get_preset("a100_nvlink_ib")
+    eng = CommEngine(spec, streams=2, record_load=True)
+    jobs = [CommJob(0, 0.0, float(1 << 24), "hier"),
+            CommJob(1, 1e-4, float(1 << 24), "hier")]
+    eng.run(list(jobs))
+    first = list(eng.level_load)
+    _, finish = eng.run(list(jobs))
+    assert eng.level_load == first
+    for level in range(len(spec.levels)):
+        occupied = sum(w for l, _, _, w in eng.level_load if l == level)
+        assert occupied <= finish + 1e-9
+
+
+def test_zero_byte_jobs_are_free_in_both_modes():
+    spec = get_preset("h100_superpod")
+    jobs = [CommJob(0, 0.0, 0.0, "hier"), CommJob(1, 0.0, 0.0, "ring")]
+    for streams in (1, 3):
+        busy, finish = CommEngine(spec, streams=streams).run(list(jobs))
+        assert busy == 0.0 and finish == 0.0
+
+
+def test_search_flips_comm_kind_on_multistream_sim():
+    """METHOD_COMM is live on a multi-stream sim over a real topology (and
+    the joint search still improves), while a streams=1 search keeps the
+    PR-2 method set — every bucket stays on the AllReduce path."""
+    spec = get_preset("cross_dc_2pod")
+    g = chain_graph(n=20, grads=(3, 7, 11, 15), grad_bytes=float(1 << 24))
+    res1 = backtracking_search(g, Simulator(cluster=spec, streams=1),
+                               unchanged_limit=40, max_steps=60, seed=2)
+    assert set(res1.best.bucket_comm) == {"ar"}
+    res4 = backtracking_search(g, Simulator(cluster=spec, streams=4),
+                               unchanged_limit=40, max_steps=60, seed=2)
+    assert res4.best_cost <= res4.initial_cost
+
+
+def test_worker_pool_ships_streams_and_comm_kinds():
+    spec = get_preset("a100_nvlink_ib")
+    g = chain_graph(n=12, grads=(4, 8), grad_bytes=float(1 << 22))
+    kw = dict(unchanged_limit=15, max_steps=20, seed=5)
+    r_ser = backtracking_search(g, Simulator(cluster=spec, streams=4), **kw)
+    r_par = backtracking_search(g, Simulator(cluster=spec, streams=4),
+                                workers=2, **kw)
+    assert r_par.best_cost == r_ser.best_cost
+    assert r_par.best.signature() == r_ser.best.signature()
