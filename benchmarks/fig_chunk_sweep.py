@@ -1,0 +1,198 @@
+"""Fig. E (ours): chunked intra-bucket pipelining vs whole-bucket
+pipelining across the cluster preset zoo (DESIGN.md Sec. 9).
+
+Whole-bucket pipelining (PR 3) overlaps *different* buckets' phases across
+link levels; a single large fused bucket still serializes its own phase
+sequence.  Chunking splits the bucket into store-and-forward chunks whose
+per-chunk phase coefficients sum exactly to the unchunked ones — the win
+is pure scheduling: chunk 1's intra-host reduce-scatter runs under chunk
+0's inter-host leg.  Ring collectives decompose into a single phase, so
+chunking only pays on multi-phase (hierarchical / tree) schedules — the
+sweep prices each granularity under both NCCL-auto and forced-hierarchical
+algorithm assignments to expose the trade-off.
+
+For each preset, the strategy family is bucket granularity (XLA-combiner
+thresholds plus one fully-merged bucket) x collective-algorithm assignment
+(auto / hier) x chunk count (1, 2, 4, 8), all priced on the 4-stream event
+engine in the comm-bound regime (small batch/seq, model-sized gradients),
+plus two budget-matched joint backtracking searches (one with
+``METHOD_CHUNK``, one without).  Headline: **best chunked vs best
+unchunked** per preset.
+
+    PYTHONPATH=src python benchmarks/fig_chunk_sweep.py [--quick] [--smoke]
+
+``--smoke`` is the CI lane: two presets, the static family only, and a
+hard failure (exit 1) when chunking stops strictly beating whole-bucket
+pipelining on at least one of them.  Full runs write
+``experiments/perf/chunk_sweep.json`` and print a CSV block.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import arch_graph, csv_row
+from repro.cluster import PRESETS
+from repro.core import Simulator, backtracking_search
+from repro.core.search import ALL_METHODS, METHOD_CHUNK
+from repro.core.baselines import (assign_bucket_algos,
+                                  threshold_tensor_fusion,
+                                  xla_post_order_op_fusion)
+
+OUT = "experiments/perf"
+
+THRESHOLDS = {"1MB": 1 << 20, "4MB": 4 << 20, "30MB": 30 << 20}
+CHUNKS = (1, 2, 4, 8)
+STREAMS = 4
+
+
+def merge_all_buckets(g):
+    g = g.clone()
+    i = 0
+    while i < len(g.buckets) - 1:
+        if not g.merge_buckets(i, i + 1):
+            i += 1
+    return g
+
+
+def set_all_chunks(g, k: int):
+    g = g.clone()
+    for i in range(len(g.buckets)):
+        g.set_bucket_chunks(i, k)
+    return g
+
+
+def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
+              max_steps: int, seed: int = 0, smoke: bool = False) -> dict:
+    cands = {
+        label: threshold_tensor_fusion(opfused, threshold=thr)
+        for label, thr in THRESHOLDS.items()
+    }
+    cands["all"] = merge_all_buckets(opfused)
+    sim = Simulator(cluster=spec, streams=STREAMS)
+    configs = {}
+    for label, g in cands.items():
+        for algo in ("auto", "hier"):
+            ga = assign_bucket_algos(g, spec, algo)
+            for k in CHUNKS:
+                gk = set_all_chunks(ga, k) if k > 1 else ga
+                r = sim.run(gk)
+                configs[f"{label}_{algo}@c{k}"] = {
+                    "iteration_time_s": r.iteration_time,
+                    "comm_finish_s": r.comm_finish,
+                    "buckets": len(gk.buckets),
+                    "chunks": k,
+                }
+    if not smoke:
+        # budget-matched joint searches: with and without METHOD_CHUNK
+        no_chunk = tuple(m for m in ALL_METHODS if m != METHOD_CHUNK)
+        for tag, methods in (("searched_chunked", ALL_METHODS),
+                             ("searched_whole", no_chunk)):
+            res = backtracking_search(
+                g0, Simulator(cluster=spec, streams=STREAMS),
+                unchanged_limit=unchanged_limit, max_steps=max_steps,
+                seed=seed, methods=methods)
+            d = res.best.describe()
+            configs[tag] = {
+                "iteration_time_s": res.best_cost,
+                "buckets": len(res.best.buckets),
+                "chunks": max(res.best.bucket_chunks),
+                "bucket_chunks": d["bucket_chunks"],
+                "bucket_algos": d["bucket_algos"],
+                "simulations": res.simulations,
+            }
+    whole = {k: v["iteration_time_s"] for k, v in configs.items()
+             if v["chunks"] == 1}
+    chunked = {k: v["iteration_time_s"] for k, v in configs.items()
+               if v["chunks"] > 1}
+    best_whole = min(whole, key=whole.get)
+    best_chunk = min(chunked, key=chunked.get)
+    return {
+        "preset": name,
+        "n_devices": spec.n_devices,
+        "levels": [l.name for l in spec.levels],
+        "configs": configs,
+        "best_whole_config": best_whole,
+        "best_whole_s": whole[best_whole],
+        "best_chunked_config": best_chunk,
+        "best_chunked_s": chunked[best_chunk],
+        "chunk_speedup": whole[best_whole] / chunked[best_chunk],
+        "chunked_strictly_beats_whole": chunked[best_chunk] < whole[best_whole],
+    }
+
+
+def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
+        max_steps: int = 80, seed: int = 0, verbose: bool = True,
+        batch: int = 2, seq: int = 32, smoke: bool = False) -> dict:
+    # small batch/seq: gradient volume (comm) is model-sized while compute
+    # shrinks with tokens — the comm-bound regime chunking exists for
+    g0 = arch_graph(arch, batch=batch, seq=seq)
+    opfused = xla_post_order_op_fusion(g0)
+    presets = (("a100_nvlink_ib", "cross_dc_2pod") if smoke
+               else tuple(PRESETS))
+    rows = []
+    for name in presets:
+        spec = PRESETS[name]
+        t0 = time.perf_counter()
+        row = sweep_one(g0, opfused, name, spec,
+                        unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, seed=seed, smoke=smoke)
+        row["wall_s"] = round(time.perf_counter() - t0, 2)
+        rows.append(row)
+        if verbose:
+            print(csv_row(name, spec.n_devices, row["best_whole_config"],
+                          f"{row['best_whole_s']*1e3:.3f}ms",
+                          row["best_chunked_config"],
+                          f"{row['best_chunked_s']*1e3:.3f}ms",
+                          f"{row['chunk_speedup']:.3f}x",
+                          row["chunked_strictly_beats_whole"]))
+    winners = [r["preset"] for r in rows if r["chunked_strictly_beats_whole"]]
+    out = {
+        "arch": arch,
+        "batch": batch,
+        "seq": seq,
+        "streams": STREAMS,
+        "unchanged_limit": unchanged_limit,
+        "max_steps": max_steps,
+        "seed": seed,
+        "presets": rows,
+        "chunked_beats_whole_on": winners,
+    }
+    if verbose:
+        print(f"# chunked schedules strictly beat whole-bucket pipelining "
+              f"on {len(winners)}/{len(rows)} presets: {winners}")
+    if not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        path = os.path.join(OUT, "chunk_sweep.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if verbose:
+            print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: 2 presets, static family only; exit 1 "
+                         "unless chunking strictly wins on every smoke "
+                         "preset")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+    out = run(arch=args.arch,
+              unchanged_limit=25 if args.quick else 40,
+              max_steps=50 if args.quick else 80,
+              smoke=args.smoke)
+    if args.smoke:
+        losers = [r["preset"] for r in out["presets"]
+                  if not r["chunked_strictly_beats_whole"]]
+        if losers:
+            print(f"SMOKE FAIL: chunking no longer strictly beats "
+                  f"whole-bucket pipelining on {losers}")
+            raise SystemExit(1)

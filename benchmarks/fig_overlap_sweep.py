@@ -23,8 +23,9 @@ exists for.
         [--timeline]
 
 ``--timeline`` embeds each preset's winning comm schedule as
-``(kind, bucket, algo, level, start, end)`` records — ring vs tree vs
-hierarchical phases and RS/AG legs are distinguishable by construction.
+``(kind, bucket, chunk, traffic_class, algo, level, start, end)`` records —
+ring vs tree vs hierarchical phases, RS/AG legs, chunk indices and traffic
+classes are distinguishable by construction.
 Writes ``experiments/perf/overlap_sweep.json`` and prints a CSV block.
 """
 from __future__ import annotations
@@ -184,7 +185,8 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--timeline", action="store_true",
                     help="embed each preset's winning comm schedule as "
-                         "(kind, bucket, algo, level, start, end) records")
+                         "(kind, bucket, chunk, traffic_class, algo, level, "
+                         "start, end) records")
     ap.add_argument("--arch", default="qwen2-0.5b")
     args = ap.parse_args()
     run(arch=args.arch,

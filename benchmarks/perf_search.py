@@ -51,8 +51,12 @@ N_DEVICES = 256
 class SeedPathSimulator:
     """Seed-engine cost profile behind the ``Simulator.cost`` interface."""
 
-    def __init__(self, n_devices: int = N_DEVICES):
-        self._sim = Simulator(n_devices=n_devices, incremental=False)
+    def __init__(self, n_devices: int = N_DEVICES, cluster=None,
+                 streams: int = 1):
+        self._sim = Simulator(n_devices=n_devices, incremental=False,
+                              cluster=cluster, streams=streams)
+        self.cluster = self._sim.cluster
+        self.streams = streams
         self.estimator = self._sim.estimator
         self._memo: dict = {}
 
@@ -71,14 +75,20 @@ class SeedPathSimulator:
         return c
 
 
-def bench_sim_throughput(arch: str, n_cands: int, seed: int = 0) -> dict:
-    """Evaluate an identical mutation stream under both engines."""
+def bench_sim_throughput(arch: str, n_cands: int, seed: int = 0,
+                         cluster=None, streams: int = 1) -> dict:
+    """Evaluate an identical mutation stream under both engines.  With
+    ``cluster``/``streams`` the stream includes the multi-stream comm
+    dimensions (algo / comm-kind / chunk mutations priced by the event
+    engine) so the gate also catches engine overhead on that hot path."""
     out = {}
     costs_by_mode = {}
     for mode in ("seed", "incremental"):
         g0 = arch_graph(arch)
-        sim = (SeedPathSimulator() if mode == "seed"
-               else Simulator(n_devices=N_DEVICES, incremental=True))
+        sim = (SeedPathSimulator(cluster=cluster, streams=streams)
+               if mode == "seed"
+               else Simulator(n_devices=N_DEVICES, incremental=True,
+                              cluster=cluster, streams=streams))
         rng = random.Random(seed)
         current = g0
         elapsed = 0.0
@@ -178,6 +188,10 @@ def main():
                          "the incremental engine's throughput advantage "
                          "over the seed engine regresses")
     ap.add_argument("--smoke-min-speedup", type=float, default=2.0)
+    ap.add_argument("--smoke-min-speedup-chunked", type=float, default=1.2,
+                    help="throughput floor for the chunked multi-stream "
+                         "smoke config (event-engine comm pass on both "
+                         "sides, so the incremental edge is smaller)")
     args = ap.parse_args()
     if args.smoke:
         args.archs = "transformer-paper"
@@ -197,6 +211,19 @@ def main():
             print(f"  search[{mode}]: {m['wall_seconds']}s "
                   f"{m.get('simulations')} sims", flush=True)
         report[arch] = {"throughput": thr, "search": srch}
+        if args.smoke:
+            # chunked multi-stream config: the mutation stream now draws
+            # algo/comm/chunk flips and the comm pass is the event engine
+            from repro.cluster import get_preset
+
+            thr_ms = bench_sim_throughput(
+                arch, args.cands, cluster=get_preset("a100_nvlink_ib"),
+                streams=4)
+            print(f"  sims/sec[chunked 4-stream]: "
+                  f"seed={thr_ms['seed']['sims_per_sec']} "
+                  f"incremental={thr_ms['incremental']['sims_per_sec']} "
+                  f"({thr_ms['speedup']}x, bit-identical)", flush=True)
+            report[arch]["throughput_chunked_multistream"] = thr_ms
     if not args.skip_deepseek:
         arch = "deepseek-v2-236b"
         print(f"=== {arch} (scale probe, budget {args.seed_budget}s) ===",
@@ -216,12 +243,19 @@ def main():
                     if "throughput" in r}
         bad = {a: s for a, s in speedups.items()
                if s < args.smoke_min_speedup}
+        chunked = {a: r["throughput_chunked_multistream"]["speedup"]
+                   for a, r in report.items()
+                   if "throughput_chunked_multistream" in r}
+        bad.update({f"{a}[chunked]": s for a, s in chunked.items()
+                    if s < args.smoke_min_speedup_chunked})
         if bad:
-            print(f"SMOKE FAIL: incremental/seed throughput below "
-                  f"{args.smoke_min_speedup}x: {bad}")
+            print(f"SMOKE FAIL: incremental/seed throughput below floor: "
+                  f"{bad}")
             raise SystemExit(1)
-        print(f"smoke OK: incremental/seed throughput {speedups} "
-              f"(floor {args.smoke_min_speedup}x)")
+        print(f"smoke OK: incremental/seed throughput {speedups}, "
+              f"chunked multi-stream {chunked} "
+              f"(floors {args.smoke_min_speedup}x / "
+              f"{args.smoke_min_speedup_chunked}x)")
 
 
 if __name__ == "__main__":

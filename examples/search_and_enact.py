@@ -55,6 +55,12 @@ def main():
     ap.add_argument("--cluster", default=None, choices=list_presets(),
                     help="cluster preset to search against; default: "
                          "legacy flat model")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="search against the N-stream event engine; with "
+                         "--cluster the comm kind (AllReduce vs ZeRO-3 "
+                         "RS+AG) and chunk count become searched dimensions "
+                         "too (the flat default spec is algorithm-blind and "
+                         "drops them)")
     args = ap.parse_args()
 
     cfg = get_config("qwen2-0.5b").reduced()
@@ -71,10 +77,11 @@ def main():
 
         spec = get_preset(args.cluster)
         print(f"  pricing collectives on {spec.name} "
-              f"({spec.n_devices} devices, {len(spec.levels)} link levels)")
-        sim = Simulator(cluster=spec)
+              f"({spec.n_devices} devices, {len(spec.levels)} link levels, "
+              f"{args.streams} stream(s))")
+        sim = Simulator(cluster=spec, streams=args.streams)
     else:
-        sim = Simulator(n_devices=4)
+        sim = Simulator(n_devices=4, streams=args.streams)
     res = backtracking_search(g, sim, unchanged_limit=120, seed=0)
     strat = GradSyncStrategy.from_fusion_graph(res.best, params)
     path = os.path.join(tempfile.gettempdir(), "disco_strategy.json")
@@ -82,8 +89,11 @@ def main():
     print(f"  {len(g.buckets)} gradient tensors -> "
           f"{len(strat.buckets)} fused AllReduce buckets; saved {path}")
     if args.cluster:
-        algos = res.best.describe()["bucket_algos"]
-        print(f"  searched collective-algorithm mix: {algos}")
+        d = res.best.describe()
+        print(f"  searched collective-algorithm mix: {d['bucket_algos']}")
+        if args.streams > 1:
+            print(f"  searched comm kinds: {d['bucket_comm']}  "
+                  f"chunk counts: {d['bucket_chunks']}")
 
     # ---- Enactment Phase (ENABLE_SEARCH=0) ----
     print("enactment phase ...")

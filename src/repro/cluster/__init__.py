@@ -15,9 +15,9 @@ from .topology import (ClusterSpec, LinkLevel, PRESETS, dcn_level,
 from .collectives import (ALGO_HIER, ALGO_RING, ALGO_TREE, ALGORITHMS,
                           BUCKET_COMM_KINDS, COLLECTIVE_ALGOS, CommPhase,
                           DEFAULT_ALGO, DEFAULT_COMM_KIND, KIND_AG, KIND_AR,
-                          KIND_RS, KIND_RS_AG, allreduce_coeffs, best_algo,
-                          bucket_time, comm_coeffs, comm_time,
-                          hier_allreduce, phases, ring_allreduce,
+                          KIND_P2P, KIND_RS, KIND_RS_AG, allreduce_coeffs,
+                          best_algo, bucket_time, chunk_phases, comm_coeffs,
+                          comm_time, hier_allreduce, phases, ring_allreduce,
                           tree_allreduce)
 
 __all__ = [
@@ -25,8 +25,8 @@ __all__ = [
     "list_presets", "tpu_pod_levels",
     "ALGO_HIER", "ALGO_RING", "ALGO_TREE", "ALGORITHMS", "COLLECTIVE_ALGOS",
     "BUCKET_COMM_KINDS", "CommPhase", "DEFAULT_ALGO", "DEFAULT_COMM_KIND",
-    "KIND_AG", "KIND_AR", "KIND_RS", "KIND_RS_AG",
-    "allreduce_coeffs", "best_algo", "bucket_time", "comm_coeffs",
-    "comm_time", "hier_allreduce", "phases", "ring_allreduce",
-    "tree_allreduce",
+    "KIND_AG", "KIND_AR", "KIND_P2P", "KIND_RS", "KIND_RS_AG",
+    "allreduce_coeffs", "best_algo", "bucket_time", "chunk_phases",
+    "comm_coeffs", "comm_time", "hier_allreduce", "phases",
+    "ring_allreduce", "tree_allreduce",
 ]

@@ -61,7 +61,16 @@ all devices) and ``kind="ag"`` (all-gather of the updated shard), each
 exactly one half of the matching AllReduce — ring RS + ring AG equals ring
 AR term by term, so the ``rs_ag`` bucket kind never gets a fictitious
 discount.  ``BUCKET_COMM_KINDS`` lists the per-bucket choices the search
-mutates (``FusionGraph.set_bucket_comm``).
+mutates (``FusionGraph.set_bucket_comm``).  ``kind="p2p"`` prices a
+point-to-point transfer (pipeline-parallel stage boundary) as one phase on
+the bottleneck level, for the event engine's ``pp`` traffic class.
+
+``chunk_phases(spec, algo, kind, chunks)`` is the chunked variant
+(DESIGN.md Sec. 9): each chunk carries the same per-byte coefficients and
+``1/chunks`` of each phase latency, so per-chunk costs over ``nbytes /
+chunks`` sum *exactly* to the unchunked collective — store-and-forward
+chunk pipelining in the event engine is pure scheduling, never a cost-model
+discount, and ``chunks=1`` returns the :func:`phases` tuple itself.
 """
 from __future__ import annotations
 
@@ -86,6 +95,10 @@ KIND_AR = "ar"
 KIND_RS = "rs"
 KIND_AG = "ag"
 KIND_RS_AG = "rs_ag"
+# point-to-point transfer (pipeline-parallel stage boundary / HLO
+# collective-permute): not a bucket kind, but priced by the same phase
+# machinery so PP background traffic can contend in the event engine
+KIND_P2P = "p2p"
 BUCKET_COMM_KINDS = (KIND_AR, KIND_RS_AG)
 DEFAULT_COMM_KIND = KIND_AR
 
@@ -221,6 +234,7 @@ def best_algo(nbytes: float, spec: ClusterSpec) -> tuple[str, float]:
 PHASE_RS = "reduce_scatter"
 PHASE_AR = "allreduce"
 PHASE_AG = "all_gather"
+PHASE_P2P = "permute"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -331,11 +345,24 @@ _PHASE_FNS = {
 }
 
 
+def _p2p_phases(spec: ClusterSpec) -> tuple[CommPhase, ...]:
+    """One point-to-point transfer (pipeline stage boundary): the full
+    message crosses the bottleneck level once — ``c`` is that level's
+    per-byte cost, ``d`` one hop latency.  Algorithm-independent."""
+    if spec.n_devices <= 1:
+        return ()
+    b = spec.bottleneck_index()
+    lvl = spec.levels[b]
+    return (CommPhase(PHASE_P2P, b, lvl.beta, lvl.alpha),)
+
+
 def _phases_uncached(spec: ClusterSpec, algo: str,
                      kind: str) -> tuple[CommPhase, ...]:
     if kind == KIND_RS_AG:
         return (_phases_uncached(spec, algo, KIND_RS)
                 + _phases_uncached(spec, algo, KIND_AG))
+    if kind == KIND_P2P:
+        return _p2p_phases(spec)
     if spec.compat_hw is not None:
         # the legacy model is one opaque channel: a single phase carrying the
         # seed's exact (C, D); RS/AG are each half of it
@@ -352,9 +379,30 @@ def phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
            kind: str = KIND_AR) -> tuple[CommPhase, ...]:
     """Phase decomposition of one collective of ``kind`` under ``algo`` —
     the schedule unit of the event engine (DESIGN.md Sec. 8)."""
-    if kind not in (KIND_AR, KIND_RS, KIND_AG, KIND_RS_AG):
+    if kind not in (KIND_AR, KIND_RS, KIND_AG, KIND_RS_AG, KIND_P2P):
         raise ValueError(f"unknown comm kind {kind!r}")
     return _phases_uncached(spec, algo, kind)
+
+
+@functools.lru_cache(maxsize=None)
+def chunk_phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
+                 kind: str = KIND_AR, chunks: int = 1) -> tuple[CommPhase, ...]:
+    """Phase decomposition of **one chunk** of a collective split ``chunks``
+    ways (DESIGN.md Sec. 9).
+
+    Each chunk moves ``nbytes / chunks`` of the payload through the same
+    phase sequence; the per-phase latency is split evenly across chunks, so
+    the per-chunk coefficients sum *exactly* to the unchunked ones —
+    chunking conserves total channel work (no fictitious discount) and wins
+    only by store-and-forward pipelining chunks through the link levels.
+    ``chunks=1`` returns the :func:`phases` tuple unchanged (bit-identical
+    schedules)."""
+    if chunks <= 1:
+        return phases(spec, algo, kind)
+    return tuple(
+        dataclasses.replace(p, d=p.d / chunks)
+        for p in phases(spec, algo, kind)
+    )
 
 
 def _comm_coeffs_uncached(spec: ClusterSpec, algo: str,
@@ -381,7 +429,7 @@ def comm_coeffs(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
     :func:`allreduce_coeffs`."""
     if kind == KIND_AR:
         return allreduce_coeffs(spec, algo)
-    if kind not in (KIND_RS, KIND_AG, KIND_RS_AG):
+    if kind not in (KIND_RS, KIND_AG, KIND_RS_AG, KIND_P2P):
         raise ValueError(f"unknown comm kind {kind!r}")
     return _comm_coeffs_uncached(spec, algo, kind)
 

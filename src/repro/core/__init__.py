@@ -3,11 +3,13 @@ from .hw import Hardware, TPU_V5E, allreduce_time, ring_allreduce_coeffs
 from .costs import (OracleEstimator, group_time_oracle, prim_time,
                     profile_graph, total_comm_time, total_compute_time)
 from .simulator import SimResult, Simulator
-from .events import CommEngine, CommJob
-from .search import (ALL_METHODS, METHOD_ALGO, METHOD_COMM, METHOD_DUP,
-                     METHOD_NONDUP, METHOD_TENSOR, SearchResult,
-                     backtracking_search, random_apply)
-from .baselines import (BASELINES, assign_bucket_algos, assign_bucket_comm,
+from .events import (BackgroundTraffic, CommEngine, CommJob, DISC_FAIR,
+                     DISC_FIFO, TC_DP, TC_PP, TC_TP, TRAFFIC_CLASSES)
+from .search import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO, METHOD_CHUNK,
+                     METHOD_COMM, METHOD_DUP, METHOD_NONDUP, METHOD_TENSOR,
+                     SearchResult, backtracking_search, random_apply)
+from .baselines import (BASELINES, assign_bucket_algos,
+                        assign_bucket_chunks, assign_bucket_comm,
                         evaluate_baselines)
 
 __all__ = [
@@ -15,12 +17,13 @@ __all__ = [
     "Hardware", "TPU_V5E", "allreduce_time", "ring_allreduce_coeffs",
     "OracleEstimator", "group_time_oracle", "prim_time", "profile_graph",
     "total_comm_time", "total_compute_time",
-    "SimResult", "Simulator", "CommEngine", "CommJob",
-    "ALL_METHODS", "METHOD_ALGO", "METHOD_COMM", "METHOD_DUP",
-    "METHOD_NONDUP", "METHOD_TENSOR", "SearchResult", "backtracking_search",
-    "random_apply",
-    "BASELINES", "assign_bucket_algos", "assign_bucket_comm",
-    "evaluate_baselines",
+    "SimResult", "Simulator", "BackgroundTraffic", "CommEngine", "CommJob",
+    "DISC_FAIR", "DISC_FIFO", "TC_DP", "TC_PP", "TC_TP", "TRAFFIC_CLASSES",
+    "ALL_METHODS", "CHUNK_CHOICES", "METHOD_ALGO", "METHOD_CHUNK",
+    "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
+    "SearchResult", "backtracking_search", "random_apply",
+    "BASELINES", "assign_bucket_algos", "assign_bucket_chunks",
+    "assign_bucket_comm", "evaluate_baselines",
     "graph_from_jaxpr", "trace_grad_graph",
 ]
 

@@ -3,10 +3,11 @@
 threshold tensor fusion, PyTorch-DDP-style reverse-order bucketing, and the
 full-overlap (FO) bound.  On a non-flat :class:`repro.cluster.ClusterSpec`,
 ``evaluate_baselines`` adds topology-aware rows (Horovod-style hierarchical
-AllReduce, NCCL-style per-bucket algorithm auto-tuning) and two
+AllReduce, NCCL-style per-bucket algorithm auto-tuning) and three
 overlap-aware rows priced by the multi-stream event engine (DESIGN.md
-Sec. 8): an NCCL-channels-style 4-stream pipelined schedule and a ZeRO-3
-reduce-scatter + all-gather schedule.
+Sec. 8-9): an NCCL-channels-style 4-stream pipelined schedule, a ZeRO-3
+reduce-scatter + all-gather schedule, and a chunked variant whose large
+buckets store-and-forward 4 chunks through the link-level phase pipeline.
 """
 from __future__ import annotations
 
@@ -117,6 +118,20 @@ def assign_bucket_comm(g: FusionGraph, kind: str = "rs_ag") -> FusionGraph:
     return g
 
 
+def assign_bucket_chunks(g: FusionGraph, chunks: int = 4,
+                         min_bytes: float = 1 << 20) -> FusionGraph:
+    """Split every bucket of at least ``min_bytes`` into ``chunks``
+    store-and-forward chunks (NCCL-style chunked pipelining, DESIGN.md
+    Sec. 9).  Small buckets keep the whole-bucket collective — chunking
+    them only fragments the fixed latency."""
+    g = g.clone()
+    for i, b in enumerate(g.buckets):
+        if g.bucket_bytes(b) < min_bytes:
+            continue
+        g.set_bucket_chunks(i, chunks)
+    return g
+
+
 BASELINES = {
     "JAX_no_fusion": jax_no_fusion,
     "JAX_op_fusion": jax_op_fusion,
@@ -144,10 +159,13 @@ def evaluate_baselines(g: FusionGraph, sim: Simulator) -> dict[str, float]:
         # the estimator so fused-op times come from the same cache.
         sim_ms = Simulator(estimator=sim.estimator, hw=sim.hw,
                            cluster=cluster, streams=OVERLAP_STREAMS,
-                           incremental=False)
+                           incremental=False,
+                           background=getattr(sim, "background", ()))
         zero3 = assign_bucket_comm(tuned, "rs_ag")
+        chunked = assign_bucket_chunks(tuned, 4)
         out[f"NCCL_{OVERLAP_STREAMS}stream"] = sim_ms.cost(tuned)
         out["ZeRO3_rs_ag"] = sim_ms.cost(zero3)
+        out[f"NCCL_{OVERLAP_STREAMS}stream_chunked"] = sim_ms.cost(chunked)
         # keep the FO row a floor for *every* reported row: the extra rows
         # price different strategies (algo/comm assignments) and a
         # different channel model, so extend the bound to the min over the
@@ -156,5 +174,6 @@ def evaluate_baselines(g: FusionGraph, sim: Simulator) -> dict[str, float]:
                         sim.full_overlap_bound(hier),
                         sim.full_overlap_bound(tuned),
                         sim_ms.full_overlap_bound(tuned),
-                        sim_ms.full_overlap_bound(zero3))
+                        sim_ms.full_overlap_bound(zero3),
+                        sim_ms.full_overlap_bound(chunked))
     return out

@@ -57,7 +57,7 @@ def profile_graph(g: FusionGraph, hw: Hardware = TPU_V5E) -> FusionGraph:
     return FusionGraph._from_parts(
         prims, g.psuccs, g.ppreds, g.groups, g.provider, g._next_gid,
         g.grad_prim, g.buckets, bucket_algos=g.bucket_algos,
-        bucket_comm=g.bucket_comm,
+        bucket_comm=g.bucket_comm, bucket_chunks=g.bucket_chunks,
     )
 
 

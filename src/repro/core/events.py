@@ -1,71 +1,150 @@
-"""Phase-level, multi-resource communication event engine (DESIGN.md Sec. 8).
+"""Dependency-aware, phase-level communication event engine (DESIGN.md
+Sec. 8-9).
 
 The seed simulator priced communication as one serialized channel: each
 bucket's collective was a single opaque interval, FIFO in readiness order.
-That model cannot see the effects that dominate on hierarchical clusters —
-two buckets whose phases occupy *different* link levels (one still inside
-its intra-host reduce-scatter while another crosses the inter-host fabric)
-genuinely overlap, and buckets contending on the *same* level share its
-bandwidth rather than queueing politely.
+PR 3 replaced that with a phase-level engine — collectives decompose into
+per-link-level phases, concurrent phases on one level share its bandwidth —
+but jobs were still a flat list of independent transfers.  This revision
+makes the engine a general dependency-aware scheduler:
 
-This engine schedules :class:`CommJob` s (one per gradient bucket) as
-sequences of :class:`repro.cluster.collectives.CommPhase` steps over one
-resource per :class:`~repro.cluster.topology.LinkLevel`:
+* **Jobs** (:class:`CommJob`) carry ``deps`` — job-ids that must *finish*
+  before the job may start — and a ``traffic_class`` (``dp`` gradient
+  bucket / ``tp`` tensor-parallel / ``pp`` pipeline-parallel), so
+  non-gradient collectives extracted from the compiled HLO can contend with
+  gradient buckets on the same link levels (:class:`BackgroundTraffic`
+  turns a recurring TP/PP collective into concrete jobs over a horizon).
+* **Chunked store-and-forward** — a job may name an ``after`` predecessor
+  (the previous chunk of the same bucket): it may not *start phase p*
+  before the predecessor has *finished its phase p*.  Chunks of one fused
+  bucket thereby pipeline through the link levels (chunk 1's intra-host
+  leg under chunk 0's inter-host leg) without ever overtaking each other —
+  the CoCoNet-style dependency-ordered chunk schedule.  Per-chunk phase
+  coefficients (:func:`repro.cluster.collectives.chunk_phases`) sum exactly
+  to the unchunked ones, so chunking conserves channel work and wins only
+  by scheduling.
+* **Per-level discipline** — each level serves its contenders either
+  **fair-share** (``k`` active phases progress at rate ``1/k`` each; the
+  PR-3 fluid model, still the default and bit-identical to it) or **FIFO**
+  (one phase at a time, arrival order, full rate).  ``discipline`` is a
+  single mode or a ``{level_index: mode}`` mapping.
+* ``streams`` bounds how many **distinct DP buckets** are in flight
+  (NCCL-channel style); chunks of one bucket share their bucket's slot and
+  TP/PP background traffic bypasses the bound (it is not issued by the
+  gradient hook).  ``streams=1`` with dependency-free jobs is the
+  **serialized channel**, bit-identical to the seed's ``_comm_pass``.
 
-* ``streams`` bounds how many jobs are in flight concurrently (NCCL-channel
-  style).  ``streams=1`` is the **serialized channel**: jobs run one at a
-  time as opaque intervals, and the arithmetic is bit-identical to the
-  seed's ``_comm_pass`` (same ordering, same ``c*x + d`` multiply-add, same
-  ``max(chan_free, ready)`` — the PR-1/PR-2 golden equivalence tests pass
-  unmodified).
-* With ``streams > 1`` each job executes its phase sequence in order; when
-  ``k`` active phases occupy one level, each progresses at rate ``1/k``
-  (fair-share / processor-sharing fluid model), so no level is ever driven
-  past its capacity.  Phases on different levels proceed at full rate
-  concurrently — the pipelining win of hierarchical collectives.
-
-The engine is jax-free and allocation-light: phase decompositions and
-opaque-interval coefficients are memoised per (algo, kind), so the hot
-serialized path is a dict hit + multiply-add exactly like the seed.
-
-Timeline records are 6-tuples ``(kind, bucket, algo, level, start, end)``
-where ``kind`` is ``allreduce`` / ``reduce_scatter`` / ``all_gather`` (or
-the opaque ``rs_ag`` in serialized mode), distinguishing ring vs tree vs
-hierarchical phases and the ZeRO-3 RS/AG path in ``--timeline`` output.
+Timeline records are 8-tuples
+``(kind, bucket, chunk, traffic_class, algo, level, start, end)``
+(``--timeline`` output; see DESIGN.md Sec. 9 for the field semantics).
 ``record_load=True`` additionally keeps per-level utilisation segments
-``(level, t0, t1, work_seconds)`` — the seconds of work the level actually
-advanced during the segment — so tests can assert no oversubscription from
-observed progress (``work_seconds <= t1 - t0``), not from the prescribed
-shares.
+``(level, t0, t1, work_seconds)`` so tests can assert no oversubscription
+from observed progress, not from the prescribed shares.  After ``run()``
+the engine exposes ``job_finish`` (jid -> finish time) and per-class
+``class_busy`` / ``class_finish`` tallies so callers can gate on gradient
+traffic alone while background traffic keeps contending.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from ..cluster import ClusterSpec
-from ..cluster.collectives import (KIND_AR, KIND_RS_AG, comm_coeffs, phases)
+from ..cluster.collectives import (KIND_AR, KIND_RS_AG, chunk_phases,
+                                   comm_coeffs)
+
+# traffic classes a job can belong to
+TC_DP = "dp"    # data-parallel gradient bucket (the searched dimension)
+TC_TP = "tp"    # tensor-parallel activation collective
+TC_PP = "pp"    # pipeline-parallel stage-boundary transfer
+TRAFFIC_CLASSES = (TC_DP, TC_TP, TC_PP)
+
+# per-level service disciplines
+DISC_FAIR = "fair"
+DISC_FIFO = "fifo"
+DISCIPLINES = (DISC_FAIR, DISC_FIFO)
 
 
 @dataclasses.dataclass(frozen=True)
 class CommJob:
-    """One bucket's collective: ready time, volume, and how to run it."""
+    """One collective transfer: ready time, volume, how to run it, and its
+    position in the dependency structure.
+
+    ``job_id`` defaults to ``bucket`` (the PR-3 identity); chunk jobs and
+    background jobs need explicit distinct ids.  ``deps`` are job-ids that
+    must have *finished all phases* before this job may start.  ``after``
+    is the store-and-forward predecessor: this job may not start its phase
+    ``p`` before ``after`` has completed its phase ``p`` (chunks of one
+    bucket share a phase sequence, so positions align)."""
     bucket: int
     ready: float
     nbytes: float
     algo: str = "ring"
     kind: str = KIND_AR
+    job_id: int | None = None
+    deps: tuple[int, ...] = ()
+    after: int | None = None
+    chunk: int = 0
+    chunks: int = 1
+    traffic_class: str = TC_DP
+
+    @property
+    def jid(self) -> int:
+        return self.bucket if self.job_id is None else self.job_id
+
+
+@dataclasses.dataclass(frozen=True)
+class BackgroundTraffic:
+    """A recurring non-gradient collective: one TP activation AllReduce or
+    PP boundary transfer issued every ``period`` seconds starting at
+    ``offset``.  ``materialize`` expands it into concrete :class:`CommJob`s
+    over a horizon (the iteration's compute span)."""
+    traffic_class: str
+    nbytes: float
+    period: float
+    algo: str = "ring"
+    kind: str = KIND_AR
+    offset: float = 0.0
+    count: int | None = None
+
+    # safety cap: a mis-sized period cannot explode the event loop
+    MAX_JOBS = 512
+
+    def materialize(self, horizon: float, base_id: int) -> list[CommJob]:
+        if self.nbytes <= 0.0:
+            return []
+        if self.count is not None:
+            n = int(self.count)
+        elif self.period > 0.0:
+            n = int(math.ceil(max(horizon - self.offset, 0.0) / self.period))
+        else:
+            n = 1
+        n = max(min(n, self.MAX_JOBS), 0)
+        return [
+            CommJob(bucket=-1 - k, ready=self.offset + k * self.period,
+                    nbytes=self.nbytes, algo=self.algo, kind=self.kind,
+                    job_id=base_id + k, traffic_class=self.traffic_class)
+            for k in range(n)
+        ]
 
 
 class _Active:
     """A job in flight: its phase worklist and current-phase progress."""
     __slots__ = ("bucket", "algo", "steps", "idx", "level", "kind",
-                 "remaining", "work", "phase_start")
+                 "remaining", "work", "phase_start", "jid", "after",
+                 "chunk", "tclass", "order", "started")
 
-    def __init__(self, job: CommJob, steps: list[tuple[str, int, float]]):
+    def __init__(self, job: CommJob, steps: list[tuple[str, int, float]],
+                 order: int):
         self.bucket = job.bucket
         self.algo = job.algo
         self.steps = steps     # [(phase_kind, level, work_seconds), ...]
         self.idx = -1
+        self.jid = job.jid
+        self.after = job.after
+        self.chunk = job.chunk
+        self.tclass = job.traffic_class
+        self.order = order     # admission order (FIFO tie-break)
 
     def advance(self, now: float) -> bool:
         """Move to the next non-empty phase; False when the job is done."""
@@ -79,7 +158,10 @@ class _Active:
                 self.level = level
                 self.work = work
                 self.remaining = work
+                # queue-entry time; re-stamped at first service so FIFO-
+                # queued / after-blocked waits are not reported as occupancy
                 self.phase_start = now
+                self.started = False
                 return True
 
 
@@ -88,13 +170,33 @@ class CommEngine:
     :class:`ClusterSpec`; returns ``(busy_seconds, finish_time)``."""
 
     def __init__(self, spec: ClusterSpec, streams: int = 1,
-                 record_load: bool = False):
+                 record_load: bool = False,
+                 discipline: str | dict[int, str] = DISC_FAIR):
         self.spec = spec
         self.streams = max(int(streams), 1)
         self.record_load = record_load
+        if isinstance(discipline, str):
+            if discipline not in DISCIPLINES:
+                raise ValueError(f"unknown discipline {discipline!r}; "
+                                 f"expected one of {DISCIPLINES}")
+            self._disc = [discipline] * len(spec.levels)
+        else:
+            self._disc = [DISC_FAIR] * len(spec.levels)
+            for lvl, d in discipline.items():
+                if d not in DISCIPLINES:
+                    raise ValueError(f"unknown discipline {d!r}; "
+                                     f"expected one of {DISCIPLINES}")
+                if not 0 <= lvl < len(spec.levels):
+                    raise ValueError(
+                        f"discipline level {lvl} out of range for "
+                        f"{len(spec.levels)}-level spec {spec.name!r}")
+                self._disc[lvl] = d
         self.level_load: list[tuple[int, float, float, float]] = []
+        self.job_finish: dict[int, float] = {}
+        self.class_busy: dict[str, float] = {}
+        self.class_finish: dict[str, float] = {}
         self._coeffs: dict[tuple[str, str], tuple[float, float]] = {}
-        self._steps: dict[tuple[str, str], tuple] = {}
+        self._steps: dict[tuple[str, str, int], tuple] = {}
         self._chan_level = spec.levels[spec.bottleneck_index()].name
 
     # ------------------------------------------------------------- helpers
@@ -107,80 +209,224 @@ class CommEngine:
         return cd
 
     def _job_steps(self, job: CommJob) -> list[tuple[str, int, float]]:
-        key = (job.algo, job.kind)
+        key = (job.algo, job.kind, job.chunks)
         ph = self._steps.get(key)
         if ph is None:
-            ph = phases(self.spec, job.algo, job.kind)
+            ph = chunk_phases(self.spec, job.algo, job.kind, job.chunks)
             self._steps[key] = ph
         return [(p.kind, p.level, p.c * job.nbytes + p.d) for p in ph]
+
+    def _account(self, tclass: str, work: float) -> None:
+        self.class_busy[tclass] = self.class_busy.get(tclass, 0.0) + work
+
+    def _finish_job(self, jid: int, tclass: str, t: float) -> None:
+        self.job_finish[jid] = t
+        if t > self.class_finish.get(tclass, 0.0):
+            self.class_finish[tclass] = t
 
     # ----------------------------------------------------------------- run
     def run(self, jobs: list[CommJob],
             timeline: list | None = None) -> tuple[float, float]:
         # each run is an independent schedule starting at t=0: utilisation
-        # segments must not accumulate across runs
+        # segments and per-job/per-class tallies must not accumulate
         self.level_load = []
+        self.job_finish = {}
+        self.class_busy = {}
+        self.class_finish = {}
+        # zero-byte jobs transfer nothing: free, and they satisfy deps
+        # immediately (a dep on an empty chunk must not deadlock the chain)
+        for job in jobs:
+            if job.nbytes <= 0.0:
+                self._finish_job(job.jid, job.traffic_class, 0.0)
         if self.streams == 1:
             return self._run_serialized(jobs, timeline)
         return self._run_phased(jobs, timeline)
 
+    # ------------------------------------------------------ serialized path
     def _run_serialized(self, jobs: list[CommJob],
                         timeline: list | None) -> tuple[float, float]:
         # the seed's comm pass: buckets transfer in order of readiness
         # (ties by index), serialized on one channel.  Arithmetic must stay
         # bit-identical: one c*x + d per job, start = max(chan_free, ready).
+        if any(j.deps or j.after is not None for j in jobs):
+            return self._run_serialized_deps(jobs, timeline)
         chan_free = 0.0
         busy = 0.0
         finish = 0.0
-        for job in sorted(jobs, key=lambda j: (j.ready, j.bucket)):
+        for job in sorted(jobs, key=lambda j: (j.ready, j.bucket, j.chunk)):
             if job.nbytes <= 0.0:
                 continue  # nothing to transfer: no latency D charged
-            c, d = self._job_coeffs(job.algo, job.kind)
-            t = c * job.nbytes + d
+            t = self._opaque_interval(job)
             start = max(chan_free, job.ready)
             chan_free = start + t
             busy += t
             finish = chan_free
+            self._account(job.traffic_class, t)
+            self._finish_job(job.jid, job.traffic_class, chan_free)
             if timeline is not None:
-                kind = "allreduce" if job.kind == KIND_AR else KIND_RS_AG
-                timeline.append((kind, job.bucket, job.algo,
+                kind = "allreduce" if job.kind == KIND_AR else job.kind
+                timeline.append((kind, job.bucket, job.chunk,
+                                 job.traffic_class, job.algo,
                                  self._chan_level, start, chan_free))
         return busy, finish
 
+    def _opaque_interval(self, job: CommJob) -> float:
+        """Serialized (single-channel) cost of one job: ``c*x + d`` with
+        the phase latency split across the bucket's chunks (``d / 1 == d``
+        bit-exactly, so unchunked jobs keep the seed arithmetic)."""
+        c, d = self._job_coeffs(job.algo, job.kind)
+        return c * job.nbytes + d / max(job.chunks, 1)
+
+    def _run_serialized_deps(self, jobs: list[CommJob],
+                             timeline: list | None) -> tuple[float, float]:
+        """Serialized channel with finish-first ordering: the next job run
+        is the earliest-(ready, bucket, chunk) job whose ``deps`` (and
+        ``after`` predecessor — on one channel store-and-forward degenerates
+        to whole-job ordering) have all finished."""
+        ids = {j.jid for j in jobs}
+        pending = sorted((j for j in jobs if j.nbytes > 0.0),
+                         key=lambda j: (j.ready, j.bucket, j.chunk))
+        chan_free = 0.0
+        busy = 0.0
+        finish = 0.0
+        while pending:
+            picked = None
+            for i, job in enumerate(pending):
+                need = list(job.deps)
+                if job.after is not None:
+                    need.append(job.after)
+                if all(d not in ids or d in self.job_finish for d in need):
+                    picked = i
+                    break
+            if picked is None:
+                raise RuntimeError("dependency cycle in comm jobs")
+            job = pending.pop(picked)
+            t = self._opaque_interval(job)
+            dep_ready = max((self.job_finish[x] for x in job.deps
+                             if x in ids), default=0.0)
+            if job.after is not None and job.after in ids:
+                dep_ready = max(dep_ready, self.job_finish[job.after])
+            start = max(chan_free, job.ready, dep_ready)
+            chan_free = start + t
+            busy += t
+            finish = max(finish, chan_free)
+            self._account(job.traffic_class, t)
+            self._finish_job(job.jid, job.traffic_class, chan_free)
+            if timeline is not None:
+                kind = "allreduce" if job.kind == KIND_AR else job.kind
+                timeline.append((kind, job.bucket, job.chunk,
+                                 job.traffic_class, job.algo,
+                                 self._chan_level, start, chan_free))
+        return busy, finish
+
+    # ---------------------------------------------------------- phased path
+    def _runnable(self, a: _Active, by_id: dict[int, "_Active"],
+                  ids: set[int]) -> bool:
+        """Store-and-forward gate: a chunk may run its phase ``idx`` only
+        once its ``after`` predecessor has completed that phase."""
+        if a.after is None or a.after not in ids:
+            return True
+        if a.after in self.job_finish:
+            return True
+        pred = by_id.get(a.after)
+        # a predecessor still waiting in the pending queue blocks the chain
+        return pred is not None and pred.idx > a.idx
+
     def _run_phased(self, jobs: list[CommJob],
                     timeline: list | None) -> tuple[float, float]:
+        ids = {j.jid for j in jobs}
         pending = sorted((j for j in jobs if j.nbytes > 0.0),
-                         key=lambda j: (j.ready, j.bucket), reverse=True)
+                         key=lambda j: (j.ready, j.bucket, j.chunk))
         active: list[_Active] = []
+        by_id: dict[int, _Active] = {}
+        # slot accounting: distinct DP buckets in flight (chunks share their
+        # bucket's slot; TP/PP background traffic bypasses the bound)
+        inflight: dict[int, int] = {}
         t = 0.0
         busy = 0.0
         finish = 0.0
+        order = 0
         names = [l.name for l in self.spec.levels]
+        disc = self._disc
         while pending or active:
-            while pending and len(active) < self.streams \
-                    and pending[-1].ready <= t:
-                job = pending.pop()
-                a = _Active(job, self._job_steps(job))
+            # ---- admission: ready, deps finished, slot available
+            i = 0
+            while i < len(pending):
+                job = pending[i]
+                if job.ready > t:
+                    break
+                if any(d in ids and d not in self.job_finish
+                       for d in job.deps):
+                    i += 1
+                    continue
+                if (job.traffic_class == TC_DP
+                        and job.bucket not in inflight
+                        and len(inflight) >= self.streams):
+                    i += 1
+                    continue
+                del pending[i]
+                a = _Active(job, self._job_steps(job), order)
+                order += 1
                 if a.advance(t):
                     active.append(a)
+                    by_id[a.jid] = a
+                    if job.traffic_class == TC_DP:
+                        inflight[job.bucket] = inflight.get(job.bucket, 0) + 1
                 else:
                     finish = max(finish, t)  # all-empty phase list
+                    self._finish_job(job.jid, job.traffic_class, t)
             if not active:
-                t = pending[-1].ready
+                if not pending:
+                    break  # admission drained everything as zero-work jobs
+                later = [j.ready for j in pending if j.ready > t]
+                if not later:
+                    raise RuntimeError("dependency cycle in comm jobs")
+                t = min(later)
+                continue
+            runnable = [a for a in active if self._runnable(a, by_id, ids)]
+            if not runnable:
+                later = [j.ready for j in pending if j.ready > t]
+                if not later:
+                    raise RuntimeError("store-and-forward cycle in comm jobs")
+                t = min(later)
                 continue
             counts: dict[int, int] = {}
-            for a in active:
+            for a in runnable:
                 counts[a.level] = counts.get(a.level, 0) + 1
+            # per-level discipline: fair-share divides a level's rate over
+            # its contenders; FIFO serves them one at a time in admission /
+            # phase-arrival order at full rate.  ``share`` is the divisor a
+            # running phase's progress rate pays (None: not served now).
+            share: dict[int, int] = {}
+            heads: dict[int, _Active] = {}
+            for a in runnable:
+                if disc[a.level] == DISC_FAIR:
+                    share[id(a)] = counts[a.level]
+                else:
+                    h = heads.get(a.level)
+                    if h is None or (a.phase_start, a.order) < \
+                            (h.phase_start, h.order):
+                        heads[a.level] = a
+            for a in heads.values():
+                share[id(a)] = 1
             # next event: earliest phase completion under the current
-            # fair-share rates, or the next admissible arrival
-            dt = min(a.remaining * counts[a.level] for a in active)
-            if pending and len(active) < self.streams:
-                dt = min(dt, pending[-1].ready - t)
+            # rates, or the next admissible arrival
+            dt = min(a.remaining * share[id(a)] for a in runnable
+                     if id(a) in share)
+            arrival = self._next_admissible_arrival(pending, inflight, t)
+            if arrival is not None:
+                dt = min(dt, arrival - t)
             dt = max(dt, 0.0)
             t1 = t + dt
             progressed: dict[int, float] = {}
-            for a in active:
-                step = dt / counts[a.level]
+            for a in runnable:
+                s = share.get(id(a))
+                if s is None:
+                    continue
+                if not a.started:
+                    a.phase_start = t
+                    a.started = True
+                step = dt / s
                 a.remaining -= step
                 if self.record_load:
                     progressed[a.level] = progressed.get(a.level, 0.0) + step
@@ -195,14 +441,42 @@ class CommEngine:
             for a in active:
                 if a.remaining <= 1e-12 * a.work:
                     busy += a.work
+                    self._account(a.tclass, a.work)
                     if timeline is not None:
-                        timeline.append((a.kind, a.bucket, a.algo,
-                                         names[a.level], a.phase_start, t))
+                        timeline.append((a.kind, a.bucket, a.chunk,
+                                         a.tclass, a.algo, names[a.level],
+                                         a.phase_start, t))
                     if a.advance(t):
                         still.append(a)
                     else:
                         finish = max(finish, t)
+                        del by_id[a.jid]
+                        self._finish_job(a.jid, a.tclass, t)
+                        if a.tclass == TC_DP:
+                            inflight[a.bucket] -= 1
+                            if not inflight[a.bucket]:
+                                del inflight[a.bucket]
                 else:
                     still.append(a)
             active = still
         return busy, finish
+
+    def _next_admissible_arrival(self, pending: list[CommJob],
+                                 inflight: dict[int, int],
+                                 now: float) -> float | None:
+        """Earliest *future* ready time among pending jobs that could be
+        admitted when they arrive (slot free, or slot-exempt, given the
+        current in-flight set).  Jobs already ready but held back by a
+        dependency or a full slot table are not arrival events — their
+        admission is retried at the finish event that unblocks them."""
+        slot_free = len(inflight) < self.streams
+        best = None
+        for j in pending:
+            if j.ready <= now:
+                continue
+            if (j.traffic_class == TC_DP and not slot_free
+                    and j.bucket not in inflight):
+                continue
+            if best is None or j.ready < best:
+                best = j.ready
+        return best

@@ -2,7 +2,9 @@
 
 Encoder: multi-head graph attention layers (eq. (1)) over the fused op's
 internal subgraph — node features are (op-category one-hot, log FLOPs,
-log in/out bytes, log standalone time, degree).  A sum-pool layer produces
+log in/out bytes, log standalone time) plus, on gradient-producing nodes,
+the comm dimensions of the bucket the gradient lands in (collective
+algorithm, comm kind, chunk count — the searched communication state).  A sum-pool layer produces
 the fused-op embedding (eq. (2)), followed by an FC regression head.  Loss
 is squared error in log-time (eq. (3)); training uses our AdamW
 (:mod:`repro.optim`).
@@ -19,16 +21,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..cluster import BUCKET_COMM_KINDS, COLLECTIVE_ALGOS
 from ..optim import adamw, apply_updates
 from .graph import DOT, EW, FusionGraph, LAYOUT, OPAQUE, REDUCE
 
 CATEGORIES = (EW, REDUCE, DOT, LAYOUT, OPAQUE)
-N_FEATURES = len(CATEGORIES) + 4  # + log flops, log in_b, log out_b, log time
+# per-node features: op-category one-hot, log flops/in_b/out_b/time, and —
+# for gradient-producing prims — the comm dimensions of the bucket the
+# gradient lands in (collective algorithm, comm kind, chunk count), so the
+# estimator is not blind to the searched communication state
+N_COMM_FEATURES = 3
+N_FEATURES = len(CATEGORIES) + 4 + N_COMM_FEATURES
+
+
+def _param_bucket_index(g: FusionGraph) -> dict[int, int]:
+    """grad-param leaf index -> bucket index (buckets partition the params)."""
+    out: dict[int, int] = {}
+    for bi, bucket in enumerate(g.buckets):
+        for param in bucket:
+            out[param] = bi
+    return out
 
 
 # ------------------------------------------------------------------ features
-def group_features(g: FusionGraph, gid: int, max_nodes: int):
-    """(feat [N,F], adj [N,N], mask [N]) for the members of one fused group."""
+def group_features(g: FusionGraph, gid: int, max_nodes: int,
+                   param_bucket: dict[int, int] | None = None):
+    """(feat [N,F], adj [N,N], mask [N]) for the members of one fused
+    group.  ``param_bucket`` (grad-param -> bucket index) may be passed by
+    callers that already hold the map (the estimator caches it); otherwise
+    it is built lazily on the first gradient-producing member."""
     members = sorted(g.groups[gid])
     n = min(len(members), max_nodes)
     members = members[:n]
@@ -36,13 +57,26 @@ def group_features(g: FusionGraph, gid: int, max_nodes: int):
     feat = np.zeros((max_nodes, N_FEATURES), np.float32)
     adj = np.zeros((max_nodes, max_nodes), np.float32)
     mask = np.zeros((max_nodes,), np.float32)
+    base = len(CATEGORIES)
     for i, pid in enumerate(members):
         p = g.prims[pid]
         feat[i, CATEGORIES.index(p.category)] = 1.0
-        feat[i, len(CATEGORIES) + 0] = np.log1p(p.flops) / 30.0
-        feat[i, len(CATEGORIES) + 1] = np.log1p(p.in_bytes) / 30.0
-        feat[i, len(CATEGORIES) + 2] = np.log1p(p.out_bytes) / 30.0
-        feat[i, len(CATEGORIES) + 3] = np.log1p(p.time * 1e9) / 30.0
+        feat[i, base + 0] = np.log1p(p.flops) / 30.0
+        feat[i, base + 1] = np.log1p(p.in_bytes) / 30.0
+        feat[i, base + 2] = np.log1p(p.out_bytes) / 30.0
+        feat[i, base + 3] = np.log1p(p.time * 1e9) / 30.0
+        if p.grad_param >= 0:
+            if param_bucket is None:
+                param_bucket = _param_bucket_index(g)
+            bi = param_bucket.get(p.grad_param)
+            if bi is not None:
+                feat[i, base + 4] = (
+                    (COLLECTIVE_ALGOS.index(g.bucket_algos[bi]) + 1.0)
+                    / len(COLLECTIVE_ALGOS))
+                feat[i, base + 5] = (
+                    (BUCKET_COMM_KINDS.index(g.bucket_comm[bi]) + 1.0)
+                    / len(BUCKET_COMM_KINDS))
+                feat[i, base + 6] = np.log2(g.bucket_chunks[bi]) / 4.0
         mask[i] = 1.0
         adj[i, i] = 1.0
         for q in g.ppreds[pid]:
@@ -182,23 +216,62 @@ def predict_times(params, samples) -> np.ndarray:
 # ----------------------------------------------------------------- estimator
 class GNNEstimator:
     """Drop-in for :class:`repro.core.costs.OracleEstimator`, backed by the
-    trained GNN for multi-op groups; singleton groups use profiled times."""
+    trained GNN for multi-op groups; singleton groups use profiled times.
+
+    ``comm_sensitive`` tells the simulator's delta path that predictions
+    depend on the searched comm dimensions (bucket algo / comm kind /
+    chunks): cached per-group times from an ancestor schedule are stale
+    across bucket-dimension mutations, so those journals must fall back to
+    a full replay (the comm-blind oracle keeps the fast delta path)."""
+
+    comm_sensitive = True
 
     def __init__(self, params: dict, cfg: GNNConfig):
         self.params = params
         self.cfg = cfg
         self._cache: dict = {}
+        self._bucket_maps: dict = {}
         self._fwd = jax.jit(forward)
+
+    def _param_bucket(self, g: FusionGraph) -> dict[int, int]:
+        # content-keyed so clones sharing a bucket partition share the map
+        key = tuple(g.buckets)
+        m = self._bucket_maps.get(key)
+        if m is None:
+            # bucket mutations mint a new partition per candidate: bound
+            # the cache so a long search cannot accumulate O(n_params)
+            # dicts without end
+            if len(self._bucket_maps) >= 256:
+                self._bucket_maps.clear()
+            m = _param_bucket_index(g)
+            self._bucket_maps[key] = m
+        return m
 
     def group_time(self, g: FusionGraph, gid: int) -> float:
         members = g.groups[gid]
         if len(members) == 1:
             (pid,) = members
             return g.prims[pid].time
-        key = members
+        # the feature vector carries the comm dimensions of any member
+        # gradient's bucket, so the cache must key on them too or a comm
+        # mutation would replay a stale prediction.  Most groups produce no
+        # gradients: their key is (members, ()) with no bucket scan at all.
+        grad_params = [g.prims[pid].grad_param for pid in members
+                       if g.prims[pid].grad_param >= 0]
+        if grad_params:
+            pb = self._param_bucket(g)
+            comm_key = tuple(
+                (g.bucket_algos[bi], g.bucket_comm[bi], g.bucket_chunks[bi])
+                for bi in sorted({pb[p] for p in grad_params if p in pb})
+            )
+        else:
+            comm_key = ()
+        key = (members, comm_key)
         t = self._cache.get(key)
         if t is None:
-            feat, adj, mask = group_features(g, gid, self.cfg.max_nodes)
+            feat, adj, mask = group_features(
+                g, gid, self.cfg.max_nodes,
+                param_bucket=self._param_bucket(g) if grad_params else None)
             t = float(np.exp(self._fwd(self.params, feat, adj, mask)))
             self._cache[key] = t
         return t

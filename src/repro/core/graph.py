@@ -21,9 +21,11 @@ The IR has two levels:
 Mutations (`fuse_nondup`, `fuse_dup`, `merge_buckets`) are the paper's three
 optimisation methods (Sec. 4.5); each validates DAG-ness of the quotient
 graph and op fusibility before committing.  ``set_bucket_algo`` is the
-cluster extension's fourth method and ``set_bucket_comm`` the event-engine
-extension's fifth: the search is joint over op fusion x tensor fusion x
-collective algorithm x comm kind (DESIGN.md Sec. 7-8).
+cluster extension's fourth method, ``set_bucket_comm`` the event-engine
+extension's fifth, and ``set_bucket_chunks`` (store-and-forward chunk
+count, ``bucket_chunks``) the sixth: the search is joint over op fusion x
+tensor fusion x collective algorithm x comm kind x chunking (DESIGN.md
+Sec. 7-9).
 
 Incremental invariants
 ----------------------
@@ -134,12 +136,17 @@ class FusionGraph:
         # per-bucket communication kind: fused AllReduce ("ar", the seed
         # model) or ZeRO-3-style reduce-scatter + all-gather ("rs_ag")
         self.bucket_comm: list[str] = ["ar"] * len(self.buckets)
+        # per-bucket chunk count: >1 splits the fused tensor into chunks
+        # that store-and-forward through the event engine's phase pipeline
+        # (1, the seed model, is one whole-bucket collective)
+        self.bucket_chunks: list[int] = [1] * len(self.buckets)
         self._rebuild_derived()
 
     @classmethod
     def _from_parts(cls, prims, psuccs, ppreds, groups, provider, next_gid,
                     grad_prim, buckets, family: int | None = None,
-                    bucket_algos=None, bucket_comm=None) -> "FusionGraph":
+                    bucket_algos=None, bucket_comm=None,
+                    bucket_chunks=None) -> "FusionGraph":
         """Assemble a graph from explicit state (see ``profile_graph``);
         derived structures are rebuilt from scratch.  ``family`` pins the
         estimator-cache lineage when the prims are shared with an existing
@@ -157,6 +164,8 @@ class FusionGraph:
                           else ["ring"] * len(g.buckets))
         g.bucket_comm = (list(bucket_comm) if bucket_comm is not None
                          else ["ar"] * len(g.buckets))
+        g.bucket_chunks = (list(bucket_chunks) if bucket_chunks is not None
+                           else [1] * len(g.buckets))
         g._rebuild_derived()
         if family is not None:
             g._family = family
@@ -219,6 +228,7 @@ class FusionGraph:
         g.buckets = list(self.buckets)
         g.bucket_algos = list(self.bucket_algos)
         g.bucket_comm = list(self.bucket_comm)
+        g.bucket_chunks = list(self.bucket_chunks)
         # quotient structures are shared: mutations are copy-on-write (they
         # replace modified adjacency sets, never mutate them in place)
         g._qsuccs = self._qsuccs
@@ -449,9 +459,11 @@ class FusionGraph:
             return False
         lo = min(i, j)
         self.buckets[lo : lo + 2] = [a + b]
-        # the merged bucket keeps the leading bucket's algorithm & comm kind
+        # the merged bucket keeps the leading bucket's algorithm, comm kind
+        # and chunk count
         self.bucket_algos[lo : lo + 2] = [self.bucket_algos[lo]]
         self.bucket_comm[lo : lo + 2] = [self.bucket_comm[lo]]
+        self.bucket_chunks[lo : lo + 2] = [self.bucket_chunks[lo]]
         self._journal.append(("bucket", lo))
         return True
 
@@ -490,6 +502,23 @@ class FusionGraph:
             return False
         self.bucket_comm[i] = kind
         self._journal.append(("comm", i))
+        return True
+
+    def set_bucket_chunks(self, i: int, chunks: int) -> bool:
+        """Event-engine method (vi): split bucket ``i`` into ``chunks``
+        store-and-forward chunks pipelined through the link-level phases
+        (DESIGN.md Sec. 9).  ``chunks=1`` is the whole-bucket collective;
+        per-chunk phase coefficients sum to the unchunked ones, so the
+        choice is pure scheduling.  A no-op choice returns False."""
+        chunks = int(chunks)
+        if chunks < 1:
+            raise ValueError(f"bucket chunk count must be >= 1, got {chunks}")
+        if not 0 <= i < len(self.buckets):
+            return False
+        if self.bucket_chunks[i] == chunks:
+            return False
+        self.bucket_chunks[i] = chunks
+        self._journal.append(("chunk", i))
         return True
 
     # ------------------------------------------------------------ accessors
@@ -545,15 +574,16 @@ class FusionGraph:
         gs = tuple(sorted(tuple(sorted(m)) for m in self.groups.values()))
         pv = tuple(sorted(self.provider.items()))
         bk = tuple(self.buckets)
-        return (gs, pv, bk, tuple(self.bucket_algos), tuple(self.bucket_comm))
+        return (gs, pv, bk, tuple(self.bucket_algos),
+                tuple(self.bucket_comm), tuple(self.bucket_chunks))
 
     def fast_signature(self) -> tuple[int, int]:
         """Order-independent rolling hash of (groups, provider, buckets,
-        bucket algos, bucket comm kinds), maintained by the mutations —
-        O(#buckets) instead of O(V log V)."""
+        bucket algos, comm kinds, chunk counts), maintained by the
+        mutations — O(#buckets) instead of O(V log V)."""
         return (self._ghash,
                 hash((tuple(self.buckets), tuple(self.bucket_algos),
-                      tuple(self.bucket_comm))))
+                      tuple(self.bucket_comm), tuple(self.bucket_chunks))))
 
     # --------------------------------------------------------------- stats
     def describe(self) -> dict:
@@ -574,5 +604,9 @@ class FusionGraph:
             },
             "bucket_comm": {
                 k: self.bucket_comm.count(k) for k in set(self.bucket_comm)
+            },
+            "bucket_chunks": {
+                k: self.bucket_chunks.count(k)
+                for k in set(self.bucket_chunks)
             },
         }

@@ -7,9 +7,11 @@ paper's three (non-duplicate fusion, duplicate fusion, tensor fusion) plus
 the cluster extension's per-bucket collective-algorithm choice
 (``METHOD_ALGO``, DESIGN.md Sec. 7) and the event-engine extension's
 per-bucket comm-kind choice (``METHOD_COMM``: fused AllReduce vs ZeRO-3
-reduce-scatter + all-gather, active on multi-stream sims — DESIGN.md
-Sec. 8), making the search joint over op fusion x tensor fusion x
-algorithm x comm kind;
+reduce-scatter + all-gather) and per-bucket chunk-count choice
+(``METHOD_CHUNK``: store-and-forward chunks pipelined through the link
+levels; both active on multi-stream sims — DESIGN.md Sec. 8-9), making
+the search joint over op fusion x tensor fusion x algorithm x comm kind
+x chunking;
 candidates within ``alpha x Cost(H_opt)`` are re-enqueued for backtracking;
 the search stops when the queue empties or H_opt is unchanged for
 ``unchanged_limit`` steps (paper: 1000; default reduced for CPU budget —
@@ -46,8 +48,13 @@ METHOD_DUP = "dup"
 METHOD_TENSOR = "tensor"
 METHOD_ALGO = "algo"
 METHOD_COMM = "comm"
+METHOD_CHUNK = "chunk"
 ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO,
-               METHOD_COMM)
+               METHOD_COMM, METHOD_CHUNK)
+
+# store-and-forward chunk counts METHOD_CHUNK draws from (1 restores the
+# whole-bucket collective; powers of two mirror NCCL's chunk granularity)
+CHUNK_CHOICES = (1, 2, 4, 8)
 
 
 @dataclasses.dataclass
@@ -84,6 +91,12 @@ def random_apply(g: FusionGraph, method: str, n: int, rng: random.Random) -> boo
             i = rng.randrange(len(g.buckets))
             changed |= g.set_bucket_comm(i, rng.choice(BUCKET_COMM_KINDS))
             continue
+        if method == METHOD_CHUNK:
+            if not g.buckets:
+                break
+            i = rng.randrange(len(g.buckets))
+            changed |= g.set_bucket_chunks(i, rng.choice(CHUNK_CHOICES))
+            continue
         gids = list(g.groups)
         # a handful of attempts to find a valid (consumer, producer) pair
         for _attempt in range(4):
@@ -106,19 +119,21 @@ _WORKER_CTX = None
 def _pool_init(payload: bytes) -> None:
     global _WORKER_CTX
     (prims, psuccs, ppreds, grad_prim, family, hw, n_devices,
-     cluster, streams) = pickle.loads(payload)
+     cluster, streams, background) = pickle.loads(payload)
     sim = Simulator(hw=hw, n_devices=n_devices, incremental=False,
-                    cluster=cluster, streams=streams)
+                    cluster=cluster, streams=streams, background=background)
     _WORKER_CTX = (prims, psuccs, ppreds, grad_prim, family, sim)
 
 
 def _pool_cost(state: tuple) -> float:
-    groups, provider, next_gid, buckets, bucket_algos, bucket_comm = state
+    (groups, provider, next_gid, buckets, bucket_algos, bucket_comm,
+     bucket_chunks) = state
     prims, psuccs, ppreds, grad_prim, family, sim = _WORKER_CTX
     g = FusionGraph._from_parts(prims, psuccs, ppreds, groups, provider,
                                 next_gid, grad_prim, buckets, family=family,
                                 bucket_algos=bucket_algos,
-                                bucket_comm=bucket_comm)
+                                bucket_comm=bucket_comm,
+                                bucket_chunks=bucket_chunks)
     return sim.cost(g)
 
 
@@ -133,7 +148,8 @@ class _CandidatePool:
         payload = pickle.dumps(
             (base.prims, base.psuccs, base.ppreds, base.grad_prim,
              base.family_token(), sim.hw, sim.n_devices,
-             getattr(sim, "cluster", None), getattr(sim, "streams", 1))
+             getattr(sim, "cluster", None), getattr(sim, "streams", 1),
+             getattr(sim, "background", ()))
         )
         # spawn: workers only import repro.core (pure python, no jax), and
         # forking a process that already holds jax's thread pools can hang
@@ -146,7 +162,7 @@ class _CandidatePool:
         futs = [
             self._ex.submit(
                 _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets,
-                             g.bucket_algos, g.bucket_comm)
+                             g.bucket_algos, g.bucket_comm, g.bucket_chunks)
             )
             for g in graphs
         ]
@@ -193,14 +209,17 @@ def backtracking_search(
     cluster = getattr(sim, "cluster", None)
     if cluster is None or cluster.is_flat_compat:
         methods = tuple(m for m in methods if m not in (METHOD_ALGO,
-                                                        METHOD_COMM))
+                                                        METHOD_COMM,
+                                                        METHOD_CHUNK))
     elif getattr(sim, "streams", 1) <= 1:
         # on a serialized channel the ZeRO-3 RS+AG split prices identically
-        # to the fused AllReduce (RS + AG == AR term by term), so comm-kind
+        # to the fused AllReduce (RS + AG == AR term by term) and chunking
+        # conserves total channel work exactly, so comm-kind and chunk
         # flips only matter once the event engine can pipeline phases —
-        # dropping the method keeps the PR-2 trajectory (and throughput)
+        # dropping the methods keeps the PR-2 trajectory (and throughput)
         # unchanged for streams=1 searches.
-        methods = tuple(m for m in methods if m != METHOD_COMM)
+        methods = tuple(m for m in methods if m not in (METHOD_COMM,
+                                                        METHOD_CHUNK))
     pool = _make_pool(sim, g0, workers)
 
     def cost(g: FusionGraph) -> float:

@@ -61,7 +61,7 @@ from collections import OrderedDict
 from ..cluster import (COLLECTIVE_ALGOS, ClusterSpec, KIND_AR, KIND_RS_AG,
                        comm_coeffs, phases)
 from .costs import OracleEstimator, total_comm_time, total_compute_time
-from .events import CommEngine, CommJob
+from .events import BackgroundTraffic, CommEngine, CommJob, TC_DP
 from .graph import FusionGraph
 from .hw import Hardware, TPU_V5E
 
@@ -105,7 +105,8 @@ class Simulator:
     def __init__(self, estimator=None, hw: Hardware = TPU_V5E, n_devices: int = 256,
                  keep_timeline: bool = False, incremental: bool = True,
                  state_cache_size: int = 64, max_journal: int = 24,
-                 cluster: ClusterSpec | None = None, streams: int = 1):
+                 cluster: ClusterSpec | None = None, streams: int = 1,
+                 background: tuple = ()):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
         # legacy (hw, n_devices) maps to the flat back-compat spec — comm
@@ -124,6 +125,12 @@ class Simulator:
         # pairs per (algo, comm-kind) once so the hot serialized pass stays
         # a dict hit + multiply-add (no per-bucket job objects).
         self.streams = max(int(streams), 1)
+        # recurring TP/PP collectives (BackgroundTraffic) injected alongside
+        # the gradient buckets on multi-stream sims: searched strategies are
+        # priced under fabric contention from non-gradient traffic
+        # (DESIGN.md Sec. 9).  Ignored on the serialized channel, which is
+        # the seed model and must stay bit-identical.
+        self.background: tuple[BackgroundTraffic, ...] = tuple(background)
         self._engine = CommEngine(cluster, streams=self.streams)
         self._ar_coeffs = {
             algo: comm_coeffs(cluster, algo, KIND_AR)
@@ -221,7 +228,8 @@ class Simulator:
         if len(done_at) != len(g.groups):
             raise RuntimeError("cyclic fusion graph in simulator")
 
-        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, timeline)
+        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, timeline,
+                                                 horizon=device_free)
         compute_finish = device_free
         result = self._make_result(compute_busy, comm_busy, compute_finish,
                                    comm_finish, timeline)
@@ -232,6 +240,12 @@ class Simulator:
     def _run_delta(self, g: FusionGraph, base: _SimState) -> _SimState | None:
         """Exact suffix replay from the journal's divergence bound; returns
         None when the delta is invalid (caller falls back to full replay)."""
+        if getattr(self.estimator, "comm_sensitive", False) \
+                and any(rec[0] != "fuse" for rec in g._journal):
+            # bucket-dimension mutations (algo/comm/chunk/merge) change a
+            # comm-sensitive estimator's fused-op predictions, so cached
+            # group times from the ancestor schedule are stale
+            return None
         n_base = len(base.order)
         k = n_base
         pos = base.pos
@@ -300,7 +314,8 @@ class Simulator:
                 bucket_ready_at[i] = max(done_at[x] for x in provs)
             except KeyError:
                 return None
-        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, None)
+        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, None,
+                                                 horizon=device_free)
         compute_finish = device_free if order else 0.0
         result = self._make_result(compute_busy, comm_busy, compute_finish,
                                    comm_finish, None)
@@ -314,7 +329,8 @@ class Simulator:
 
     # -------------------------------------------------------------- shared
     def _comm_pass(self, g: FusionGraph, bucket_ready_at: dict[int, float],
-                   timeline: list | None) -> tuple[float, float]:
+                   timeline: list | None,
+                   horizon: float = 0.0) -> tuple[float, float]:
         # communication: buckets transfer in order of readiness (paper: "in
         # order of production of their respective gradient tensors").
         algos = g.bucket_algos
@@ -322,12 +338,39 @@ class Simulator:
         buckets = g.buckets
         if self.streams > 1:
             # phase-level event engine: per-link-level pipelining with
-            # fair-share contention (DESIGN.md Sec. 8)
-            jobs = [
-                CommJob(bucket=i, ready=r, nbytes=g.bucket_bytes(buckets[i]),
-                        algo=algos[i], kind=kinds[i])
-                for i, r in bucket_ready_at.items()
-            ]
+            # fair-share contention (DESIGN.md Sec. 8).  A bucket with
+            # chunks > 1 becomes a store-and-forward chain of chunk jobs
+            # (chunk c may not start a phase before chunk c-1 finished it);
+            # recurring TP/PP background traffic contends on the same
+            # levels over the compute horizon (DESIGN.md Sec. 9).
+            chunks = g.bucket_chunks
+            jobs = []
+            next_id = len(buckets)
+            for i, r in bucket_ready_at.items():
+                nb = g.bucket_bytes(buckets[i])
+                k = chunks[i]
+                if k <= 1:
+                    jobs.append(CommJob(bucket=i, ready=r, nbytes=nb,
+                                        algo=algos[i], kind=kinds[i]))
+                    continue
+                prev = None
+                for c in range(k):
+                    jobs.append(CommJob(bucket=i, ready=r, nbytes=nb / k,
+                                        algo=algos[i], kind=kinds[i],
+                                        job_id=next_id, after=prev,
+                                        chunk=c, chunks=k))
+                    prev = next_id
+                    next_id += 1
+            if self.background:
+                for traffic in self.background:
+                    bjobs = traffic.materialize(horizon, next_id)
+                    next_id += len(bjobs)
+                    jobs.extend(bjobs)
+                self._engine.run(jobs, timeline)
+                # iteration time is gated by gradient sync; background
+                # traffic only matters through the contention it causes
+                return (self._engine.class_busy.get(TC_DP, 0.0),
+                        self._engine.class_finish.get(TC_DP, 0.0))
             return self._engine.run(jobs, timeline)
         # streams=1 hot path: the serialized channel inline, identical to
         # CommEngine(streams=1) without per-bucket job objects — and
@@ -351,8 +394,9 @@ class Simulator:
             comm_finish = chan_free
             if timeline is not None:
                 timeline.append((
-                    "allreduce" if kind == KIND_AR else KIND_RS_AG, i,
-                    algos[i], self._engine._chan_level, start, chan_free))
+                    "allreduce" if kind == KIND_AR else KIND_RS_AG, i, 0,
+                    TC_DP, algos[i], self._engine._chan_level, start,
+                    chan_free))
         return comm_busy, comm_finish
 
     @staticmethod
@@ -386,7 +430,11 @@ class Simulator:
         seed's ``total_comm_time``, bit-identical); the multi-stream engine
         can pipeline buckets across link levels, but every level still has
         to advance its total phase work at capacity 1 — the floor is the
-        busiest level's work sum."""
+        busiest level's work sum.  Chunking conserves per-level work
+        exactly (per-chunk coefficients sum to the unchunked ones), so the
+        unchunked phase sums below stay an exact floor for chunked
+        schedules; background TP/PP traffic is excluded (the bound is on
+        the gradient traffic the search controls)."""
         comp = total_compute_time(g, self.estimator, self.hw)
         if self.streams == 1:
             comm = total_comm_time(g, cluster=self.cluster)

@@ -38,9 +38,17 @@ from . import sharding as SH
 @dataclasses.dataclass
 class GradSyncStrategy:
     """Tensor-fusion strategy: a partition of parameter leaves into ordered
-    AllReduce buckets (leaf indices in ``jax.tree.leaves`` order)."""
+    buckets (leaf indices in ``jax.tree.leaves`` order), each synchronised
+    by one fused collective.  ``comms[i]`` picks the collective kind of
+    bucket ``i``: ``"ar"`` (one fused AllReduce, the paper's DDP path) or
+    ``"rs_ag"`` (ZeRO-3-style reduce-scatter + all-gather — the searched
+    ``FusionGraph.bucket_comm`` dimension, enacted for real)."""
     buckets: list[list[int]]
     barriers: bool = False      # fence buckets with optimization_barrier
+    comms: Optional[list[str]] = None   # per-bucket "ar" | "rs_ag"
+
+    def comm_kind(self, i: int) -> str:
+        return self.comms[i] if self.comms else "ar"
 
     @staticmethod
     def per_tensor(params) -> "GradSyncStrategy":
@@ -71,37 +79,60 @@ class GradSyncStrategy:
     @staticmethod
     def from_fusion_graph(g, params) -> "GradSyncStrategy":
         """Lift the searched FusionGraph's bucket partition onto the real
-        parameter leaves (grad_param indices == leaf indices)."""
+        parameter leaves (grad_param indices == leaf indices), carrying the
+        searched per-bucket comm kind along so ``rs_ag`` buckets lower to
+        reduce-scatter + all-gather when enacted."""
         n = len(jax.tree.leaves(params))
         seen: set = set()
         buckets = []
-        for b in g.buckets:
+        comms = []
+        kinds = getattr(g, "bucket_comm", None) or ["ar"] * len(g.buckets)
+        for b, kind in zip(g.buckets, kinds):
             bk = [i for i in b if i < n]
             seen.update(bk)
             if bk:
                 buckets.append(bk)
+                comms.append(kind)
         rest = [i for i in range(n) if i not in seen]
         buckets.extend([[i] for i in rest])
-        return GradSyncStrategy(buckets)
+        comms.extend(["ar"] * len(rest))
+        return GradSyncStrategy(buckets, comms=comms)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
-            json.dump({"buckets": self.buckets, "barriers": self.barriers}, f)
+            json.dump({"buckets": self.buckets, "barriers": self.barriers,
+                       "comms": self.comms}, f)
 
     @staticmethod
     def load(path: str) -> "GradSyncStrategy":
         with open(path) as f:
             d = json.load(f)
-        return GradSyncStrategy(d["buckets"], d.get("barriers", False))
+        return GradSyncStrategy(d["buckets"], d.get("barriers", False),
+                                comms=d.get("comms"))
 
 
 def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
-               mesh=None, pspecs=None):
-    """Explicit bucketed gradient AllReduce (mean) — DisCo tensor fusion.
+               mesh=None, pspecs=None, full_manual: bool = False):
+    """Explicit bucketed gradient synchronisation (mean) — DisCo tensor
+    fusion with the searched per-bucket comm kind enacted.
 
-    Each bucket is flattened+concatenated into one fused tensor, psum'd as a
-    *single* collective over the data axes, and split back — exactly the
-    paper's tensor fusion (one AllReduce per fused gradient tensor).
+    Each bucket is flattened+concatenated into one fused tensor, reduced as
+    a *single* collective over the data axes, and split back — exactly the
+    paper's tensor fusion.  An ``"ar"`` bucket is one fused ``psum``; an
+    ``"rs_ag"`` bucket lowers to ``psum_scatter`` + ``all_gather`` (the
+    ZeRO-3-style split the event engine prices per link level), padded to a
+    multiple of the data-parallel degree so the shards tile evenly — the
+    compiled HLO carries reduce-scatter/all-gather ops instead of
+    all-reduce, with identical numerics.
+
+    Compat gate: stock JAX 0.4.x's bundled XLA aborts on gather-type
+    collectives (``all_gather``/``all_to_all``/``ppermute``) inside a
+    *partial*-manual shard_map region (reduce-type ops are fine); in a
+    fully-manual region (``full_manual=True`` — no auto axes, e.g. the
+    ``layout="dp"`` step or TP degree 1) and on modern JAX the real RS+AG
+    pair lowers.  Where it cannot, ``rs_ag`` buckets fall back to the fused
+    ``psum`` — same numerics, AllReduce-shaped traffic (the same class of
+    0.4.x fallback as the vocab-parallel CE; see ``repro/compat.py``).
 
     Fusing must not destroy tensor-parallel sharding, so when ``mesh`` and
     ``pspecs`` are given the bucketing runs inside a nested ``shard_map``
@@ -117,7 +148,7 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
             dp *= axis_size_compat(a)
         out: list = [None] * len(leaves_local)
         prev_fused = None
-        for bucket in strategy.buckets:
+        for bi, bucket in enumerate(strategy.buckets):
             flats = [leaves_local[i].reshape(-1) for i in bucket]
             fused = jnp.concatenate(flats) if len(flats) > 1 else flats[0]
             if strategy.barriers and prev_fused is not None:
@@ -125,9 +156,24 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
             # reduce in f32: gradient-accuracy standard practice, and works
             # around an XLA:CPU bf16 all-reduce miscompile in the dry-run.
             dt = fused.dtype
-            fused = jax.lax.psum(fused.astype(jnp.float32),
-                                 tuple(dp_axes)) / dp
-            fused = fused.astype(dt)
+            f32 = fused.astype(jnp.float32)
+            gather_ok = (full_manual
+                         or not compat.needs_partial_manual_workarounds())
+            if strategy.comm_kind(bi) == "rs_ag" and dp > 1 and gather_ok:
+                n0 = f32.shape[0]
+                pad = (-n0) % dp
+                if pad:
+                    f32 = jnp.concatenate(
+                        [f32, jnp.zeros((pad,), jnp.float32)])
+                shard = jax.lax.psum_scatter(f32, tuple(dp_axes),
+                                             scatter_dimension=0,
+                                             tiled=True) / dp
+                f32 = jax.lax.all_gather(shard, tuple(dp_axes), tiled=True)
+                if pad:
+                    f32 = f32[:n0]
+            else:
+                f32 = jax.lax.psum(f32, tuple(dp_axes)) / dp
+            fused = f32.astype(dt)
             prev_fused = fused
             off = 0
             for i in bucket:
@@ -234,9 +280,11 @@ def build_train_step(
         def local_step(params, opt_state, batch):
             loss, grads = grads_of(params, batch)
             if layout == "dp":
+                # every mesh axis is a (manual) data axis here: the region
+                # is fully manual, so RS+AG lowering is safe on 0.4.x too
                 grads = sync_grads(
                     grads, strat or GradSyncStrategy.per_tensor(params),
-                    dp_axes, mesh=None)
+                    dp_axes, mesh=None, full_manual=True)
             else:
                 align = SH.head_alignment(cfg, mesh)
                 pspecs = jax.tree_util.tree_map_with_path(
@@ -246,7 +294,8 @@ def build_train_step(
                     grads)
                 grads = sync_grads(
                     grads, strat or GradSyncStrategy.per_tensor(params),
-                    dp_axes, mesh=mesh, pspecs=pspecs)
+                    dp_axes, mesh=mesh, pspecs=pspecs,
+                    full_manual=mesh.shape.get("model", 1) == 1)
             loss = jax.lax.pmean(loss, tuple(dp_axes))
             return update(params, opt_state, loss, grads)
 

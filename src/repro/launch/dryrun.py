@@ -73,6 +73,11 @@ def parse_collectives(hlo_text: str) -> dict:
     Per-device traffic factors (ring algorithms over group size G):
       all-reduce 2(G-1)/G; all-gather/reduce-scatter/all-to-all (G-1)/G;
       collective-permute 1.
+
+    Each per-op entry additionally carries a ``by_group`` breakdown keyed
+    by replica-group size — the signal that classifies a collective as
+    tensor-parallel (group == TP degree) vs data-parallel traffic for the
+    event engine's traffic classes (DESIGN.md Sec. 9).
     """
     per_op: dict = {}
     traffic = 0.0
@@ -98,10 +103,14 @@ def parse_collectives(hlo_text: str) -> dict:
             factor = 1.0
         else:
             factor = (g - 1) / g
-        d = per_op.setdefault(op, {"count": 0, "bytes": 0.0, "traffic": 0.0})
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0.0, "traffic": 0.0,
+                                   "by_group": {}})
         d["count"] += 1
         d["bytes"] += nbytes
         d["traffic"] += nbytes * factor
+        bg = d["by_group"].setdefault(g, {"count": 0, "bytes": 0.0})
+        bg["count"] += 1
+        bg["bytes"] += nbytes
         traffic += nbytes * factor
     return {"per_op": per_op, "ici_traffic_bytes": traffic}
 
@@ -200,7 +209,36 @@ def build_dryrun_decode(cfg, mesh, shape: str, fsdp: bool = False):
     return jf, tuple(args)
 
 
-def collective_cost_model(coll: dict, spec, streams: int = 1) -> dict:
+def background_from_collectives(coll: dict, tp_degree: int) -> list:
+    """Classify the compiled HLO's collectives into recurring background
+    traffic for the event engine (DESIGN.md Sec. 9): collectives whose
+    replica-group size equals the TP degree are tensor-parallel activation
+    traffic; collective-permutes are pipeline-parallel stage-boundary
+    transfers.  Returns ``(traffic_class, comm_kind, mean_bytes, count)``
+    tuples.  Heuristic by construction — when the DP and TP degrees
+    coincide the split is ambiguous and everything counts as TP."""
+    kind_map = {"all-reduce": "ar", "all-gather": "ag",
+                "reduce-scatter": "rs", "all-to-all": "ag"}
+    out = []
+    for op, d in coll.get("per_op", {}).items():
+        if op == "collective-permute":
+            if d.get("count"):
+                out.append(("pp", "p2p", d["bytes"] / d["count"],
+                            int(d["count"])))
+            continue
+        kind = kind_map.get(op)
+        if kind is None or tp_degree <= 1:
+            continue
+        bg = d.get("by_group", {}).get(tp_degree)
+        if bg and bg["count"]:
+            out.append(("tp", kind, bg["bytes"] / bg["count"],
+                        int(bg["count"])))
+    return out
+
+
+def collective_cost_model(coll: dict, spec, streams: int = 1,
+                          tp_degree: int = 1,
+                          keep_timeline: bool = False) -> dict:
     """Price the compiled HLO's collective traffic on a ClusterSpec: the
     all-reduce traffic under each algorithm, and the cheapest choice.
     Priced as ``count`` collectives of the mean size so the per-collective
@@ -213,7 +251,11 @@ def collective_cost_model(coll: dict, spec, streams: int = 1) -> dict:
     FSDP strategies get topology-aware ranking too.  With ``--streams N``
     the ``streams`` block additionally reports the event-engine finish time
     of the AllReduce set under N concurrent streams (pipelined hierarchical
-    phases) next to the serialized channel."""
+    phases) next to the serialized channel, and — when the module carries
+    TP/PP collectives — a ``contention`` block pricing the gradient set
+    against that background traffic as recurring ``tp``/``pp``-class jobs
+    on the same link levels (DESIGN.md Sec. 9).  ``keep_timeline`` embeds
+    the contended schedule's 8-tuple records."""
     ar = coll["per_op"].get("all-reduce", {})
     ar_bytes = ar.get("bytes", 0.0)
     count = max(int(ar.get("count", 0)), 1)
@@ -246,10 +288,27 @@ def collective_cost_model(coll: dict, spec, streams: int = 1) -> dict:
         }
     if rs_ag:
         out["rs_ag"] = rs_ag
-    if streams > 1 and ar.get("count", 0) > 0:
+    # the DP gradient set: all-reduces minus the TP-group ones (those are
+    # activation traffic, re-injected below as tp-class background jobs —
+    # counting them in both sets would price the TP bytes twice).  When the
+    # DP and TP replica-group sizes coincide (e.g. a 16x16 mesh) the split
+    # is ambiguous: every all-reduce lands in by_group[tp_degree] and the
+    # subtraction would empty the gradient set, so treat the all-reduces as
+    # the DP set and drop only the ar-kind TP background (gather/scatter/
+    # permute classes are still unambiguous).
+    ar_groups = set(ar.get("by_group", {}))
+    dp_tp_ambiguous = tp_degree > 1 and ar_groups == {tp_degree}
+    tp_ar = (ar.get("by_group", {}).get(tp_degree, {"count": 0, "bytes": 0.0})
+             if tp_degree > 1 and not dp_tp_ambiguous
+             else {"count": 0, "bytes": 0.0})
+    dp_count = int(ar.get("count", 0)) - int(tp_ar["count"])
+    dp_bytes = ar_bytes - tp_ar["bytes"]
+    if streams > 1 and dp_count > 0:
         from repro.core.events import CommEngine, CommJob
 
-        n_jobs = min(int(ar["count"]), 128)  # cap the event-loop size
+        mean_bytes = dp_bytes / dp_count
+        name, _ = best_algo(mean_bytes, spec)
+        n_jobs = min(dp_count, 128)  # cap the event-loop size
         # readiness staggered (gradients are produced over the backward
         # pass) at a rate that backlogs the serialized channel: arrivals
         # every t_one/streams keep `streams` jobs in flight, so the block
@@ -264,18 +323,58 @@ def collective_cost_model(coll: dict, spec, streams: int = 1) -> dict:
         out["streams"] = {
             "streams": streams,
             "jobs": n_jobs,
+            "dp_allreduce_count": dp_count,
+            "dp_allreduce_bytes": dp_bytes,
+            "dp_tp_ambiguous": dp_tp_ambiguous,
             "algo": name,
             "serialized_finish_s": ser,
             "pipelined_finish_s": pip,
             "speedup": ser / pip if pip > 0 else 1.0,
         }
+        # TP/PP traffic classes: recurring background jobs extracted from
+        # the compiled HLO contend with the gradient set on the same levels
+        from repro.core.events import BackgroundTraffic
+
+        classified = background_from_collectives(coll, tp_degree)
+        if dp_tp_ambiguous:
+            classified = [t for t in classified
+                          if not (t[0] == "tp" and t[1] == "ar")]
+        bg_jobs = []
+        base_id = n_jobs + 1
+        for tclass, kind, mean, cnt in classified:
+            n = min(cnt, 64)  # cap the event-loop size per class
+            traffic = BackgroundTraffic(
+                tclass, mean, period=pip / n if n else 0.0, kind=kind,
+                count=n)
+            made = traffic.materialize(pip, base_id)
+            base_id += len(made)
+            bg_jobs.extend(made)
+        if bg_jobs:
+            eng = CommEngine(spec, streams=streams)
+            tl: list | None = [] if keep_timeline else None
+            eng.run(list(jobs) + bg_jobs, tl)
+            dp_fin = eng.class_finish.get("dp", 0.0)
+            out["contention"] = {
+                "classes": [
+                    {"traffic_class": tclass, "kind": kind,
+                     "mean_bytes": mean, "count": cnt}
+                    for tclass, kind, mean, cnt in classified
+                ],
+                "background_jobs": len(bg_jobs),
+                "grad_finish_alone_s": pip,
+                "grad_finish_contended_s": dp_fin,
+                "slowdown": dp_fin / pip if pip > 0 else 1.0,
+                "class_busy_s": dict(eng.class_busy),
+            }
+            if tl is not None:
+                out["contention"]["timeline"] = [list(e) for e in tl]
     return out
 
 
 # -------------------------------------------------------------------- main
 def dryrun_one(arch: str, shape: str, multi_pod: bool,
                verbose: bool = True, cluster: str | None = None,
-               streams: int = 1) -> dict:
+               streams: int = 1, keep_timeline: bool = False) -> dict:
     cfg0 = get_config(arch)
     ok, reason, cfg = applicability(cfg0, shape)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -314,7 +413,10 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool,
     # price the collectives on the requested preset, or on the topology the
     # mesh itself implies (--cluster <preset> overrides the mesh bridge)
     spec = get_preset(cluster) if cluster else cluster_from_mesh(mesh)
-    result["cluster"] = collective_cost_model(coll, spec, streams=streams)
+    result["cluster"] = collective_cost_model(
+        coll, spec, streams=streams,
+        tp_degree=int(mesh.shape.get("model", 1)),
+        keep_timeline=keep_timeline)
     result.update({
         "kind": kind,
         "lower_s": round(t_lower, 2),
@@ -356,6 +458,10 @@ def main():
     ap.add_argument("--streams", type=int, default=1,
                     help="price the AllReduce set under N concurrent event-"
                          "engine streams next to the serialized channel")
+    ap.add_argument("--timeline", action="store_true",
+                    help="print (and embed) the contended comm schedule as "
+                         "(kind, bucket, chunk, traffic_class, algo, level, "
+                         "start, end) records (needs --streams > 1)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -371,11 +477,21 @@ def main():
                 path = os.path.join(args.out, tag + ".json")
                 try:
                     res = dryrun_one(arch, shape, mp, cluster=args.cluster,
-                                     streams=args.streams)
+                                     streams=args.streams,
+                                     keep_timeline=args.timeline)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append(tag)
                     res = {"arch": arch, "shape": shape, "error": str(e)}
+                if args.timeline:
+                    rec = (res.get("cluster", {}).get("contention", {})
+                           .get("timeline"))
+                    if rec:
+                        print(f"  {tag} comm timeline "
+                              f"(kind, bucket, chunk, class, algo, level, "
+                              f"start, end):")
+                        for e in rec:
+                            print(f"    {tuple(e)}")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
     if failures:

@@ -122,6 +122,66 @@ print("EQUIV_OK")
 
 
 @pytest.mark.slow
+def test_rs_ag_bucket_lowering_matches_allreduce():
+    """A ZeRO-3 ``rs_ag`` bucket enacts as reduce-scatter + all-gather in
+    the compiled HLO (fully-manual ``layout="dp"`` region — the lowering
+    0.4.x XLA can partition) and computes losses identical to the fused
+    AllReduce path; in the partial-manual TP layout the 0.4.x fallback
+    keeps numerics identical too."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh_compat
+from repro.configs import get_config
+from repro.models import stacked as ST
+from repro.distributed.train_step import (GradSyncStrategy, build_train_step,
+                                          jit_train_step)
+from repro.launch.dryrun import parse_collectives
+from repro.optim import adamw
+from repro.data.pipeline import materialize_batch
+
+cfg = get_config("tinyllama-1.1b").reduced()
+key = jax.random.PRNGKey(0)
+params = ST.init_params(key, cfg)
+init, _ = adamw(1e-3)
+opt = init(jax.tree.map(lambda p: p.astype(jnp.float32), params))
+batch = materialize_batch(cfg, 8, 32, seed=0)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
+specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+base = GradSyncStrategy.size_capped(params, 1 << 14)
+results = {}
+for kind in ("ar", "rs_ag"):
+    strat = GradSyncStrategy(base.buckets, comms=[kind] * len(base.buckets))
+    step = build_train_step(cfg, mesh, mode="ddp_tp", strategy=strat,
+                            lr=1e-3, layout="dp")
+    jf = jit_train_step(step, cfg, mesh, params, opt, specs, layout="dp")
+    lowered = jf.lower(params, opt, specs)
+    coll = parse_collectives(lowered.compile().as_text())
+    p_in = jax.tree.map(jnp.array, params)
+    o_in = jax.tree.map(jnp.array, opt)
+    _, _, m = jf(p_in, o_in, batch)
+    results[kind] = (float(m["loss"]), float(m["grad_norm"]), coll["per_op"])
+print({k: v[:2] for k, v in results.items()})
+np.testing.assert_allclose(results["ar"][:2], results["rs_ag"][:2], rtol=1e-4)
+# the rs_ag lowering really emits RS+AG pairs where the ar path psums
+assert results["rs_ag"][2].get("reduce-scatter", {}).get("count", 0) > 0
+assert results["rs_ag"][2].get("all-gather", {}).get("count", 0) > 0
+assert results["ar"][2].get("reduce-scatter", {}).get("count", 0) == 0
+
+# partial-manual TP layout: 0.4.x falls back to psum for rs_ag buckets,
+# modern JAX lowers the real pair -- either way the loss must match
+strat = GradSyncStrategy(base.buckets, comms=["rs_ag"] * len(base.buckets))
+step = build_train_step(cfg, mesh, mode="ddp_tp", strategy=strat, lr=1e-3)
+jf = jit_train_step(step, cfg, mesh, params, opt, specs)
+p_in = jax.tree.map(jnp.array, params)
+o_in = jax.tree.map(jnp.array, opt)
+_, _, m = jf(p_in, o_in, batch)
+np.testing.assert_allclose(float(m["loss"]), results["ar"][0], rtol=2e-4)
+print("RS_AG_OK")
+""")
+    assert "RS_AG_OK" in out
+
+
+@pytest.mark.slow
 def test_vocab_parallel_matches_dense():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
@@ -197,11 +257,18 @@ print("DRYRUN_OK", coll["per_op"]["all-reduce"]["count"])
 def test_strategy_save_load(tmp_path):
     from repro.distributed.train_step import GradSyncStrategy
 
-    s = GradSyncStrategy([[0, 1], [2], [3, 4, 5]], barriers=True)
+    s = GradSyncStrategy([[0, 1], [2], [3, 4, 5]], barriers=True,
+                         comms=["ar", "rs_ag", "ar"])
     p = str(tmp_path / "s.json")
     s.save(p)
     s2 = GradSyncStrategy.load(p)
     assert s2.buckets == s.buckets and s2.barriers is True
+    assert s2.comms == s.comms and s2.comm_kind(1) == "rs_ag"
+    # legacy strategy files (no comms) default every bucket to AllReduce
+    s3 = GradSyncStrategy([[0]])
+    p3 = str(tmp_path / "legacy.json")
+    s3.save(p3)
+    assert GradSyncStrategy.load(p3).comm_kind(0) == "ar"
 
 
 def test_strategy_from_fusion_graph():
@@ -218,10 +285,13 @@ def test_strategy_from_fusion_graph():
     g = profile_graph(trace_grad_graph(loss, params, jnp.ones((4, 8))))
     while g.merge_buckets(0, 1):
         pass
+    g.set_bucket_comm(0, "rs_ag")
     strat = GradSyncStrategy.from_fusion_graph(g, params)
     flat = sorted(i for b in strat.buckets for i in b)
     assert flat == [0, 1, 2]
     assert len(strat.buckets) == 1
+    # the searched comm kind rides along into the enactment strategy
+    assert strat.comms == ["rs_ag"]
 
 
 @pytest.mark.slow

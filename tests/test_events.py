@@ -13,12 +13,14 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.cluster import (BUCKET_COMM_KINDS, COLLECTIVE_ALGOS, ClusterSpec,
-                           PRESETS, comm_coeffs, get_preset, phases)
-from repro.core import (CommEngine, CommJob, FusionGraph, PrimOp, Simulator,
-                        backtracking_search, profile_graph)
+                           PRESETS, chunk_phases, comm_coeffs, get_preset,
+                           phases)
+from repro.core import (BackgroundTraffic, CommEngine, CommJob, FusionGraph,
+                        PrimOp, Simulator, backtracking_search, profile_graph)
 from repro.core.graph import EW
 from repro.core.hw import TPU_V5E
-from repro.core.search import ALL_METHODS, METHOD_COMM, random_apply
+from repro.core.search import (ALL_METHODS, CHUNK_CHOICES, METHOD_CHUNK,
+                               METHOD_COMM, random_apply)
 
 
 def serialized_reference(jobs, spec):
@@ -101,9 +103,73 @@ def test_no_level_oversubscribed(seed, n, streams):
                        if l == level)
         assert occupied <= finish + 1e-9
     # timeline phases stay inside the schedule span
-    for kind, bucket, algo, level, start, end in timeline:
+    for kind, bucket, chunk, tclass, algo, level, start, end in timeline:
         assert start >= 0.0 and end <= finish + 1e-12
         assert kind in ("allreduce", "reduce_scatter", "all_gather")
+        assert tclass == "dp" and chunk == 0
+
+
+@settings(max_examples=80, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 10),
+       streams=st.integers(2, 5))
+def test_no_level_oversubscribed_mixed_traffic(seed, n, streams):
+    """Chunk chains + TP/PP background jobs + deps: the fair-share/FIFO
+    capacity invariant must hold for any mix of traffic classes."""
+    rng = random.Random(seed)
+    spec = rng.choice([s for s in SPECS if not s.is_flat_compat])
+    disc = rng.choice(["fair", "fifo"])
+    eng = CommEngine(spec, streams=streams, record_load=True,
+                     discipline=disc)
+    jobs = []
+    jid = 1000
+    for i in range(n):
+        nb = float(rng.randint(1, 1 << 26))
+        algo = rng.choice(COLLECTIVE_ALGOS)
+        k = rng.choice((1, 2, 4))
+        deps = ()
+        if jobs and rng.random() < 0.3:
+            deps = (rng.choice(jobs).jid,)
+        if k == 1:
+            jobs.append(CommJob(bucket=i, ready=rng.uniform(0, 2e-3),
+                                nbytes=nb, algo=algo, deps=deps))
+            continue
+        prev = None
+        ready = rng.uniform(0, 2e-3)
+        for c in range(k):
+            jobs.append(CommJob(bucket=i, ready=ready, nbytes=nb / k,
+                                algo=algo, job_id=jid, after=prev,
+                                chunk=c, chunks=k, deps=deps))
+            prev = jid
+            jid += 1
+    for traffic in (BackgroundTraffic("tp", float(1 << 22), period=3e-4),
+                    BackgroundTraffic("pp", float(1 << 20), period=5e-4,
+                                      kind="p2p")):
+        made = traffic.materialize(2e-3, jid)
+        jid += len(made)
+        jobs.extend(made)
+    busy, finish = eng.run(list(jobs), timeline := [])
+    for level, t0, t1, work in eng.level_load:
+        assert 0 <= level < len(spec.levels)
+        assert t1 > t0
+        assert work / (t1 - t0) <= 1.0 + 1e-9
+    # every job finished, and finish covers them all
+    assert len(eng.job_finish) == len(jobs)
+    assert all(f <= finish + 1e-12 for f in eng.job_finish.values())
+    for e in timeline:
+        assert len(e) == 8 and e[3] in ("dp", "tp", "pp")
+        assert e[0] in ("allreduce", "reduce_scatter", "all_gather",
+                        "permute")
+        assert e[7] >= e[6] >= 0.0
+    # deps really are finish-first: a dependent job never starts a phase
+    # before every dependency finished
+    starts = {}
+    for e in timeline:
+        jb = (e[1], e[2])
+        starts[jb] = min(starts.get(jb, float("inf")), e[6])
+    for j in jobs:
+        for d in j.deps:
+            if d in eng.job_finish and (j.bucket, j.chunk) in starts:
+                assert starts[(j.bucket, j.chunk)] >=                     eng.job_finish[d] - 1e-9
 
 
 # -------------------------------------------- (c) incremental == full
@@ -128,12 +194,14 @@ def test_incremental_equals_full_with_stream_and_comm_mutations(streams):
     parent = chain_graph(n=18, grads=(3, 7, 11, 15),
                          grad_bytes=float(1 << 22))
     saw_comm = False
+    saw_chunk = False
     for step in range(60):
         child = parent.clone()
         for _ in range(rng.randint(1, 3)):
             m = rng.choice(ALL_METHODS)
             changed = random_apply(child, m, 1, rng)
             saw_comm |= changed and m == METHOD_COMM
+            saw_chunk |= changed and m == METHOD_CHUNK
         ri = sim_inc.run(child)
         rf = sim_full.run(child)
         assert ri.iteration_time == rf.iteration_time, step
@@ -142,6 +210,7 @@ def test_incremental_equals_full_with_stream_and_comm_mutations(streams):
         if rng.random() < 0.6:
             parent = child
     assert saw_comm, "comm-kind mutation never drawn"
+    assert saw_chunk, "chunk mutation never drawn"
     assert sim_inc.stats["delta"] > 0
 
 
@@ -161,13 +230,175 @@ def test_rs_ag_prices_like_allreduce_on_serialized_channel():
 def test_phase_decomposition_sums_to_opaque_coeffs():
     for spec in PRESETS.values():
         for algo in COLLECTIVE_ALGOS:
-            for kind in ("ar", "rs", "ag", "rs_ag"):
+            for kind in ("ar", "rs", "ag", "rs_ag", "p2p"):
                 ph = phases(spec, algo, kind)
                 c, d = comm_coeffs(spec, algo, kind)
                 assert sum(p.c for p in ph) == pytest.approx(c, rel=1e-12)
                 assert sum(p.d for p in ph) == pytest.approx(d, rel=1e-12)
                 for p in ph:
                     assert 0 <= p.level < len(spec.levels)
+
+
+def test_chunk_phases_conserve_coefficients():
+    """Per-chunk phase coefficients sum (over the chunks) exactly to the
+    unchunked ones — chunking gets no fictitious discount, and chunks=1 is
+    the identical phases() tuple (bit-identical schedules)."""
+    for spec in PRESETS.values():
+        for algo in COLLECTIVE_ALGOS:
+            for kind in ("ar", "rs_ag"):
+                assert chunk_phases(spec, algo, kind, 1) is \
+                    phases(spec, algo, kind)
+                c0, d0 = comm_coeffs(spec, algo, kind)
+                for k in (2, 4, 8):
+                    ph = chunk_phases(spec, algo, kind, k)
+                    assert sum(p.c for p in ph) == pytest.approx(
+                        c0, rel=1e-12)
+                    assert k * sum(p.d for p in ph) == pytest.approx(
+                        d0, rel=1e-12, abs=1e-30)
+
+
+def _chunk_chain(bucket, ready, nbytes, algo, k, base_id, kind="ar"):
+    jobs = []
+    prev = None
+    for c in range(k):
+        jobs.append(CommJob(bucket=bucket, ready=ready, nbytes=nbytes / k,
+                            algo=algo, kind=kind, job_id=base_id + c,
+                            after=prev, chunk=c, chunks=k))
+        prev = base_id + c
+    return jobs
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_chunks1_bit_identical_on_flat_and_hier(seed):
+    """A chunks=1 'chain' is the plain job: engine results are bit-equal
+    on flat and hierarchical specs, any stream count."""
+    rng = random.Random(seed)
+    spec = rng.choice(SPECS)
+    streams = rng.choice((1, 2, 4))
+    kinds = ("ar",) if spec.is_flat_compat else BUCKET_COMM_KINDS
+    plain = random_jobs(rng, rng.randint(1, 8), kinds)
+    chained = [CommJob(bucket=j.bucket, ready=j.ready, nbytes=j.nbytes,
+                       algo=j.algo, kind=j.kind, job_id=j.bucket,
+                       chunk=0, chunks=1) for j in plain]
+    b0, f0 = CommEngine(spec, streams=streams).run(list(plain))
+    b1, f1 = CommEngine(spec, streams=streams).run(chained)
+    assert b0 == b1 and f0 == f1
+
+
+def test_chunked_bucket_strictly_beats_whole_on_multiphase_schedule():
+    """One large hierarchical bucket: chunks pipeline its RS/AR/AG legs
+    across levels — strictly earlier finish, identical total work — while
+    a single-phase ring schedule gains nothing (store-and-forward through
+    one level is just the same transfer in k pieces)."""
+    spec = get_preset("a100_nvlink_ib")
+    nb = float(1 << 26)
+    _, whole = CommEngine(spec, streams=2).run([CommJob(0, 0.0, nb, "hier")])
+    busy_whole = CommEngine(spec, streams=2).run(
+        [CommJob(0, 0.0, nb, "hier")])[0]
+    last = whole
+    for k in (2, 4, 8):
+        busy, fin = CommEngine(spec, streams=2).run(
+            _chunk_chain(0, 0.0, nb, "hier", k, 100))
+        assert fin < whole
+        assert fin <= last + 1e-15  # finer chunks never hurt
+        assert busy == pytest.approx(busy_whole, rel=1e-9)  # work conserved
+        last = fin
+    # ring: single bottleneck phase, no pipeline to exploit
+    _, ring_whole = CommEngine(spec, streams=2).run(
+        [CommJob(0, 0.0, nb, "ring")])
+    _, ring_chunk = CommEngine(spec, streams=2).run(
+        _chunk_chain(0, 0.0, nb, "ring", 4, 200))
+    assert ring_chunk == pytest.approx(ring_whole, rel=1e-9)
+
+
+def test_fifo_discipline_serves_in_arrival_order():
+    """Under per-level FIFO the first arrival finishes first at full
+    rate; fair-share runs the same pair in lockstep."""
+    spec = get_preset("a100_nvlink_ib")
+    nb = float(1 << 24)
+    jobs = [CommJob(0, 0.0, nb, "ring"), CommJob(1, 1e-6, nb, "ring")]
+    fifo = CommEngine(spec, streams=2, discipline="fifo")
+    _, f_fifo = fifo.run(list(jobs))
+    t_one = comm_coeffs(spec, "ring", "ar")[0] * nb \
+        + comm_coeffs(spec, "ring", "ar")[1]
+    assert fifo.job_finish[0] == pytest.approx(t_one, rel=1e-12)
+    assert fifo.job_finish[1] > fifo.job_finish[0]
+    fair = CommEngine(spec, streams=2)
+    fair.run(list(jobs))
+    # fair-share: both in flight, both finish near the end
+    assert fair.job_finish[0] > t_one
+
+
+def test_store_and_forward_chunks_never_overtake():
+    """Chunk c's phase-p record never ends before chunk c-1's phase-p
+    record (the after-dependency orders the chain at every level)."""
+    spec = get_preset("cross_dc_2pod")
+    tl = []
+    CommEngine(spec, streams=2).run(
+        _chunk_chain(0, 0.0, float(1 << 26), "hier", 4, 10), tl)
+    ends: dict = {}
+    for kind, bucket, chunk, tclass, algo, level, start, end in tl:
+        ends.setdefault(chunk, []).append(end)
+    n_phases = {c: len(v) for c, v in ends.items()}
+    assert len(set(n_phases.values())) == 1  # same phase count per chunk
+    for c in range(1, 4):
+        for p, (e_prev, e_cur) in enumerate(zip(ends[c - 1], ends[c])):
+            assert e_cur >= e_prev - 1e-15, (c, p)
+
+
+def test_background_traffic_contends_and_is_classed():
+    """TP background jobs slow the gradient class down and show up under
+    their own class in the tallies and the timeline."""
+    spec = get_preset("a100_nvlink_ib")
+    nb = float(1 << 25)
+    grads = [CommJob(0, 0.0, nb, "hier"), CommJob(1, 3e-4, nb, "hier")]
+    alone = CommEngine(spec, streams=4)
+    alone.run(list(grads))
+    bg = BackgroundTraffic("tp", float(1 << 23), period=1e-4,
+                           algo="ring").materialize(alone.class_finish["dp"],
+                                                    100)
+    cont = CommEngine(spec, streams=4)
+    tl = []
+    cont.run(list(grads) + bg, tl)
+    assert cont.class_finish["dp"] > alone.class_finish["dp"]
+    assert cont.class_busy["tp"] > 0.0
+    assert {e[3] for e in tl} == {"dp", "tp"}
+    # gradient busy work is unchanged by contention (fluid model conserves
+    # work; only the schedule stretches)
+    assert cont.class_busy["dp"] == pytest.approx(
+        alone.class_busy["dp"], rel=1e-9)
+
+
+def test_simulator_background_prices_contention():
+    spec = get_preset("a100_nvlink_ib")
+    g = chain_graph(n=18, grads=(3, 7, 11, 15), grad_bytes=float(1 << 24))
+    bg = (BackgroundTraffic("tp", float(1 << 22), period=2e-5,
+                            algo="ring"),)
+    r0 = Simulator(cluster=spec, streams=4).run(g)
+    r1 = Simulator(cluster=spec, streams=4, background=bg).run(g)
+    assert r1.comm_finish > r0.comm_finish
+    # serialized channel ignores background (seed model stays bit-identical)
+    s0 = Simulator(cluster=spec, streams=1).run(g)
+    s1 = Simulator(cluster=spec, streams=1, background=bg).run(g)
+    assert s0.iteration_time == s1.iteration_time
+
+
+def test_search_chunks_only_on_multistream_sim():
+    """METHOD_CHUNK is dropped on serialized/flat sims (PR-2/PR-3
+    trajectories unchanged) and live on multi-stream topology sims."""
+    spec = get_preset("cross_dc_2pod")
+    g = chain_graph(n=20, grads=(3, 7, 11, 15), grad_bytes=float(1 << 24))
+    res1 = backtracking_search(g, Simulator(cluster=spec, streams=1),
+                               unchanged_limit=40, max_steps=60, seed=2)
+    assert set(res1.best.bucket_chunks) == {1}
+    flat = backtracking_search(g, Simulator(n_devices=64),
+                               unchanged_limit=40, max_steps=60, seed=2)
+    assert set(flat.best.bucket_chunks) == {1}
+    res4 = backtracking_search(g, Simulator(cluster=spec, streams=4),
+                               unchanged_limit=40, max_steps=60, seed=2)
+    assert res4.best_cost <= res4.initial_cost
+    assert CHUNK_CHOICES[0] == 1
 
 
 def test_hier_phase_sequence_is_rs_ar_ag():
@@ -208,11 +439,12 @@ def test_phased_timeline_distinguishes_phases():
     CommEngine(spec, streams=2).run(jobs, tl)
     kinds = {e[0] for e in tl}
     assert "reduce_scatter" in kinds and "all_gather" in kinds
-    levels = {e[3] for e in tl}
+    levels = {e[5] for e in tl}
     assert levels == {"nvlink", "ib_hdr"}
-    # records are (kind, bucket, algo, level, start, end), time-ordered ends
+    # records are (kind, bucket, chunk, traffic_class, algo, level, start,
+    # end) with non-negative, ordered spans
     for e in tl:
-        assert len(e) == 6 and e[5] >= e[4] >= 0.0
+        assert len(e) == 8 and e[7] >= e[6] >= 0.0
 
 
 def test_engine_reuse_resets_utilisation_segments():

@@ -36,6 +36,80 @@ def test_gnn_trains_and_generalizes(corpus):
     assert np.median(rel_err) < 0.5, f"median rel err {np.median(rel_err)}"
 
 
+def test_group_features_see_comm_dimensions():
+    """The feature vector carries (bucket algo, comm kind, chunk count) on
+    gradient-producing nodes and changes when the search mutates them —
+    and the estimator cache does not replay stale predictions across comm
+    mutations."""
+    import numpy as np
+
+    from repro.core.gnn import GNNConfig, N_COMM_FEATURES, N_FEATURES, \
+        group_features, init_params, GNNEstimator
+    import jax
+
+    g, _ = mlp_graph(layers=3, d=32, batch=4)
+    # fuse a gradient-producing prim into a multi-op group
+    grad_pid = g.grad_prim[g.buckets[0][0]]
+    gid = g.provider[grad_pid]
+    preds = list(g.group_preds(gid))
+    assert preds and g.fuse_nondup(gid, preds[0])
+    gid = g.provider[grad_pid]
+    assert len(g.groups[gid]) > 1
+
+    feat0, _, _ = group_features(g, gid, 16)
+    assert feat0.shape[1] == N_FEATURES
+    base = N_FEATURES - N_COMM_FEATURES
+    assert feat0[:, base:].any(), "comm features all zero on a grad group"
+    bi = next(i for i, b in enumerate(g.buckets) if g.buckets[0][0] in b)
+    g.set_bucket_algo(bi, "hier")
+    feat1, _, _ = group_features(g, gid, 16)
+    assert (feat0[:, base] != feat1[:, base]).any()
+    g.set_bucket_chunks(bi, 4)
+    feat2, _, _ = group_features(g, gid, 16)
+    assert (feat1[:, base + 2] != feat2[:, base + 2]).any()
+
+    cfg = GNNConfig(n_layers=1, n_heads=2, head_dim=4, mlp_dim=8)
+    est = GNNEstimator(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    t_hier = est.group_time(g, gid)
+    g.set_bucket_algo(bi, "tree")
+    t_tree = est.group_time(g, gid)
+    # an (untrained) net still must be *queried* with the new features,
+    # not served the cached hier-keyed value
+    assert t_hier != t_tree or len(est._cache) == 2
+
+
+def test_gnn_incremental_equals_full_across_comm_mutations():
+    """A comm-sensitive estimator invalidates the delta path across bucket-
+    dimension mutations: incremental and full replay must agree bit-for-bit
+    even though cached group times depend on bucket algo/comm/chunks."""
+    import jax
+
+    from repro.cluster import get_preset
+    from repro.core import Simulator
+    from repro.core.gnn import GNNConfig, GNNEstimator, init_params
+    from repro.core.search import ALL_METHODS, random_apply
+
+    cfg = GNNConfig(n_layers=1, n_heads=2, head_dim=4, mlp_dim=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    spec = get_preset("a100_nvlink_ib")
+    est = GNNEstimator(params, cfg)
+    sim_inc = Simulator(estimator=est, cluster=spec, streams=4,
+                        incremental=True)
+    sim_full = Simulator(estimator=est, cluster=spec, streams=4,
+                         incremental=False)
+    rng = random.Random(3)
+    parent, _ = mlp_graph(layers=3, d=32, batch=4)
+    for step in range(30):
+        child = parent.clone()
+        for _ in range(rng.randint(1, 3)):
+            random_apply(child, rng.choice(ALL_METHODS), 1, rng)
+        ri = sim_inc.run(child)
+        rf = sim_full.run(child)
+        assert ri.iteration_time == rf.iteration_time, step
+        if rng.random() < 0.6:
+            parent = child
+
+
 def test_gnn_estimator_drives_simulator(corpus):
     g, _ = mlp_graph(layers=5, d=96, batch=16)
     cfg = GNNConfig(n_layers=2, n_heads=2, head_dim=8, mlp_dim=32)

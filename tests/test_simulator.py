@@ -105,14 +105,16 @@ def test_timeline_consistency():
     sim = Simulator(n_devices=64, keep_timeline=True)
     r = sim.run(g)
     compute_events = [e for e in r.timeline if e[0] == "compute"]
-    # comm records are (kind, bucket, algo, level, start, end)
+    # comm records are (kind, bucket, chunk, traffic_class, algo, level,
+    # start, end)
     comm_events = [e for e in r.timeline if e[0] != "compute"]
     assert len(compute_events) == g.n_groups
     assert len(comm_events) == len(g.buckets)
-    assert all(e[0] == "allreduce" and e[2] == "ring" for e in comm_events)
+    assert all(e[0] == "allreduce" and e[3] == "dp" and e[4] == "ring"
+               for e in comm_events)
     # serialized streams: no overlap within a stream
     compute_spans = sorted((e[2], e[3]) for e in compute_events)
-    comm_spans = sorted((e[4], e[5]) for e in comm_events)
+    comm_spans = sorted((e[6], e[7]) for e in comm_events)
     for spans in (compute_spans, comm_spans):
         for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
             assert s2 >= e1 - 1e-12
