@@ -38,11 +38,12 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from common import arch_graph, csv_row
 from repro.cluster import PRESETS
-from repro.core import Simulator, backtracking_search
-from repro.core.search import ALL_METHODS, METHOD_CHUNK
+from repro.core import Simulator
+from repro.core.mutations import ALL_METHODS, METHOD_CHUNK
 from repro.core.baselines import (assign_bucket_algos,
                                   threshold_tensor_fusion,
                                   xla_post_order_op_fusion)
+from repro.plan import compile_plan
 
 OUT = "experiments/perf"
 
@@ -89,22 +90,23 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
                     "chunks": k,
                 }
     if not smoke:
-        # budget-matched joint searches: with and without METHOD_CHUNK
+        # budget-matched joint searches (via the compile() facade): with
+        # and without METHOD_CHUNK
         no_chunk = tuple(m for m in ALL_METHODS if m != METHOD_CHUNK)
         for tag, methods in (("searched_chunked", ALL_METHODS),
                              ("searched_whole", no_chunk)):
-            res = backtracking_search(
-                g0, Simulator(cluster=spec, streams=STREAMS),
+            plan = compile_plan(
+                graph=g0, cluster=spec, streams=STREAMS,
                 unchanged_limit=unchanged_limit, max_steps=max_steps,
                 seed=seed, methods=methods)
-            d = res.best.describe()
+            d = plan.describe()
             configs[tag] = {
-                "iteration_time_s": res.best_cost,
-                "buckets": len(res.best.buckets),
-                "chunks": max(res.best.bucket_chunks),
+                "iteration_time_s": plan.predicted_iteration_time,
+                "buckets": d["allreduce_buckets"],
+                "chunks": max(plan.bucket_chunks),
                 "bucket_chunks": d["bucket_chunks"],
                 "bucket_algos": d["bucket_algos"],
-                "simulations": res.simulations,
+                "simulations": plan.provenance["simulations"],
             }
     whole = {k: v["iteration_time_s"] for k, v in configs.items()
              if v["chunks"] == 1}

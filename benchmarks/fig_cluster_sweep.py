@@ -1,8 +1,9 @@
 """Fig. C (ours): searched strategy across the cluster preset zoo.
 
 For each :mod:`repro.cluster` preset (plus the legacy flat model as the
-reference point) run the joint op/tensor/algorithm backtracking search on
-the same traced training step and record what wins.  The point of the
+reference point) run the joint op/tensor/algorithm backtracking search —
+through the ``repro.plan.compile()`` facade, one cached trace searched per
+preset — on the same traced training step and record what wins.  The point of the
 exercise (and the acceptance bar of the cluster subsystem): the *winning
 strategy changes with topology* — bucket counts, op-fusion shape and the
 per-bucket collective algorithm all move, and on inter-host-bottlenecked
@@ -14,7 +15,6 @@ Writes ``experiments/perf/cluster_sweep.json`` and prints a CSV block.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import sys
@@ -25,25 +25,22 @@ sys.path.insert(0, os.path.dirname(__file__))
 from common import arch_graph, csv_row
 from repro.cluster import (COLLECTIVE_ALGOS, ClusterSpec, PRESETS,
                            bucket_time)
-from repro.core import Simulator, backtracking_search, evaluate_baselines
+from repro.core import Simulator, evaluate_baselines
 from repro.core.hw import TPU_V5E
+from repro.plan import compile_plan
 
 OUT = "experiments/perf"
 
 
-def strategy_fingerprint(g) -> str:
-    """Process-stable identity of a strategy (PYTHONHASHSEED-independent)."""
-    return hashlib.sha256(repr(g.signature()).encode()).hexdigest()[:16]
-
-
 def sweep_one(g0, name: str, spec: ClusterSpec, *, unchanged_limit: int,
               max_steps: int, seed: int = 0) -> dict:
-    sim = Simulator(cluster=spec)
-    base = evaluate_baselines(g0, sim)
-    res = backtracking_search(g0, sim, unchanged_limit=unchanged_limit,
-                              max_steps=max_steps, seed=seed)
+    base = evaluate_baselines(g0, Simulator(cluster=spec))
+    plan = compile_plan(graph=g0, cluster=spec,
+                        unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, seed=seed)
     total_grad = sum(g0.bucket_bytes(b) for b in g0.buckets)
-    d = res.best.describe()
+    d = plan.describe()
+    prov = plan.provenance
     return {
         "preset": name,
         "n_devices": spec.n_devices,
@@ -54,17 +51,22 @@ def sweep_one(g0, name: str, spec: ClusterSpec, *, unchanged_limit: int,
         "whole_volume_time_s": {
             a: bucket_time(total_grad, spec, a) for a in COLLECTIVE_ALGOS
         },
-        "initial_cost": res.initial_cost,
-        "best_cost": res.best_cost,
-        "speedup_vs_initial": res.initial_cost / res.best_cost,
+        "initial_cost": prov["initial_cost"],
+        "best_cost": plan.predicted_iteration_time,
+        "speedup_vs_initial": prov["initial_cost"]
+                              / plan.predicted_iteration_time,
         "baselines": base,
-        "speedup_vs_jax_default": base["JAX_default"] / res.best_cost,
-        "steps": res.steps,
-        "simulations": res.simulations,
-        "buckets": len(res.best.buckets),
+        "speedup_vs_jax_default": base["JAX_default"]
+                                  / plan.predicted_iteration_time,
+        "steps": prov["steps"],
+        "simulations": prov["simulations"],
+        "buckets": d["allreduce_buckets"],
         "fused_groups": d["fused_groups"],
         "bucket_algos": d["bucket_algos"],
-        "fingerprint": strategy_fingerprint(res.best),
+        # strategy-only fingerprint: the distinct_strategies metric must
+        # compare what the search *chose*, not the per-preset pricing
+        # context baked into plan.fingerprint()
+        "fingerprint": plan.strategy_fingerprint(),
     }
 
 

@@ -40,10 +40,11 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from common import arch_graph, csv_row
 from repro.cluster import PRESETS
-from repro.core import Simulator, backtracking_search
+from repro.core import Simulator
 from repro.core.baselines import (assign_bucket_algos, assign_bucket_comm,
                                   threshold_tensor_fusion,
                                   xla_post_order_op_fusion)
+from repro.plan import compile_plan
 
 OUT = "experiments/perf"
 
@@ -89,20 +90,23 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
             "streams": 4,
         }
     # budget-matched joint searches: one against the serialized channel,
-    # one against the 4-stream engine (op x tensor x algo [x comm kind])
+    # one against the 4-stream engine (op x tensor x algo [x comm kind]) —
+    # both through the compile() facade; the winning strategy comes back
+    # as a Plan whose to_graph() reconstructs the graph when the timeline
+    # replay needs it
     for tag, s in (("searched@s1", 1), ("searched@s4", 4)):
-        res = backtracking_search(g0, Simulator(cluster=spec, streams=s),
-                                  unchanged_limit=unchanged_limit,
-                                  max_steps=max_steps, seed=seed)
-        d = res.best.describe()
-        graphs[tag] = (res.best, s)
+        plan = compile_plan(graph=g0, cluster=spec, streams=s,
+                            unchanged_limit=unchanged_limit,
+                            max_steps=max_steps, seed=seed)
+        d = plan.describe()
+        graphs[tag] = (plan.to_graph(g0), s)
         configs[tag] = {
-            "iteration_time_s": res.best_cost,
-            "buckets": len(res.best.buckets),
+            "iteration_time_s": plan.predicted_iteration_time,
+            "buckets": d["allreduce_buckets"],
             "streams": s,
             "bucket_algos": d["bucket_algos"],
             "bucket_comm": d["bucket_comm"],
-            "simulations": res.simulations,
+            "simulations": plan.provenance["simulations"],
         }
 
     ser = {k: v["iteration_time_s"] for k, v in configs.items()

@@ -27,7 +27,12 @@ Writes ``experiments/perf/search_engine.json``.
 run on ``transformer-paper`` that **fails** (exit 1) when the incremental
 engine's candidate-evaluation throughput drops below ``--smoke-min-speedup``
 x the seed engine — catching event-engine (or other comm-pass) overhead
-creeping onto the search hot path.
+creeping onto the search hot path.  It also runs the same bounded search
+through the ``repro.plan.compile()`` facade and fails when the facade adds
+more than ``--smoke-max-facade-overhead`` (default 5%) over the direct
+``backtracking_search`` wall time, or when its plan's predicted cost
+drifts from the direct search's best (the facade must be wiring, not a
+fork of the pipeline).
 """
 from __future__ import annotations
 
@@ -192,6 +197,9 @@ def main():
                     help="throughput floor for the chunked multi-stream "
                          "smoke config (event-engine comm pass on both "
                          "sides, so the incremental edge is smaller)")
+    ap.add_argument("--smoke-max-facade-overhead", type=float, default=0.05,
+                    help="ceiling on compile() facade overhead relative to "
+                         "the direct backtracking_search wall time")
     args = ap.parse_args()
     if args.smoke:
         args.archs = "transformer-paper"
@@ -224,6 +232,30 @@ def main():
                   f"incremental={thr_ms['incremental']['sims_per_sec']} "
                   f"({thr_ms['speedup']}x, bit-identical)", flush=True)
             report[arch]["throughput_chunked_multistream"] = thr_ms
+            # compile() facade on the same graph/budget: the trajectory is
+            # identical to bench_search's direct incremental run, so its
+            # wall time isolates the facade's own overhead
+            from repro.plan import compile_plan
+
+            plan = compile_plan(graph=arch_graph(arch),
+                                unchanged_limit=10**9,
+                                max_steps=args.steps, seed=0)
+            fac = {
+                "facade_wall_seconds": round(
+                    plan.provenance["facade_wall_time"], 3),
+                "search_wall_seconds": round(
+                    plan.provenance["search_wall_time"], 3),
+                "overhead": round(
+                    plan.provenance["facade_wall_time"]
+                    / plan.provenance["search_wall_time"] - 1, 4),
+                "best_cost": plan.predicted_iteration_time,
+                "direct_best_cost": srch["incremental"]["best_cost"],
+            }
+            print(f"  compile() facade: search "
+                  f"{fac['search_wall_seconds']}s, total "
+                  f"{fac['facade_wall_seconds']}s "
+                  f"({fac['overhead']*100:.2f}% overhead)", flush=True)
+            report[arch]["facade"] = fac
     if not args.skip_deepseek:
         arch = "deepseek-v2-236b"
         print(f"=== {arch} (scale probe, budget {args.seed_budget}s) ===",
@@ -252,10 +284,26 @@ def main():
             print(f"SMOKE FAIL: incremental/seed throughput below floor: "
                   f"{bad}")
             raise SystemExit(1)
+        facades = {a: r["facade"] for a, r in report.items()
+                   if "facade" in r}
+        for a, fac in facades.items():
+            if fac["best_cost"] != fac["direct_best_cost"]:
+                print(f"SMOKE FAIL: {a}: compile() facade found "
+                      f"{fac['best_cost']} vs direct search "
+                      f"{fac['direct_best_cost']} — the facade forked the "
+                      f"pipeline")
+                raise SystemExit(1)
+            if fac["overhead"] > args.smoke_max_facade_overhead:
+                print(f"SMOKE FAIL: {a}: compile() facade overhead "
+                      f"{fac['overhead']*100:.2f}% exceeds "
+                      f"{args.smoke_max_facade_overhead*100:.0f}%")
+                raise SystemExit(1)
         print(f"smoke OK: incremental/seed throughput {speedups}, "
               f"chunked multi-stream {chunked} "
               f"(floors {args.smoke_min_speedup}x / "
-              f"{args.smoke_min_speedup_chunked}x)")
+              f"{args.smoke_min_speedup_chunked}x); facade overhead "
+              f"{ {a: f['overhead'] for a, f in facades.items()} } "
+              f"(ceiling {args.smoke_max_facade_overhead*100:.0f}%)")
 
 
 if __name__ == "__main__":

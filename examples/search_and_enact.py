@@ -1,19 +1,24 @@
-"""Search -> save -> enact: the full DisCo workflow (paper Sec. 3.1).
+"""Search -> save -> enact: the full DisCo workflow (paper Sec. 3.1),
+through the ``repro.plan`` public API.
 
     PYTHONPATH=src python examples/search_and_enact.py
     PYTHONPATH=src python examples/search_and_enact.py \
-        --cluster a100_nvlink_ib
+        --cluster a100_nvlink_ib --streams 4
 
-Search Phase: backtracking search over the traced step; the winning tensor-
-fusion strategy is written to strategy.json (the paper's "optimized HLO
-module" configuration file).  With ``--cluster <preset>`` the search prices
-collectives on that topology (see ``repro.cluster.list_presets()``) and
-also picks a collective algorithm per bucket; without it, the legacy flat
-model is used (bit-identical to the seed).
+Search Phase: one call — ``repro.plan.compile()`` owns trace -> profile ->
+backtracking search and returns a frozen, versioned :class:`repro.plan.
+Plan` artifact (op-fusion groups, buckets, per-bucket algo/comm/chunks,
+cluster fingerprint, predicted iteration time).  ``plan.save()`` writes the
+schema-versioned JSON — the paper's "optimized HLO module" configuration
+file, now a first-class value that ``dryrun --plan`` can re-price and any
+trainer can load.
 
-Enactment Phase: the strategy is loaded and built into the distributed train
-step; we lower both the per-tensor baseline and the DisCo-bucketed step and
-show the AllReduce count in the compiled HLO shrink accordingly.
+Enactment Phase: ``Plan.load()`` round-trips the artifact (asserted
+bit-for-bit) and ``plan.grad_sync(params)`` lowers it to the
+:class:`GradSyncStrategy` built into the distributed train step; we lower
+the per-tensor baseline and the DisCo-bucketed step and show the AllReduce
+count in the compiled HLO shrink accordingly — including real per-chunk
+collectives when the search picked ``chunks > 1``.
 """
 import os
 import sys
@@ -26,10 +31,9 @@ os.environ.setdefault("XLA_FLAGS",
 import jax
 import jax.numpy as jnp
 
+import repro.plan as RP
 from repro.configs import get_config
-from repro.core import Simulator, backtracking_search, profile_graph, \
-    trace_grad_graph
-from repro.data.pipeline import make_batch_specs, materialize_batch
+from repro.data.pipeline import make_batch_specs
 from repro.distributed.train_step import (GradSyncStrategy, build_train_step,
                                           jit_train_step)
 from repro.launch.dryrun import parse_collectives
@@ -61,17 +65,12 @@ def main():
                          "RS+AG) and chunk count become searched dimensions "
                          "too (the flat default spec is algorithm-blind and "
                          "drops them)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="bound the search step count (CI smoke lane)")
     args = ap.parse_args()
-
-    cfg = get_config("qwen2-0.5b").reduced()
-    key = jax.random.PRNGKey(0)
-    params = ST.init_params(key, cfg)
-    batch = materialize_batch(cfg, 8, 64)
 
     # ---- Search Phase (ENABLE_SEARCH=1 in the paper) ----
     print("search phase ...")
-    g = profile_graph(trace_grad_graph(
-        lambda p, bt: ST.loss_fn(p, cfg, bt), params, batch))
     if args.cluster:
         from repro.cluster import get_preset
 
@@ -79,17 +78,17 @@ def main():
         print(f"  pricing collectives on {spec.name} "
               f"({spec.n_devices} devices, {len(spec.levels)} link levels, "
               f"{args.streams} stream(s))")
-        sim = Simulator(cluster=spec, streams=args.streams)
-    else:
-        sim = Simulator(n_devices=4, streams=args.streams)
-    res = backtracking_search(g, sim, unchanged_limit=120, seed=0)
-    strat = GradSyncStrategy.from_fusion_graph(res.best, params)
-    path = os.path.join(tempfile.gettempdir(), "disco_strategy.json")
-    strat.save(path)
-    print(f"  {len(g.buckets)} gradient tensors -> "
-          f"{len(strat.buckets)} fused AllReduce buckets; saved {path}")
+    plan = RP.compile("qwen2-0.5b", cluster=args.cluster,
+                      streams=args.streams, n_devices=4,
+                      unchanged_limit=120, max_steps=args.steps, seed=0)
+    path = os.path.join(tempfile.gettempdir(), "disco_plan.json")
+    plan.save(path)
+    d = plan.describe()
+    print(f"  {d['grad_tensors']} gradient tensors -> "
+          f"{d['allreduce_buckets']} fused AllReduce buckets "
+          f"(predicted {plan.predicted_iteration_time*1e3:.3f} ms, "
+          f"{plan.provenance['simulations']} simulations); saved {path}")
     if args.cluster:
-        d = res.best.describe()
         print(f"  searched collective-algorithm mix: {d['bucket_algos']}")
         if args.streams > 1:
             print(f"  searched comm kinds: {d['bucket_comm']}  "
@@ -97,9 +96,17 @@ def main():
 
     # ---- Enactment Phase (ENABLE_SEARCH=0) ----
     print("enactment phase ...")
-    loaded = GradSyncStrategy.load(path)
+    loaded = RP.Plan.load(path)
+    # the artifact is a value: the round trip is exact, identity included
+    assert loaded == plan and loaded.fingerprint() == plan.fingerprint(), \
+        "plan save/load round-trip drifted"
+    print(f"  plan round-trips bit-for-bit [{loaded.fingerprint()}]")
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    key = jax.random.PRNGKey(0)
     mesh = make_mesh_compat((4, 2), ("data", "model"))
     params_s = jax.eval_shape(lambda: ST.init_params(key, cfg))
+    strat = loaded.grad_sync(params_s)
     init, _ = adamw(1e-3)
     opt_s = jax.eval_shape(lambda: init(jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_s)))
@@ -107,7 +114,7 @@ def main():
 
     n_pt, _ = allreduce_count(cfg, mesh, GradSyncStrategy.per_tensor(params_s),
                               params_s, opt_s, specs)
-    n_disco, coll = allreduce_count(cfg, mesh, loaded, params_s, opt_s, specs)
+    n_disco, coll = allreduce_count(cfg, mesh, strat, params_s, opt_s, specs)
     print(f"  compiled HLO all-reduce count: per-tensor={n_pt}, "
           f"DisCo={n_disco}")
     print(f"  DisCo collective mix: "

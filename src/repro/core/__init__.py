@@ -5,9 +5,11 @@ from .costs import (OracleEstimator, group_time_oracle, prim_time,
 from .simulator import SimResult, Simulator
 from .events import (BackgroundTraffic, CommEngine, CommJob, DISC_FAIR,
                      DISC_FIFO, TC_DP, TC_PP, TC_TP, TRAFFIC_CLASSES)
-from .search import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO, METHOD_CHUNK,
-                     METHOD_COMM, METHOD_DUP, METHOD_NONDUP, METHOD_TENSOR,
-                     SearchResult, backtracking_search, random_apply)
+from .mutations import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO,
+                        METHOD_CHUNK, METHOD_COMM, METHOD_DUP,
+                        METHOD_NONDUP, METHOD_TENSOR, MUTATIONS, Mutation,
+                        active_methods, random_apply, register_mutation)
+from .search import SearchResult, backtracking_search
 from .baselines import (BASELINES, assign_bucket_algos,
                         assign_bucket_chunks, assign_bucket_comm,
                         evaluate_baselines)
@@ -21,6 +23,7 @@ __all__ = [
     "DISC_FAIR", "DISC_FIFO", "TC_DP", "TC_PP", "TC_TP", "TRAFFIC_CLASSES",
     "ALL_METHODS", "CHUNK_CHOICES", "METHOD_ALGO", "METHOD_CHUNK",
     "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
+    "MUTATIONS", "Mutation", "active_methods", "register_mutation",
     "SearchResult", "backtracking_search", "random_apply",
     "BASELINES", "assign_bucket_algos", "assign_bucket_chunks",
     "assign_bucket_comm", "evaluate_baselines",

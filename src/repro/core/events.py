@@ -165,6 +165,30 @@ class _Active:
                 return True
 
 
+def bucket_jobs(bucket: int, ready: float, nbytes: float, algo: str,
+                kind: str, chunks: int,
+                next_id: int) -> tuple[list[CommJob], int]:
+    """The canonical job decomposition of one gradient bucket: a single
+    job when ``chunks <= 1``, else ``chunks`` store-and-forward chunk jobs
+    (each ``nbytes/chunks``, ``after``-chained, ids allocated from
+    ``next_id``).  Shared by the simulator's comm pass and
+    ``repro.plan.Plan.comm_jobs`` so plan pricing can never drift from
+    search pricing.  Returns ``(jobs, next_id)``."""
+    if chunks <= 1:
+        return [CommJob(bucket=bucket, ready=ready, nbytes=nbytes,
+                        algo=algo, kind=kind)], next_id
+    jobs = []
+    prev = None
+    for c in range(chunks):
+        jobs.append(CommJob(bucket=bucket, ready=ready,
+                            nbytes=nbytes / chunks, algo=algo, kind=kind,
+                            job_id=next_id, after=prev, chunk=c,
+                            chunks=chunks))
+        prev = next_id
+        next_id += 1
+    return jobs, next_id
+
+
 class CommEngine:
     """Schedules one iteration's communication jobs on the link levels of a
     :class:`ClusterSpec`; returns ``(busy_seconds, finish_time)``."""

@@ -25,7 +25,11 @@ cluster extension's fourth method, ``set_bucket_comm`` the event-engine
 extension's fifth, and ``set_bucket_chunks`` (store-and-forward chunk
 count, ``bucket_chunks``) the sixth: the search is joint over op fusion x
 tensor fusion x collective algorithm x comm kind x chunking (DESIGN.md
-Sec. 7-9).
+Sec. 7-9).  Each dimension is registered as a declarative
+:class:`repro.core.mutations.Mutation` (name, random application,
+per-simulator applicability) — the searched strategy state here plus that
+registry is everything :class:`repro.plan.Plan` serializes (DESIGN.md
+Sec. 10).
 
 Incremental invariants
 ----------------------

@@ -21,6 +21,14 @@ Per Alg. 1, "unchanged" is counted **once per dequeued step** that fails to
 improve H_opt — not once per method draw, which would make the effective
 patience depend on ``len(methods)``.
 
+The methods themselves live in the declarative registry
+:mod:`repro.core.mutations`: each searched dimension is a
+``Mutation(name, apply, applicable)`` and the per-simulator drop rules
+(flat specs are algorithm-blind; comm-kind and chunk flips only matter on a
+multi-stream engine) are its ``applicable(sim)`` predicate —
+``active_methods(sim, methods)`` below replaces the hard-coded filters.
+New dimensions register there once and the search picks them up.
+
 Candidate evaluation can optionally be spread over a process pool
 (``workers=N``): candidates are still *generated* sequentially (the RNG
 stream, and therefore the search trajectory, is identical to the serial
@@ -38,23 +46,20 @@ import random
 import time as _time
 from typing import Callable, Sequence
 
-from ..cluster import BUCKET_COMM_KINDS, COLLECTIVE_ALGOS
 from .costs import OracleEstimator
 from .graph import FusionGraph
+from .mutations import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO,
+                        METHOD_CHUNK, METHOD_COMM, METHOD_DUP,
+                        METHOD_NONDUP, METHOD_TENSOR, MUTATIONS, Mutation,
+                        active_methods, random_apply)
 from .simulator import Simulator
 
-METHOD_NONDUP = "nondup"
-METHOD_DUP = "dup"
-METHOD_TENSOR = "tensor"
-METHOD_ALGO = "algo"
-METHOD_COMM = "comm"
-METHOD_CHUNK = "chunk"
-ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO,
-               METHOD_COMM, METHOD_CHUNK)
-
-# store-and-forward chunk counts METHOD_CHUNK draws from (1 restores the
-# whole-bucket collective; powers of two mirror NCCL's chunk granularity)
-CHUNK_CHOICES = (1, 2, 4, 8)
+__all__ = [
+    "ALL_METHODS", "CHUNK_CHOICES", "METHOD_ALGO", "METHOD_CHUNK",
+    "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
+    "MUTATIONS", "Mutation", "SearchResult", "active_methods",
+    "backtracking_search", "random_apply",
+]
 
 
 @dataclasses.dataclass
@@ -66,50 +71,6 @@ class SearchResult:
     simulations: int
     wall_time: float
     history: list  # (step, best_cost)
-
-
-def random_apply(g: FusionGraph, method: str, n: int, rng: random.Random) -> bool:
-    """Apply ``method`` up to n times with random operands.  Mutates ``g``;
-    returns True if at least one application changed the graph."""
-    changed = False
-    for _ in range(n):
-        if method == METHOD_TENSOR:
-            if len(g.buckets) < 2:
-                break
-            i = rng.randrange(len(g.buckets) - 1)
-            changed |= g.merge_buckets(i, i + 1)
-            continue
-        if method == METHOD_ALGO:
-            if not g.buckets:
-                break
-            i = rng.randrange(len(g.buckets))
-            changed |= g.set_bucket_algo(i, rng.choice(COLLECTIVE_ALGOS))
-            continue
-        if method == METHOD_COMM:
-            if not g.buckets:
-                break
-            i = rng.randrange(len(g.buckets))
-            changed |= g.set_bucket_comm(i, rng.choice(BUCKET_COMM_KINDS))
-            continue
-        if method == METHOD_CHUNK:
-            if not g.buckets:
-                break
-            i = rng.randrange(len(g.buckets))
-            changed |= g.set_bucket_chunks(i, rng.choice(CHUNK_CHOICES))
-            continue
-        gids = list(g.groups)
-        # a handful of attempts to find a valid (consumer, producer) pair
-        for _attempt in range(4):
-            c = rng.choice(gids)
-            preds = list(g.group_preds(c))
-            if not preds:
-                continue
-            p = rng.choice(preds)
-            ok = g.fuse_nondup(c, p) if method == METHOD_NONDUP else g.fuse_dup(c, p)
-            if ok:
-                changed = True
-                break
-    return changed
 
 
 # --------------------------------------------------------- worker-pool eval
@@ -190,7 +151,7 @@ def backtracking_search(
     alpha: float = 1.05,
     beta: int = 10,
     unchanged_limit: int = 200,
-    methods: Sequence[str] = ALL_METHODS,
+    methods: Sequence[str] | None = None,
     seed: int = 0,
     max_queue: int = 512,
     max_steps: int | None = None,
@@ -201,25 +162,13 @@ def backtracking_search(
     tick = itertools.count()
     cost_cache: dict = {}
     sims = 0
-    # the flat back-compat spec is algorithm-blind (every collective model
-    # degenerates to the legacy formula), so algo flips can never improve —
-    # drop the method instead of burning candidate evaluations on it.  Sims
-    # that expose no cluster at all (custom cost stubs, seed emulations)
-    # are treated the same so their trajectories match the flat default.
-    cluster = getattr(sim, "cluster", None)
-    if cluster is None or cluster.is_flat_compat:
-        methods = tuple(m for m in methods if m not in (METHOD_ALGO,
-                                                        METHOD_COMM,
-                                                        METHOD_CHUNK))
-    elif getattr(sim, "streams", 1) <= 1:
-        # on a serialized channel the ZeRO-3 RS+AG split prices identically
-        # to the fused AllReduce (RS + AG == AR term by term) and chunking
-        # conserves total channel work exactly, so comm-kind and chunk
-        # flips only matter once the event engine can pipeline phases —
-        # dropping the methods keeps the PR-2 trajectory (and throughput)
-        # unchanged for streams=1 searches.
-        methods = tuple(m for m in methods if m not in (METHOD_COMM,
-                                                        METHOD_CHUNK))
+    # methods=None searches every *registered* mutation (new dimensions
+    # register once in repro.core.mutations and are picked up here); either
+    # way, dimensions that cannot improve candidates priced by this sim
+    # (flat specs are algorithm-blind, comm/chunk flips need a multi-stream
+    # engine) are dropped instead of burning candidate evaluations — the
+    # rules are the mutations' applicable(sim) predicates.
+    methods = active_methods(sim, methods)
     pool = _make_pool(sim, g0, workers)
 
     def cost(g: FusionGraph) -> float:

@@ -61,7 +61,7 @@ from collections import OrderedDict
 from ..cluster import (COLLECTIVE_ALGOS, ClusterSpec, KIND_AR, KIND_RS_AG,
                        comm_coeffs, phases)
 from .costs import OracleEstimator, total_comm_time, total_compute_time
-from .events import BackgroundTraffic, CommEngine, CommJob, TC_DP
+from .events import BackgroundTraffic, CommEngine, TC_DP, bucket_jobs
 from .graph import FusionGraph
 from .hw import Hardware, TPU_V5E
 
@@ -347,20 +347,10 @@ class Simulator:
             jobs = []
             next_id = len(buckets)
             for i, r in bucket_ready_at.items():
-                nb = g.bucket_bytes(buckets[i])
-                k = chunks[i]
-                if k <= 1:
-                    jobs.append(CommJob(bucket=i, ready=r, nbytes=nb,
-                                        algo=algos[i], kind=kinds[i]))
-                    continue
-                prev = None
-                for c in range(k):
-                    jobs.append(CommJob(bucket=i, ready=r, nbytes=nb / k,
-                                        algo=algos[i], kind=kinds[i],
-                                        job_id=next_id, after=prev,
-                                        chunk=c, chunks=k))
-                    prev = next_id
-                    next_id += 1
+                js, next_id = bucket_jobs(i, r, g.bucket_bytes(buckets[i]),
+                                          algos[i], kinds[i], chunks[i],
+                                          next_id)
+                jobs.extend(js)
             if self.background:
                 for traffic in self.background:
                     bjobs = traffic.materialize(horizon, next_id)

@@ -42,13 +42,22 @@ class GradSyncStrategy:
     by one fused collective.  ``comms[i]`` picks the collective kind of
     bucket ``i``: ``"ar"`` (one fused AllReduce, the paper's DDP path) or
     ``"rs_ag"`` (ZeRO-3-style reduce-scatter + all-gather — the searched
-    ``FusionGraph.bucket_comm`` dimension, enacted for real)."""
+    ``FusionGraph.bucket_comm`` dimension, enacted for real).
+    ``chunks[i] > 1`` splits bucket ``i``'s fused tensor into that many
+    even byte ranges, each synchronised by its own collective — the
+    searched ``FusionGraph.bucket_chunks`` store-and-forward dimension,
+    enacted for real (identical numerics: a psum of disjoint slices is the
+    sliced psum)."""
     buckets: list[list[int]]
     barriers: bool = False      # fence buckets with optimization_barrier
     comms: Optional[list[str]] = None   # per-bucket "ar" | "rs_ag"
+    chunks: Optional[list[int]] = None  # per-bucket collective count (>= 1)
 
     def comm_kind(self, i: int) -> str:
         return self.comms[i] if self.comms else "ar"
+
+    def chunk_count(self, i: int) -> int:
+        return max(int(self.chunks[i]), 1) if self.chunks else 1
 
     @staticmethod
     def per_tensor(params) -> "GradSyncStrategy":
@@ -77,38 +86,61 @@ class GradSyncStrategy:
         return GradSyncStrategy(buckets)
 
     @staticmethod
+    def from_buckets(buckets, comms=None, chunks=None, params=None,
+                     barriers: bool = False) -> "GradSyncStrategy":
+        """Build a strategy from explicit per-bucket state (the single
+        implementation of the clip-to-leaves contract, shared by
+        ``from_fusion_graph`` and ``repro.plan.Plan.grad_sync``).  With
+        ``params``, bucket entries are clipped to the real leaf count and
+        uncovered leaves get singleton AllReduce buckets."""
+        buckets = [list(b) for b in buckets]
+        comms = (list(comms) if comms is not None
+                 else ["ar"] * len(buckets))
+        chunks = ([int(k) for k in chunks] if chunks is not None
+                  else [1] * len(buckets))
+        if params is not None:
+            n = len(jax.tree.leaves(params))
+            seen: set = set()
+            kept, kcomms, kchunks = [], [], []
+            for b, kind, k in zip(buckets, comms, chunks):
+                bk = [i for i in b if i < n]
+                seen.update(bk)
+                if bk:
+                    kept.append(bk)
+                    kcomms.append(kind)
+                    kchunks.append(k)
+            rest = [i for i in range(n) if i not in seen]
+            kept.extend([[i] for i in rest])
+            kcomms.extend(["ar"] * len(rest))
+            kchunks.extend([1] * len(rest))
+            buckets, comms, chunks = kept, kcomms, kchunks
+        return GradSyncStrategy(buckets, barriers=barriers, comms=comms,
+                                chunks=chunks)
+
+    @staticmethod
     def from_fusion_graph(g, params) -> "GradSyncStrategy":
         """Lift the searched FusionGraph's bucket partition onto the real
         parameter leaves (grad_param indices == leaf indices), carrying the
-        searched per-bucket comm kind along so ``rs_ag`` buckets lower to
-        reduce-scatter + all-gather when enacted."""
-        n = len(jax.tree.leaves(params))
-        seen: set = set()
-        buckets = []
-        comms = []
+        searched per-bucket comm kind and chunk count along so ``rs_ag``
+        buckets lower to reduce-scatter + all-gather and chunked buckets
+        to per-chunk collectives when enacted."""
         kinds = getattr(g, "bucket_comm", None) or ["ar"] * len(g.buckets)
-        for b, kind in zip(g.buckets, kinds):
-            bk = [i for i in b if i < n]
-            seen.update(bk)
-            if bk:
-                buckets.append(bk)
-                comms.append(kind)
-        rest = [i for i in range(n) if i not in seen]
-        buckets.extend([[i] for i in rest])
-        comms.extend(["ar"] * len(rest))
-        return GradSyncStrategy(buckets, comms=comms)
+        counts = getattr(g, "bucket_chunks", None) or [1] * len(g.buckets)
+        return GradSyncStrategy.from_buckets(g.buckets, kinds, counts,
+                                             params=params)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump({"buckets": self.buckets, "barriers": self.barriers,
-                       "comms": self.comms}, f)
+                       "comms": self.comms, "chunks": self.chunks}, f)
 
     @staticmethod
     def load(path: str) -> "GradSyncStrategy":
         with open(path) as f:
             d = json.load(f)
         return GradSyncStrategy(d["buckets"], d.get("barriers", False),
-                                comms=d.get("comms"))
+                                comms=d.get("comms"),
+                                chunks=d.get("chunks"))
 
 
 def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
@@ -124,6 +156,14 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
     multiple of the data-parallel degree so the shards tile evenly — the
     compiled HLO carries reduce-scatter/all-gather ops instead of
     all-reduce, with identical numerics.
+
+    A bucket with ``chunks > 1`` splits its fused tensor into that many
+    even byte ranges and issues one collective per chunk (the same lowering
+    path as above, applied per range) — the searched store-and-forward
+    chunking, enacted so the compiled HLO carries exactly the collective
+    count the event engine priced.  Numerics are bit-identical to the
+    whole-bucket collective: each element's reduction is unchanged, only
+    the op it rides in shrinks.
 
     Compat gate: stock JAX 0.4.x's bundled XLA aborts on gather-type
     collectives (``all_gather``/``all_to_all``/``ppermute``) inside a
@@ -159,20 +199,35 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
             f32 = fused.astype(jnp.float32)
             gather_ok = (full_manual
                          or not compat.needs_partial_manual_workarounds())
-            if strategy.comm_kind(bi) == "rs_ag" and dp > 1 and gather_ok:
-                n0 = f32.shape[0]
-                pad = (-n0) % dp
-                if pad:
-                    f32 = jnp.concatenate(
-                        [f32, jnp.zeros((pad,), jnp.float32)])
-                shard = jax.lax.psum_scatter(f32, tuple(dp_axes),
-                                             scatter_dimension=0,
-                                             tiled=True) / dp
-                f32 = jax.lax.all_gather(shard, tuple(dp_axes), tiled=True)
-                if pad:
-                    f32 = f32[:n0]
+            rs_ag = (strategy.comm_kind(bi) == "rs_ag" and dp > 1
+                     and gather_ok)
+
+            def reduce_one(part):
+                if rs_ag:
+                    n0 = part.shape[0]
+                    pad = (-n0) % dp
+                    if pad:
+                        part = jnp.concatenate(
+                            [part, jnp.zeros((pad,), jnp.float32)])
+                    shard = jax.lax.psum_scatter(part, tuple(dp_axes),
+                                                 scatter_dimension=0,
+                                                 tiled=True) / dp
+                    part = jax.lax.all_gather(shard, tuple(dp_axes),
+                                              tiled=True)
+                    if pad:
+                        part = part[:n0]
+                else:
+                    part = jax.lax.psum(part, tuple(dp_axes)) / dp
+                return part
+
+            k = min(strategy.chunk_count(bi), max(f32.shape[0], 1))
+            if k > 1:
+                # even byte split; each chunk is its own collective
+                cuts = [f32.shape[0] * c // k for c in range(k + 1)]
+                f32 = jnp.concatenate(
+                    [reduce_one(f32[cuts[c]:cuts[c + 1]]) for c in range(k)])
             else:
-                f32 = jax.lax.psum(f32, tuple(dp_axes)) / dp
+                f32 = reduce_one(f32)
             fused = f32.astype(dt)
             prev_fused = fused
             off = 0

@@ -7,8 +7,14 @@ artifact.
         --shape train_4k --multi-pod
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
         --shape train_4k --cluster a100_nvlink_ib
+    PYTHONPATH=src python -m repro.launch.dryrun --plan plan.json
 
-Outputs one JSON per combination under experiments/dryrun/, including a
+With ``--plan <file>`` a saved :class:`repro.plan.Plan` artifact is priced
+directly (serialized channel + event engine on its recorded bucket volumes
+and cluster fingerprint) — no model trace, no search, no compile.
+
+Otherwise, outputs one JSON per combination under experiments/dryrun/,
+including a
 ``cluster`` block that prices the compiled collectives on a
 :class:`repro.cluster.ClusterSpec` (``--cluster <preset>`` to pick one of
 the preset zoo; default derives the topology from the mesh).
@@ -371,6 +377,48 @@ def collective_cost_model(coll: dict, spec, streams: int = 1,
     return out
 
 
+# -------------------------------------------------------------- plan pricing
+def price_plan(path: str, cluster: str | None = None,
+               streams: int | None = None,
+               out_dir: str | None = None, verbose: bool = True) -> dict:
+    """Price a saved :class:`repro.plan.Plan` artifact without re-tracing
+    or re-searching (``--plan <file>``): the serialized-channel sum and the
+    event-engine finish of the plan's recorded bucket volumes, on the
+    plan's own cluster fingerprint or an explicit ``--cluster`` override
+    (the override is reported as ``cluster_fingerprint_match: false`` when
+    it differs from what the plan was searched against)."""
+    from repro.plan import Plan
+
+    plan = Plan.load(path)
+    spec = get_preset(cluster) if cluster else None
+    result = {
+        "plan": path,
+        "fingerprint": plan.fingerprint(),
+        "describe": plan.describe(),
+        "provenance": plan.provenance,
+        "pricing": plan.price(cluster=spec, streams=streams),
+    }
+    if verbose:
+        p = result["pricing"]
+        print(f"  plan {path} [{result['fingerprint']}]: "
+              f"{p['buckets']} buckets, "
+              f"{p['total_grad_bytes']:.3e} B on {p['cluster']['name']} "
+              f"(fingerprint match: {p['cluster_fingerprint_match']})")
+        print(f"    serialized comm {p['serialized_comm_s']*1e3:.3f} ms, "
+              f"{p['streams']}-stream engine finish "
+              f"{p['engine_finish_s']*1e3:.3f} ms, searched prediction "
+              f"{(plan.predicted_iteration_time or 0.0)*1e3:.3f} ms")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = os.path.splitext(os.path.basename(path))[0]
+        out_path = os.path.join(out_dir, f"plan__{tag}.json")
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        if verbose:
+            print(f"    wrote {out_path}")
+    return result
+
+
 # -------------------------------------------------------------------- main
 def dryrun_one(arch: str, shape: str, multi_pod: bool,
                verbose: bool = True, cluster: str | None = None,
@@ -455,15 +503,28 @@ def main():
                     help="cluster preset to price collectives on; "
                          "default: derived from the mesh via "
                          "cluster_from_mesh")
-    ap.add_argument("--streams", type=int, default=1,
+    ap.add_argument("--streams", type=int, default=None,
                     help="price the AllReduce set under N concurrent event-"
-                         "engine streams next to the serialized channel")
+                         "engine streams next to the serialized channel "
+                         "(with --plan: overrides the artifact's recorded "
+                         "width, including an explicit 1 for serialized "
+                         "pricing; default: the recorded width)")
     ap.add_argument("--timeline", action="store_true",
                     help="print (and embed) the contended comm schedule as "
                          "(kind, bucket, chunk, traffic_class, algo, level, "
                          "start, end) records (needs --streams > 1)")
+    ap.add_argument("--plan", default=None, metavar="FILE",
+                    help="price a saved repro.plan artifact instead of "
+                         "compiling archs (no re-trace, no re-search); "
+                         "--cluster overrides the recorded topology, "
+                         "--streams the engine width")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+
+    if args.plan:
+        price_plan(args.plan, cluster=args.cluster, streams=args.streams,
+                   out_dir=args.out)
+        return
 
     archs = ARCHS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
@@ -477,7 +538,7 @@ def main():
                 path = os.path.join(args.out, tag + ".json")
                 try:
                     res = dryrun_one(arch, shape, mp, cluster=args.cluster,
-                                     streams=args.streams,
+                                     streams=args.streams or 1,
                                      keep_timeline=args.timeline)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()

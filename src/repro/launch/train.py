@@ -22,10 +22,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import plan as RP
 from ..checkpoint import restore_checkpoint, save_checkpoint
 from ..configs import get_config
-from ..core import Simulator, backtracking_search, profile_graph, \
-    trace_grad_graph
+from ..core import profile_graph, trace_grad_graph
 from ..data.pipeline import SyntheticLMDataset, materialize_batch
 from ..distributed.train_step import (GradSyncStrategy, build_train_step,
                                       jit_train_step)
@@ -36,22 +36,17 @@ from .mesh import make_debug_mesh
 
 def search_strategy(cfg, params, batch, n_devices: int,
                     unchanged_limit: int = 80, seed: int = 0, cluster=None):
-    """Trace the step, run the DisCo search, lift the bucket partition.
-    ``cluster`` (a preset name or ClusterSpec) prices collectives on that
-    topology; default is the legacy flat model."""
+    """Trace the step on the *actual* training batch and run the DisCo
+    search through the ``repro.plan.compile`` facade.  ``cluster`` (a
+    preset name or ClusterSpec) prices collectives on that topology;
+    default is the legacy flat model.  Returns (strategy, Plan)."""
     def loss(p, bt):
         return ST.loss_fn(p, cfg, bt)
 
-    if isinstance(cluster, str):
-        from ..cluster import get_preset
-
-        cluster = get_preset(cluster)
     g = profile_graph(trace_grad_graph(loss, params, batch))
-    sim = Simulator(n_devices=n_devices, cluster=cluster)
-    res = backtracking_search(g, sim, unchanged_limit=unchanged_limit,
-                              seed=seed)
-    strat = GradSyncStrategy.from_fusion_graph(res.best, params)
-    return strat, res
+    plan = RP.compile(graph=g, cluster=cluster, n_devices=n_devices,
+                      unchanged_limit=unchanged_limit, seed=seed)
+    return plan.grad_sync(params), plan
 
 
 def main():
@@ -66,7 +61,9 @@ def main():
     ap.add_argument("--strategy", default="auto",
                     choices=["auto", "per-tensor", "ddp", "single-bucket"],
                     help="auto = DisCo backtracking search")
-    ap.add_argument("--strategy-file", default=None)
+    ap.add_argument("--strategy-file", default=None,
+                    help="enact a saved repro.plan artifact (or a legacy "
+                         "strategy.json) instead of searching")
     from ..cluster import list_presets
 
     ap.add_argument("--cluster", default=None, choices=list_presets(),
@@ -98,15 +95,18 @@ def main():
     example = materialize_batch(cfg, args.batch, args.seq, seed=args.seed)
 
     if args.strategy_file:
-        strat = GradSyncStrategy.load(args.strategy_file)
+        # Plan.load reads both repro.plan artifacts and legacy
+        # strategy.json files (migration shim)
+        strat = RP.Plan.load(args.strategy_file).grad_sync(params)
         print(f"loaded strategy: {len(strat.buckets)} buckets")
     elif args.strategy == "auto":
         t0 = time.time()
-        strat, res = search_strategy(cfg, params, example, n_devices=dp,
-                                     cluster=args.cluster)
-        print(f"DisCo search: {res.initial_cost * 1e6:.1f} -> "
-              f"{res.best_cost * 1e6:.1f} us simulated "
-              f"({res.simulations} sims, {time.time() - t0:.1f}s); "
+        strat, plan = search_strategy(cfg, params, example, n_devices=dp,
+                                      cluster=args.cluster)
+        prov = plan.provenance
+        print(f"DisCo search: {prov['initial_cost'] * 1e6:.1f} -> "
+              f"{prov['best_cost'] * 1e6:.1f} us simulated "
+              f"({prov['simulations']} sims, {time.time() - t0:.1f}s); "
               f"{len(strat.buckets)} AllReduce buckets")
     elif args.strategy == "ddp":
         strat = GradSyncStrategy.size_capped(params)

@@ -1,0 +1,32 @@
+"""``repro.plan`` — the public API layer: search once, carry the result.
+
+:class:`Plan` is a frozen, versioned, serializable record of one searched
+strategy (op-fusion groups, tensor-fusion buckets, per-bucket
+``(algo, comm kind, chunks)``, stream count, cluster fingerprint, estimator
+provenance, predicted iteration time); :func:`compile` is the facade that
+produces one (trace -> profile -> search).  From a plan:
+
+* ``plan.grad_sync(params)`` lowers to an enactable ``GradSyncStrategy``
+  (buckets, comm kinds *and* chunk counts);
+* ``plan.simulator()`` reconstructs the exact pricing configuration;
+* ``plan.to_graph(base)`` re-applies the strategy onto a traced graph
+  (equal ``fast_signature()`` and simulated cost);
+* ``plan.price()`` prices the saved gradient traffic without re-tracing
+  (``python -m repro.launch.dryrun --plan <file>``);
+* ``plan.save(path)`` / ``Plan.load(path)`` round-trip JSON, with a
+  migration shim for legacy v0 ``strategy.json`` files and
+  :class:`PlanError` on corruption / foreign versions / cluster
+  mismatches.
+
+See DESIGN.md Sec. 10.  jax-free except ``compile()``'s tracing mode.
+"""
+from .artifact import (ClusterMismatchError, PLAN_VERSION, Plan, PlanError,
+                       PlanVersionError, SCHEMA, cluster_fingerprint,
+                       estimator_name)
+from .facade import compile, compile_plan, trace_model_graph
+
+__all__ = [
+    "ClusterMismatchError", "PLAN_VERSION", "Plan", "PlanError",
+    "PlanVersionError", "SCHEMA", "cluster_fingerprint", "estimator_name",
+    "compile", "compile_plan", "trace_model_graph",
+]

@@ -1,0 +1,131 @@
+"""``repro.plan.compile`` — the one entry point for search -> Plan.
+
+Owns the trace -> profile -> search pipeline that ``examples/``,
+``benchmarks/`` and ``launch/`` used to re-plumb by hand: build (or accept)
+a profiled :class:`FusionGraph`, construct the pricing
+:class:`~repro.core.simulator.Simulator` from ``(cluster, streams,
+background, workers)``, run the backtracking search, and freeze the winner
+into a :class:`~repro.plan.artifact.Plan` (DESIGN.md Sec. 10).
+
+Two modes:
+
+* ``compile("qwen2-0.5b", cluster="a100_nvlink_ib", streams=4)`` — trace a
+  config's training step (lazy jax import) and search it.
+* ``compile(graph=g0, cluster=spec, ...)`` — search a pre-traced graph
+  (benchmark sweeps reuse one cached trace across many presets).  The
+  facade adds no search work of its own: its overhead over a direct
+  ``backtracking_search`` call is plan construction, gated < 5% by
+  ``benchmarks/perf_search.py --smoke``.
+
+The search provenance (steps, simulations, wall times, initial cost) rides
+along in ``plan.provenance``.
+"""
+from __future__ import annotations
+
+import time as _time
+
+from ..cluster import ClusterSpec, get_preset
+from ..core.hw import TPU_V5E, Hardware
+from ..core.search import backtracking_search
+from ..core.simulator import Simulator
+from .artifact import Plan
+
+
+def trace_model_graph(cfg, *, batch: int = 8, seq: int = 64,
+                      model: str = "stacked", reduced: bool = True,
+                      n_layers: int | None = None, hw: Hardware = TPU_V5E,
+                      seed: int = 0):
+    """Trace + profile one training step of a model config (the Search
+    Phase's input).  ``model="stacked"`` is the production scanned-layer
+    implementation; ``model="layers"`` the unstacked per-layer loop whose
+    traced DAG exposes the full backward structure (benchmark suite —
+    see DESIGN.md Sec. 5).  Imports jax lazily: plan/artifact consumers
+    stay jax-free."""
+    import dataclasses as _dc
+
+    import jax
+
+    from ..configs import get_config
+    from ..core import profile_graph, trace_grad_graph
+    from ..data.pipeline import materialize_batch
+
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    if reduced:
+        cfg = cfg.reduced()
+    if model == "stacked":
+        from ..models import stacked as MM
+    elif model == "layers":
+        from ..models import model as MM
+
+        if n_layers is not None and cfg.recurrent is None:
+            cfg = _dc.replace(cfg, n_layers=n_layers)
+    else:
+        raise ValueError(f"unknown model variant {model!r} "
+                         f"(expected 'stacked' or 'layers')")
+    params = MM.init_params(jax.random.PRNGKey(seed), cfg)
+    data = materialize_batch(cfg, batch, seq, seed=seed)
+    g = trace_grad_graph(lambda p, bt: MM.loss_fn(p, cfg, bt), params, data)
+    return profile_graph(g, hw)
+
+
+def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
+                 background=(), workers: int | None = None,
+                 graph=None, estimator=None, hw: Hardware = TPU_V5E,
+                 n_devices: int = 256,
+                 batch: int = 8, seq: int = 64, model: str = "stacked",
+                 reduced: bool = True, n_layers: int | None = None,
+                 alpha: float = 1.05, beta: int = 10,
+                 unchanged_limit: int = 200, max_steps: int | None = None,
+                 methods=None, seed: int = 0) -> Plan:
+    """Search once, return the strategy as a first-class artifact.
+
+    ``cfg`` is a config name / ModelConfig (traced via
+    :func:`trace_model_graph`) — or pass ``graph=`` to search a pre-traced
+    profiled FusionGraph directly.  ``cluster`` is a preset name or
+    :class:`ClusterSpec` (default: the legacy flat ``(hw, n_devices)``
+    model).  ``streams`` / ``background`` pick the event-engine pricing,
+    ``workers`` the candidate-evaluation pool; the remaining knobs are the
+    search hyper-parameters of ``backtracking_search``.
+    """
+    t_start = _time.perf_counter()
+    if isinstance(cluster, str):
+        cluster = get_preset(cluster)
+    if cluster is not None and not isinstance(cluster, ClusterSpec):
+        raise TypeError(f"cluster must be a preset name or ClusterSpec, "
+                        f"got {type(cluster).__name__}")
+    arch = cfg if isinstance(cfg, str) else getattr(cfg, "name", None)
+    if graph is None:
+        if cfg is None:
+            raise ValueError("compile() needs a config (cfg=) or a "
+                             "pre-traced graph (graph=)")
+        graph = trace_model_graph(cfg, batch=batch, seq=seq, model=model,
+                                  reduced=reduced, n_layers=n_layers,
+                                  hw=hw, seed=seed)
+    sim = Simulator(estimator=estimator, hw=hw, n_devices=n_devices,
+                    cluster=cluster, streams=streams,
+                    background=tuple(background))
+    kw = {} if methods is None else {"methods": tuple(methods)}
+    res = backtracking_search(
+        graph, sim, alpha=alpha, beta=beta,
+        unchanged_limit=unchanged_limit, max_steps=max_steps, seed=seed,
+        workers=workers, **kw)
+    plan = Plan.from_graph(
+        res.best, sim=sim, predicted=res.best_cost,
+        provenance={
+            "arch": arch,
+            "grad_tensors": len(graph.grad_prim),
+            "initial_cost": res.initial_cost,
+            "best_cost": res.best_cost,
+            "steps": res.steps,
+            "simulations": res.simulations,
+            "search_wall_time": res.wall_time,
+            "seed": seed,
+        })
+    plan.provenance["facade_wall_time"] = _time.perf_counter() - t_start
+    return plan
+
+
+# ``repro.plan.compile(...)`` is the public spelling; the module-level name
+# only shadows the builtin at the attribute level, never in this file.
+compile = compile_plan

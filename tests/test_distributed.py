@@ -182,6 +182,63 @@ print("RS_AG_OK")
 
 
 @pytest.mark.slow
+def test_chunked_bucket_enactment():
+    """A bucket with ``chunks=k`` enacts as k per-chunk collectives in the
+    compiled HLO — the collective count scales exactly with the chunk
+    count — while the loss and grad norm stay bit-identical (each
+    element's reduction is unchanged, only the op it rides in shrinks).
+    Covers both the fused-AllReduce and ZeRO-3 RS+AG lowering paths."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh_compat
+from repro.configs import get_config
+from repro.models import stacked as ST
+from repro.distributed.train_step import (GradSyncStrategy, build_train_step,
+                                          jit_train_step)
+from repro.launch.dryrun import parse_collectives
+from repro.optim import adamw
+from repro.data.pipeline import materialize_batch
+
+cfg = get_config("tinyllama-1.1b").reduced()
+key = jax.random.PRNGKey(0)
+params = ST.init_params(key, cfg)
+init, _ = adamw(1e-3)
+opt = init(jax.tree.map(lambda p: p.astype(jnp.float32), params))
+batch = materialize_batch(cfg, 8, 32, seed=0)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
+specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+base = GradSyncStrategy.size_capped(params, 1 << 14)
+B = len(base.buckets)
+res = {}
+for kind, k in (("ar", 1), ("ar", 4), ("rs_ag", 2)):
+    strat = GradSyncStrategy(base.buckets, comms=[kind] * B,
+                             chunks=[k] * B)
+    step = build_train_step(cfg, mesh, mode="ddp_tp", strategy=strat,
+                            lr=1e-3, layout="dp")
+    jf = jit_train_step(step, cfg, mesh, params, opt, specs, layout="dp")
+    coll = parse_collectives(jf.lower(params, opt, specs).compile().as_text())
+    p_in = jax.tree.map(jnp.array, params)
+    o_in = jax.tree.map(jnp.array, opt)
+    _, _, m = jf(p_in, o_in, batch)
+    res[(kind, k)] = (float(m["loss"]), float(m["grad_norm"]),
+                      {op: d["count"] for op, d in coll["per_op"].items()})
+print(res)
+# the collective count scales exactly with the chunk count ...
+ar1, ar4 = res[("ar", 1)][2], res[("ar", 4)][2]
+assert ar4["all-reduce"] - ar1["all-reduce"] == 3 * B, (ar1, ar4, B)
+rs2 = res[("rs_ag", 2)][2]
+assert rs2["reduce-scatter"] == 2 * B and rs2["all-gather"] == 2 * B, rs2
+# ... the psum path is bit-identical chunked vs whole, and the chunked
+# RS+AG split matches to collective-reassociation tolerance
+assert res[("ar", 4)][:2] == res[("ar", 1)][:2], res
+np.testing.assert_allclose(res[("rs_ag", 2)][:2], res[("ar", 1)][:2],
+                           rtol=1e-4)
+print("CHUNKED_OK")
+""")
+    assert "CHUNKED_OK" in out
+
+
+@pytest.mark.slow
 def test_vocab_parallel_matches_dense():
     out = run_sub("""
 import jax, jax.numpy as jnp, numpy as np
@@ -258,17 +315,19 @@ def test_strategy_save_load(tmp_path):
     from repro.distributed.train_step import GradSyncStrategy
 
     s = GradSyncStrategy([[0, 1], [2], [3, 4, 5]], barriers=True,
-                         comms=["ar", "rs_ag", "ar"])
+                         comms=["ar", "rs_ag", "ar"], chunks=[1, 2, 4])
     p = str(tmp_path / "s.json")
     s.save(p)
     s2 = GradSyncStrategy.load(p)
     assert s2.buckets == s.buckets and s2.barriers is True
     assert s2.comms == s.comms and s2.comm_kind(1) == "rs_ag"
-    # legacy strategy files (no comms) default every bucket to AllReduce
+    assert s2.chunks == s.chunks and s2.chunk_count(2) == 4
+    # legacy strategy files (no comms/chunks) default to one fused AllReduce
     s3 = GradSyncStrategy([[0]])
     p3 = str(tmp_path / "legacy.json")
     s3.save(p3)
-    assert GradSyncStrategy.load(p3).comm_kind(0) == "ar"
+    loaded = GradSyncStrategy.load(p3)
+    assert loaded.comm_kind(0) == "ar" and loaded.chunk_count(0) == 1
 
 
 def test_strategy_from_fusion_graph():
@@ -286,12 +345,14 @@ def test_strategy_from_fusion_graph():
     while g.merge_buckets(0, 1):
         pass
     g.set_bucket_comm(0, "rs_ag")
+    g.set_bucket_chunks(0, 4)
     strat = GradSyncStrategy.from_fusion_graph(g, params)
     flat = sorted(i for b in strat.buckets for i in b)
     assert flat == [0, 1, 2]
     assert len(strat.buckets) == 1
-    # the searched comm kind rides along into the enactment strategy
+    # the searched comm kind and chunk count ride along into enactment
     assert strat.comms == ["rs_ag"]
+    assert strat.chunks == [4]
 
 
 @pytest.mark.slow

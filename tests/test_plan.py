@@ -1,0 +1,328 @@
+"""Plan artifact + compile() facade + mutation-registry property tests
+(DESIGN.md Sec. 10):
+
+* graph <-> plan <-> JSON round-trips are lossless: equal plans, equal
+  ``fast_signature()``, equal simulated cost;
+* legacy v0 ``strategy.json`` loads through the migration shim; corrupted
+  and foreign-version files raise :class:`PlanError`;
+* ``plan.simulator()`` reconstructs the exact pricing configuration and
+  refuses mismatched clusters;
+* the declarative mutation registry reproduces the search's historical
+  per-simulator drop rules, and the ``compile()`` facade is
+  trajectory-identical to a direct ``backtracking_search``.
+"""
+import json
+import random
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import ClusterSpec, get_preset
+from repro.core import (ALL_METHODS, FusionGraph, MUTATIONS, PrimOp,
+                        Simulator, active_methods, backtracking_search,
+                        profile_graph, random_apply)
+from repro.core.events import BackgroundTraffic
+from repro.core.graph import EW
+from repro.core.hw import TPU_V5E, Hardware
+from repro.core.search import (METHOD_ALGO, METHOD_CHUNK, METHOD_COMM,
+                               METHOD_DUP, METHOD_NONDUP, METHOD_TENSOR)
+from repro.plan import (ClusterMismatchError, Plan, PlanError,
+                        PlanVersionError, cluster_fingerprint, compile_plan)
+
+SPEC = get_preset("a100_nvlink_ib")
+
+
+def chain_graph(n=16, grads=(3, 6, 9, 12), grad_bytes=float(1 << 20)):
+    prims = []
+    for i in range(n):
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW, flops=100.0, in_bytes=64.0,
+            out_bytes=64.0, time=1e-6,
+            grad_param=list(grads).index(i) if i in grads else -1,
+            grad_bytes=grad_bytes if i in grads else 0.0,
+            grad_sig="f32" if i in grads else ""))
+    return profile_graph(FusionGraph(prims, [(i, i + 1) for i in range(n - 1)]))
+
+
+def mutated(base, seed, n_mut):
+    rng = random.Random(seed)
+    g = base.clone()
+    for _ in range(n_mut):
+        random_apply(g, rng.choice(ALL_METHODS), 1, rng)
+    return g
+
+
+# ------------------------------------------------------------- round trips
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), n_mut=st.integers(0, 16))
+def test_plan_graph_roundtrip_lossless(seed, n_mut):
+    base = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=4)
+    g = mutated(base, seed, n_mut)
+    p = Plan.from_graph(g, sim=sim)
+    g2 = p.to_graph(base)
+    assert g2.fast_signature() == g.fast_signature()
+    assert sim.cost(g2) == sim.cost(g) == p.predicted_iteration_time
+    assert Plan.from_graph(g2, sim=sim) == p
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n_mut=st.integers(0, 16))
+def test_plan_json_roundtrip_preserves_identity(seed, n_mut):
+    import os
+    import tempfile
+
+    base = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=2,
+                    background=(BackgroundTraffic("tp", 1 << 16, 1e-4),))
+    g = mutated(base, seed, n_mut)
+    p = Plan.from_graph(g, sim=sim, provenance={"seed": seed})
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.json")
+        p.save(path)
+        loaded = Plan.load(path)
+    assert loaded == p
+    assert loaded.fingerprint() == p.fingerprint()
+    # the reconstructed pricing configuration reproduces the cost exactly
+    sim2 = loaded.simulator()
+    assert sim2.streams == 2 and sim2.background == sim.background
+    assert sim2.cost(loaded.to_graph(base)) == p.predicted_iteration_time
+
+
+def test_plan_to_graph_rejects_wrong_trace():
+    base = chain_graph()
+    p = Plan.from_graph(mutated(base, 1, 8), sim=Simulator(cluster=SPEC))
+    with pytest.raises(PlanError):
+        p.to_graph(chain_graph(n=20, grads=(3, 7)))
+
+
+# ------------------------------------------------------- file format guards
+def test_legacy_v0_strategy_migration(tmp_path):
+    legacy = {"buckets": [[0, 1], [2], [3]], "barriers": True,
+              "comms": ["ar", "rs_ag", "ar"]}
+    path = str(tmp_path / "strategy.json")
+    json.dump(legacy, open(path, "w"))
+    p = Plan.load(path)
+    assert p.buckets == ((0, 1), (2,), (3,))
+    assert p.bucket_comm == ("ar", "rs_ag", "ar")
+    assert p.barriers is True
+    assert p.provenance["migrated_from"] == "v0 strategy.json"
+    strat = p.grad_sync()
+    assert strat.buckets == [[0, 1], [2], [3]]
+    assert strat.comms == ["ar", "rs_ag", "ar"]
+    assert strat.barriers is True
+    # bucket-only artifact: it enacts, but cannot be re-priced
+    with pytest.raises(PlanError):
+        p.price(cluster=SPEC)
+    # ... and re-applies its buckets onto a compatible base graph
+    g = p.to_graph(chain_graph(grads=(1, 2, 5, 7)))
+    assert [tuple(b) for b in g.buckets] == [(0, 1), (2,), (3,)]
+
+
+def test_corrupt_and_foreign_files_raise(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(PlanError):
+        Plan.load(str(bad))
+    foreign = tmp_path / "foreign.json"
+    json.dump({"schema": "somebody.else", "version": 1},
+              open(foreign, "w"))
+    with pytest.raises(PlanVersionError):
+        Plan.load(str(foreign))
+    p = Plan.from_graph(chain_graph(), sim=Simulator(cluster=SPEC))
+    d = p._to_json()
+    d["version"] = 99
+    future = tmp_path / "future.json"
+    json.dump(d, open(future, "w"))
+    with pytest.raises(PlanVersionError):
+        Plan.load(str(future))
+    mangled = p._to_json()
+    del mangled["provider"]
+    broken = tmp_path / "broken.json"
+    json.dump(mangled, open(broken, "w"))
+    with pytest.raises(PlanError):
+        Plan.load(str(broken))
+    # truncated per-bucket vectors must fail at load, not silently drop
+    # strategy at enactment
+    for field in ("bucket_comm", "bucket_algos", "bucket_chunks",
+                  "bucket_bytes"):
+        trunc = p._to_json()
+        trunc[field] = trunc[field][:-1]
+        path = tmp_path / f"trunc_{field}.json"
+        json.dump(trunc, open(path, "w"))
+        with pytest.raises(PlanError):
+            Plan.load(str(path))
+    legacy_short = tmp_path / "legacy_short.json"
+    json.dump({"buckets": [[0], [1], [2]], "chunks": [1]},
+              open(legacy_short, "w"))
+    with pytest.raises(PlanError):
+        Plan.load(str(legacy_short))
+
+
+def test_simulator_restores_custom_hardware():
+    # the oracle's fused-op times depend on the Hardware, not just the
+    # cluster — a plan searched under a non-default hw must re-price
+    # identically after a save/load round trip
+    import os
+    import tempfile
+
+    hw = Hardware(name="slow-chip", peak_flops=10e12, hbm_bw=100e9)
+    base = chain_graph()
+    for sim in (Simulator(hw=hw, n_devices=32),
+                Simulator(hw=hw, cluster=SPEC, streams=4)):
+        g = mutated(base, 13, 10)
+        p = Plan.from_graph(g, sim=sim)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "p.json")
+            p.save(path)
+            loaded = Plan.load(path)
+        sim2 = loaded.simulator()
+        assert sim2.hw == hw
+        assert sim2.cost(loaded.to_graph(base)) \
+            == p.predicted_iteration_time
+
+
+def test_strategy_fingerprint_ignores_pricing_context():
+    g = mutated(chain_graph(), 9, 10)
+    p_a = Plan.from_graph(g, sim=Simulator(cluster=SPEC, streams=4))
+    p_b = Plan.from_graph(g, sim=Simulator(
+        cluster=get_preset("h100_superpod"), streams=2))
+    # same searched strategy -> same strategy fingerprint, even though the
+    # full artifact identity (pricing context included) differs
+    assert p_a.strategy_fingerprint() == p_b.strategy_fingerprint()
+    assert p_a.fingerprint() != p_b.fingerprint()
+    g2 = g.clone()
+    g2.set_bucket_algo(0, "tree" if g.bucket_algos[0] != "tree" else "hier")
+    p_c = Plan.from_graph(g2, sim=Simulator(cluster=SPEC, streams=4))
+    assert p_c.strategy_fingerprint() != p_a.strategy_fingerprint()
+
+
+def test_cluster_fingerprint_mismatch():
+    p = Plan.from_graph(chain_graph(), sim=Simulator(cluster=SPEC))
+    assert p.simulator(cluster=SPEC).cluster is SPEC
+    with pytest.raises(ClusterMismatchError):
+        p.simulator(cluster=get_preset("h100_superpod"))
+    # flat back-compat specs fingerprint through the legacy Hardware
+    flat = Simulator(hw=TPU_V5E, n_devices=64)
+    pf = Plan.from_graph(chain_graph(), sim=flat)
+    spec2 = pf.simulator().cluster
+    assert spec2.is_flat_compat and spec2.n_devices == 64
+    assert cluster_fingerprint(spec2) == pf.cluster
+    other_hw = ClusterSpec.flat(Hardware(name="other", ici_bw=1e9), 64)
+    with pytest.raises(ClusterMismatchError):
+        pf.simulator(cluster=other_hw)
+
+
+# --------------------------------------------------------- mutation registry
+def test_registry_covers_all_methods():
+    assert set(ALL_METHODS) <= set(MUTATIONS)
+    for name in ALL_METHODS:
+        m = MUTATIONS[name]
+        assert m.name == name and callable(m.apply) \
+            and callable(m.applicable)
+    with pytest.raises(ValueError):
+        random_apply(chain_graph(), "no-such-method", 1, random.Random(0))
+
+
+def test_registered_mutation_is_searched_by_default():
+    # the registry contract: a new dimension registers once and the
+    # default (methods=None) search picks it up
+    from repro.core.mutations import Mutation, register_mutation
+
+    calls = []
+
+    def apply(g, rng):
+        calls.append(1)
+        return False
+
+    name = "test-extra-dim"
+    register_mutation(Mutation(name, apply))
+    try:
+        sim = Simulator(cluster=SPEC, streams=4)
+        assert name in active_methods(sim)
+        backtracking_search(chain_graph(), sim, unchanged_limit=5,
+                            max_steps=5, seed=0)
+        assert calls, "registered mutation was never drawn by the search"
+        with pytest.raises(ValueError):
+            register_mutation(Mutation(name, apply))  # duplicate name
+    finally:
+        del MUTATIONS[name]
+
+
+def test_applicability_reproduces_drop_rules():
+    flat = Simulator(n_devices=64)                      # flat back-compat
+    ser = Simulator(cluster=SPEC, streams=1)            # serialized channel
+    multi = Simulator(cluster=SPEC, streams=4)          # event engine
+
+    class NoCluster:                                    # custom cost stub
+        pass
+
+    assert active_methods(flat, ALL_METHODS) == (
+        METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR)
+    assert active_methods(NoCluster(), ALL_METHODS) == (
+        METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR)
+    assert active_methods(ser, ALL_METHODS) == (
+        METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO)
+    assert active_methods(multi, ALL_METHODS) == ALL_METHODS
+    # explicit method subsets keep their order and still get filtered
+    assert active_methods(ser, (METHOD_CHUNK, METHOD_TENSOR,
+                                METHOD_COMM)) == (METHOD_TENSOR,)
+
+
+# ------------------------------------------------------------------- facade
+@pytest.mark.parametrize("streams", [1, 4])
+def test_compile_facade_is_trajectory_identical(streams):
+    g0 = chain_graph()
+    plan = compile_plan(graph=g0, cluster=SPEC, streams=streams,
+                        unchanged_limit=30, max_steps=25, seed=3)
+    res = backtracking_search(g0, Simulator(cluster=SPEC, streams=streams),
+                              unchanged_limit=30, max_steps=25, seed=3)
+    assert plan.predicted_iteration_time == res.best_cost
+    assert plan.provenance["simulations"] == res.simulations
+    assert plan == Plan.from_graph(
+        res.best, sim=Simulator(cluster=SPEC, streams=streams))
+    # the artifact lowers the complete searched comm configuration
+    strat = plan.grad_sync()
+    assert strat.buckets == [list(b) for b in plan.buckets]
+    assert strat.comms == list(plan.bucket_comm)
+    assert strat.chunks == [int(k) for k in plan.bucket_chunks]
+
+
+def test_compile_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        compile_plan()          # neither cfg nor graph
+    with pytest.raises(KeyError):
+        compile_plan(graph=chain_graph(), cluster="no_such_preset")
+    with pytest.raises(TypeError):
+        compile_plan(graph=chain_graph(), cluster=123)
+
+
+def test_plan_price_matches_serialized_sum():
+    g = mutated(chain_graph(), 7, 10)
+    sim = Simulator(cluster=SPEC, streams=1)
+    p = Plan.from_graph(g, sim=sim)
+    from repro.core.costs import total_comm_time
+
+    priced = p.price()
+    assert priced["serialized_comm_s"] == pytest.approx(
+        total_comm_time(g, cluster=SPEC))
+    assert priced["cluster_fingerprint_match"] is True
+    override = p.price(cluster=get_preset("h100_superpod"))
+    assert override["cluster_fingerprint_match"] is False
+
+
+def test_plan_price_background_and_stream_override():
+    g = mutated(chain_graph(), 5, 8)
+    bg = BackgroundTraffic("tp", float(1 << 22), 5e-5)
+    sim = Simulator(cluster=SPEC, streams=4, background=(bg,))
+    p = Plan.from_graph(g, sim=sim)
+    priced = p.price()
+    # recorded TP traffic contends with the gradient set, like the sim
+    assert "contention" in priced
+    assert priced["contention"]["slowdown"] >= 1.0
+    assert priced["engine_finish_s"] \
+        >= priced["contention"]["grad_finish_alone_s"]
+    # an explicit streams=1 forces serialized pricing (no background:
+    # the simulator's serialized channel ignores it too)
+    ser = p.price(streams=1)
+    assert ser["streams"] == 1 and "contention" not in ser
