@@ -1,0 +1,193 @@
+"""Fig. F (ours): pipeline-aware joint search vs blind background-traffic
+modeling across the cluster preset zoo (DESIGN.md Sec. 11).
+
+PR 4 modeled pipeline-parallel stage-boundary transfers as *periodic
+background noise*: recurring ``pp``-class p2p jobs with no dependency
+structure.  The unified engine lowers a real 1F1B schedule instead —
+stage-boundary transfers are dep-coupled to the fwd/bwd units that produce
+and consume them, and gradient buckets wait for the *last backward* of
+their provider stages.  That changes when link levels are busy, so a
+search pricing against the blind model can pick a different (worse)
+strategy than one pricing against the schedule it will actually run under.
+
+For each preset, two budget-matched backtracking searches over the same
+comm-bound traced graph (small batch/seq, model-sized gradients):
+
+* ``searched_bg``  — 4-stream engine + periodic pp background jobs,
+* ``searched_pp``  — 4-stream engine + the 1F1B lowering
+  (``pipeline=PipelineSchedule(S, M)``),
+
+both fed the *same* per-boundary p2p volume (the simulator's activation
+estimate), so only the contention *structure* differs.  Headline: on how
+many presets the two searches pick different strategies
+(``strategy_fingerprint``), and the regret of enacting the blind-model
+strategy under the schedule it would actually run on.
+
+    PYTHONPATH=src python benchmarks/fig_pp_sweep.py [--quick] [--smoke]
+
+``--smoke`` is the CI lane: three presets, a reduced search budget, and a
+hard failure (exit 1) when the pipeline pricing goes insane (bubble
+fraction outside (0, 1), non-positive iteration) or the two models stop
+disagreeing on every smoke preset.  Full runs write
+``experiments/perf/pp_sweep.json`` and print a CSV block.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import arch_graph, csv_row
+from repro.cluster import PRESETS
+from repro.core import BackgroundTraffic, PipelineSchedule, Simulator
+from repro.plan import compile_plan
+
+OUT = "experiments/perf"
+
+STREAMS = 4
+STAGES = 4
+MICROBATCHES = 8
+SMOKE_PRESETS = ("a100_nvlink_ib", "cross_dc_2pod", "tpu_v5e_pod_256")
+
+
+def pp_models(g0, spec):
+    """The two pricing models under comparison, fed the same p2p volume:
+    the blind periodic-background job set and the dep-coupled 1F1B
+    lowering.  The volume comes from the simulator's own activation
+    estimate (mean stage-cut out_bytes per microbatch) so the models
+    differ only in contention structure."""
+    sched = PipelineSchedule(n_stages=STAGES, n_microbatches=MICROBATCHES)
+    probe = Simulator(cluster=spec, streams=STREAMS, pipeline=sched)
+    pi = probe.pipeline_inputs(g0)
+    pbytes = pi["p2p_bytes"]
+    # fwd activations + bwd activation-gradients per boundary per microbatch
+    n = 2 * (STAGES - 1) * MICROBATCHES
+    span = sum(pi["stage_busy"])
+    bg = BackgroundTraffic("pp", pbytes, period=span / n if n else 0.0,
+                           kind="p2p", count=n)
+    return sched, bg, pbytes
+
+
+def sweep_one(g0, name: str, spec, *, unchanged_limit: int, max_steps: int,
+              seed: int = 0) -> dict:
+    sched, bg, pbytes = pp_models(g0, spec)
+    plan_bg = compile_plan(graph=g0, cluster=spec, streams=STREAMS,
+                           background=(bg,), unchanged_limit=unchanged_limit,
+                           max_steps=max_steps, seed=seed)
+    plan_pp = compile_plan(graph=g0, cluster=spec, streams=STREAMS,
+                           pipeline=sched, unchanged_limit=unchanged_limit,
+                           max_steps=max_steps, seed=seed)
+    # regret: enact the blind-model strategy under the schedule it would
+    # actually run on, and compare against the pipeline-aware pick
+    sim_pp = Simulator(cluster=spec, streams=STREAMS, pipeline=sched)
+    r_bg_under_pp = sim_pp.run(plan_bg.to_graph(g0))
+    r_pp = sim_pp.run(plan_pp.to_graph(g0))
+    differ = (plan_bg.strategy_fingerprint()
+              != plan_pp.strategy_fingerprint())
+    return {
+        "preset": name,
+        "n_devices": spec.n_devices,
+        "levels": [l.name for l in spec.levels],
+        "p2p_bytes": pbytes,
+        "searched_bg": {
+            "strategy_fingerprint": plan_bg.strategy_fingerprint(),
+            "predicted_s": plan_bg.predicted_iteration_time,
+            "describe": plan_bg.describe(),
+            "under_pp_s": r_bg_under_pp.iteration_time,
+        },
+        "searched_pp": {
+            "strategy_fingerprint": plan_pp.strategy_fingerprint(),
+            "predicted_s": plan_pp.predicted_iteration_time,
+            "describe": plan_pp.describe(),
+            "under_pp_s": r_pp.iteration_time,
+            "bubble_fraction": r_pp.pipeline["bubble"]["fraction"],
+            "p2p_busy_s": r_pp.pipeline["p2p_busy_s"],
+        },
+        "strategies_differ": differ,
+        "bg_regret": (r_bg_under_pp.iteration_time / r_pp.iteration_time
+                      if r_pp.iteration_time > 0 else 1.0),
+    }
+
+
+def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
+        max_steps: int = 80, seed: int = 0, verbose: bool = True,
+        batch: int = 2, seq: int = 32, smoke: bool = False) -> dict:
+    # comm-bound regime: gradient volume is model-sized while compute
+    # shrinks with tokens, so comm-schedule choices dominate the ranking
+    g0 = arch_graph(arch, batch=batch, seq=seq)
+    presets = SMOKE_PRESETS if smoke else tuple(PRESETS)
+    rows = []
+    for name in presets:
+        spec = PRESETS[name]
+        t0 = time.perf_counter()
+        row = sweep_one(g0, name, spec, unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, seed=seed)
+        row["wall_s"] = round(time.perf_counter() - t0, 2)
+        rows.append(row)
+        if verbose:
+            print(csv_row(
+                name, spec.n_devices, row["strategies_differ"],
+                f"{row['searched_bg']['under_pp_s']*1e3:.3f}ms",
+                f"{row['searched_pp']['under_pp_s']*1e3:.3f}ms",
+                f"{row['bg_regret']:.3f}x",
+                f"{row['searched_pp']['bubble_fraction']:.3f}"))
+    diff = [r["preset"] for r in rows if r["strategies_differ"]]
+    out = {
+        "arch": arch,
+        "batch": batch,
+        "seq": seq,
+        "streams": STREAMS,
+        "n_stages": STAGES,
+        "n_microbatches": MICROBATCHES,
+        "unchanged_limit": unchanged_limit,
+        "max_steps": max_steps,
+        "seed": seed,
+        "presets": rows,
+        "strategies_differ_on": diff,
+    }
+    if verbose:
+        print(f"# pipeline-aware search picks a different strategy than "
+              f"the background-traffic model on {len(diff)}/{len(rows)} "
+              f"presets: {diff}")
+    if not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        path = os.path.join(OUT, "pp_sweep.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if verbose:
+            print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: 3 presets at reduced budget; exit 1 "
+                         "when pipeline pricing is insane or the models "
+                         "stop disagreeing on every smoke preset")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+    quick = args.quick or args.smoke
+    out = run(arch=args.arch,
+              unchanged_limit=20 if quick else 40,
+              max_steps=40 if quick else 80,
+              smoke=args.smoke)
+    if args.smoke:
+        bad = []
+        for r in out["presets"]:
+            pp = r["searched_pp"]
+            if not (0.0 < pp["bubble_fraction"] < 1.0):
+                bad.append(f"{r['preset']}: bubble "
+                           f"{pp['bubble_fraction']:.3f}")
+            if not pp["under_pp_s"] > 0.0:
+                bad.append(f"{r['preset']}: non-positive iteration")
+        if not out["strategies_differ_on"]:
+            bad.append("models agree on every smoke preset")
+        if bad:
+            print(f"SMOKE FAIL: {bad}")
+            raise SystemExit(1)

@@ -197,6 +197,11 @@ def main():
                     help="throughput floor for the chunked multi-stream "
                          "smoke config (event-engine comm pass on both "
                          "sides, so the incremental edge is smaller)")
+    ap.add_argument("--smoke-min-speedup-unified", type=float, default=3.0,
+                    help="throughput floor for the serialized hierarchical "
+                         "config: both sides run the unified compute+comm "
+                         "dependency engine end-to-end, so the gate catches "
+                         "unified-engine overhead on the streams=1 path")
     ap.add_argument("--smoke-max-facade-overhead", type=float, default=0.05,
                     help="ceiling on compile() facade overhead relative to "
                          "the direct backtracking_search wall time")
@@ -232,6 +237,19 @@ def main():
                   f"incremental={thr_ms['incremental']['sims_per_sec']} "
                   f"({thr_ms['speedup']}x, bit-identical)", flush=True)
             report[arch]["throughput_chunked_multistream"] = thr_ms
+            # serialized hierarchical config: the full path builds the
+            # unified dependency job graph (compute jobs + dep'd comm
+            # jobs) for every candidate while the delta path replays the
+            # journal suffix — the floor catches unified-engine overhead
+            # regressing either side
+            thr_uni = bench_sim_throughput(
+                arch, args.cands, cluster=get_preset("a100_nvlink_ib"),
+                streams=1)
+            print(f"  sims/sec[unified serialized]: "
+                  f"seed={thr_uni['seed']['sims_per_sec']} "
+                  f"incremental={thr_uni['incremental']['sims_per_sec']} "
+                  f"({thr_uni['speedup']}x, bit-identical)", flush=True)
+            report[arch]["throughput_unified_serialized"] = thr_uni
             # compile() facade on the same graph/budget: the trajectory is
             # identical to bench_search's direct incremental run, so its
             # wall time isolates the facade's own overhead
@@ -280,6 +298,11 @@ def main():
                    if "throughput_chunked_multistream" in r}
         bad.update({f"{a}[chunked]": s for a, s in chunked.items()
                     if s < args.smoke_min_speedup_chunked})
+        unified = {a: r["throughput_unified_serialized"]["speedup"]
+                   for a, r in report.items()
+                   if "throughput_unified_serialized" in r}
+        bad.update({f"{a}[unified]": s for a, s in unified.items()
+                    if s < args.smoke_min_speedup_unified})
         if bad:
             print(f"SMOKE FAIL: incremental/seed throughput below floor: "
                   f"{bad}")
@@ -299,9 +322,11 @@ def main():
                       f"{args.smoke_max_facade_overhead*100:.0f}%")
                 raise SystemExit(1)
         print(f"smoke OK: incremental/seed throughput {speedups}, "
-              f"chunked multi-stream {chunked} "
+              f"chunked multi-stream {chunked}, unified serialized "
+              f"{unified} "
               f"(floors {args.smoke_min_speedup}x / "
-              f"{args.smoke_min_speedup_chunked}x); facade overhead "
+              f"{args.smoke_min_speedup_chunked}x / "
+              f"{args.smoke_min_speedup_unified}x); facade overhead "
               f"{ {a: f['overhead'] for a, f in facades.items()} } "
               f"(ceiling {args.smoke_max_facade_overhead*100:.0f}%)")
 

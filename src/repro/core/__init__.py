@@ -3,8 +3,11 @@ from .hw import Hardware, TPU_V5E, allreduce_time, ring_allreduce_coeffs
 from .costs import (OracleEstimator, group_time_oracle, prim_time,
                     profile_graph, total_comm_time, total_compute_time)
 from .simulator import SimResult, Simulator
-from .events import (BackgroundTraffic, CommEngine, CommJob, DISC_FAIR,
-                     DISC_FIFO, TC_DP, TC_PP, TC_TP, TRAFFIC_CLASSES)
+from .events import (BackgroundTraffic, CommEngine, CommJob, ComputeJob,
+                     DISC_FAIR, DISC_FIFO, EventEngine, TC_COMPUTE, TC_DP,
+                     TC_PP, TC_TP, TRAFFIC_CLASSES, UnifiedResult)
+from .pipeline import (PipelineSchedule, SCHED_1F1B, SCHED_INTERLEAVED,
+                       SCHEDULES)
 from .mutations import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO,
                         METHOD_CHUNK, METHOD_COMM, METHOD_DUP,
                         METHOD_NONDUP, METHOD_TENSOR, MUTATIONS, Mutation,
@@ -20,7 +23,10 @@ __all__ = [
     "OracleEstimator", "group_time_oracle", "prim_time", "profile_graph",
     "total_comm_time", "total_compute_time",
     "SimResult", "Simulator", "BackgroundTraffic", "CommEngine", "CommJob",
-    "DISC_FAIR", "DISC_FIFO", "TC_DP", "TC_PP", "TC_TP", "TRAFFIC_CLASSES",
+    "ComputeJob", "EventEngine", "UnifiedResult",
+    "DISC_FAIR", "DISC_FIFO", "TC_COMPUTE", "TC_DP", "TC_PP", "TC_TP",
+    "TRAFFIC_CLASSES",
+    "PipelineSchedule", "SCHED_1F1B", "SCHED_INTERLEAVED", "SCHEDULES",
     "ALL_METHODS", "CHUNK_CHOICES", "METHOD_ALGO", "METHOD_CHUNK",
     "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
     "MUTATIONS", "Mutation", "active_methods", "register_mutation",

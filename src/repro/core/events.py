@@ -1,12 +1,24 @@
-"""Dependency-aware, phase-level communication event engine (DESIGN.md
-Sec. 8-9).
+"""Dependency-aware event engine over link levels *and* compute streams
+(DESIGN.md Sec. 8-9, 11).
 
 The seed simulator priced communication as one serialized channel: each
 bucket's collective was a single opaque interval, FIFO in readiness order.
 PR 3 replaced that with a phase-level engine — collectives decompose into
 per-link-level phases, concurrent phases on one level share its bandwidth —
-but jobs were still a flat list of independent transfers.  This revision
-makes the engine a general dependency-aware scheduler:
+but jobs were still a flat list of independent transfers, and compute was a
+separate hand-rolled loop inside the simulator.  This revision makes the
+engine a general dependency-aware scheduler over *both* resource kinds:
+
+* **Compute jobs** (:class:`ComputeJob`) occupy a serialized compute
+  stream (``stream{i}``) for ``duration`` seconds; their ``deps`` are the
+  quotient predecessors (or, for pipeline schedules, the previous unit on
+  the stream plus the stage-boundary p2p transfer).  Compute job-ids are
+  negative (``~gid``) so they can never collide with comm job-ids, which
+  stay non-negative.  :meth:`EventEngine.run_unified` schedules a compute
+  job list and a comm job list as one dependency graph and returns a
+  :class:`UnifiedResult`; when no compute job depends on a comm job the
+  two resource kinds decouple and the engine runs the exact seed
+  arithmetic (serialized compute pop-order loop, then the comm pass).
 
 * **Jobs** (:class:`CommJob`) carry ``deps`` — job-ids that must *finish*
   before the job may start — and a ``traffic_class`` (``dp`` gradient
@@ -47,6 +59,7 @@ traffic alone while background traffic keeps contending.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 
 from ..cluster import ClusterSpec
@@ -58,6 +71,10 @@ TC_DP = "dp"    # data-parallel gradient bucket (the searched dimension)
 TC_TP = "tp"    # tensor-parallel activation collective
 TC_PP = "pp"    # pipeline-parallel stage-boundary transfer
 TRAFFIC_CLASSES = (TC_DP, TC_TP, TC_PP)
+# compute jobs carry their own class so per-class tallies separate device
+# occupancy from channel occupancy; deliberately NOT in TRAFFIC_CLASSES,
+# which enumerates the *communication* classes background traffic may use
+TC_COMPUTE = "compute"
 
 # per-level service disciplines
 DISC_FAIR = "fair"
@@ -91,6 +108,78 @@ class CommJob:
     @property
     def jid(self) -> int:
         return self.bucket if self.job_id is None else self.job_id
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeJob:
+    """One fused-op group (or pipeline fwd/bwd unit) on a serialized
+    compute stream.
+
+    ``ref`` is the display identity (the group id, or an encoded
+    microbatch/chunk for pipeline units); ``job_id`` must be negative
+    (``~gid`` by convention) so compute ids and comm ids share one
+    ``deps`` namespace without collisions.  ``key`` orders the serialized
+    ready heap and must be unique across one run's compute jobs (the
+    simulator passes ``(_group_key, gid)`` — min member pid with the
+    seed's ascending-gid tie-break, since duplication-allowed fusion lets
+    min pids collide across groups).  ``deps`` may name both compute and
+    comm job-ids; on a single stream with compute-only deps the engine
+    reduces to the seed's serialized loop bit-exactly."""
+    ref: int
+    duration: float
+    job_id: int
+    stream: int = 0
+    key: tuple | int = 0
+    deps: tuple[int, ...] = ()
+    kind: str = "compute"          # "compute" | "fwd" | "bwd"
+    ready: float = 0.0
+    traffic_class: str = TC_COMPUTE
+
+    @property
+    def jid(self) -> int:
+        return self.job_id
+
+    # CommJob-shaped views so the phased scheduler handles both kinds
+    # uniformly (sort keys, slot accounting, timeline bookkeeping)
+    @property
+    def bucket(self) -> int:
+        return self.ref
+
+    @property
+    def chunk(self) -> int:
+        return 0
+
+    @property
+    def chunks(self) -> int:
+        return 1
+
+    @property
+    def algo(self) -> str:
+        return ""
+
+    @property
+    def after(self) -> None:
+        return None
+
+    @property
+    def nbytes(self) -> float:
+        return self.duration
+
+
+@dataclasses.dataclass
+class UnifiedResult:
+    """One unified schedule's outcome: per-resource-kind busy/finish plus
+    the serialized compute schedule (pop order, cumulative busy, per-ref
+    completion times) that the simulator's delta-resume substrate snapshots
+    into a ``_SimState``."""
+    compute_busy: float
+    compute_finish: float
+    comm_busy: float
+    comm_finish: float
+    finish: float                  # max finish over every job of any kind
+    order: list                    # compute refs in pop order
+    busy_after: list               # cumulative compute busy after each pop
+    done_at: dict                  # compute ref -> completion time
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,32 +255,39 @@ class _Active:
 
 
 def bucket_jobs(bucket: int, ready: float, nbytes: float, algo: str,
-                kind: str, chunks: int,
-                next_id: int) -> tuple[list[CommJob], int]:
+                kind: str, chunks: int, next_id: int,
+                deps: tuple[int, ...] = ()) -> tuple[list[CommJob], int]:
     """The canonical job decomposition of one gradient bucket: a single
     job when ``chunks <= 1``, else ``chunks`` store-and-forward chunk jobs
     (each ``nbytes/chunks``, ``after``-chained, ids allocated from
-    ``next_id``).  Shared by the simulator's comm pass and
+    ``next_id``).  ``deps`` (e.g. the bucket's provider compute jobs) are
+    stamped onto every chunk.  Shared by the simulator's comm pass and
     ``repro.plan.Plan.comm_jobs`` so plan pricing can never drift from
     search pricing.  Returns ``(jobs, next_id)``."""
+    deps = tuple(deps)
     if chunks <= 1:
         return [CommJob(bucket=bucket, ready=ready, nbytes=nbytes,
-                        algo=algo, kind=kind)], next_id
+                        algo=algo, kind=kind, deps=deps)], next_id
     jobs = []
     prev = None
     for c in range(chunks):
         jobs.append(CommJob(bucket=bucket, ready=ready,
                             nbytes=nbytes / chunks, algo=algo, kind=kind,
                             job_id=next_id, after=prev, chunk=c,
-                            chunks=chunks))
+                            chunks=chunks, deps=deps))
         prev = next_id
         next_id += 1
     return jobs, next_id
 
 
-class CommEngine:
-    """Schedules one iteration's communication jobs on the link levels of a
-    :class:`ClusterSpec`; returns ``(busy_seconds, finish_time)``."""
+class EventEngine:
+    """Schedules one iteration's jobs on the link levels of a
+    :class:`ClusterSpec` plus any compute streams the job list names.
+
+    ``run`` is the comm-only entry point (returns ``(busy_seconds,
+    finish_time)``; bit-identical to the PR-3 ``CommEngine``);
+    ``run_unified`` schedules compute and comm jobs as one dependency
+    graph."""
 
     def __init__(self, spec: ClusterSpec, streams: int = 1,
                  record_load: bool = False,
@@ -232,7 +328,12 @@ class CommEngine:
             self._coeffs[key] = cd
         return cd
 
-    def _job_steps(self, job: CommJob) -> list[tuple[str, int, float]]:
+    def _job_steps(self, job) -> list[tuple[str, int, float]]:
+        if isinstance(job, ComputeJob):
+            # one phase on the job's compute stream; stream resources are
+            # indexed past the link levels (see _run_phased's names/disc)
+            return [(job.kind, len(self.spec.levels) + job.stream,
+                     job.duration)]
         key = (job.algo, job.kind, job.chunks)
         ph = self._steps.get(key)
         if ph is None:
@@ -265,6 +366,162 @@ class CommEngine:
         if self.streams == 1:
             return self._run_serialized(jobs, timeline)
         return self._run_phased(jobs, timeline)
+
+    # ---------------------------------------------------------- unified run
+    def run_unified(self, compute: list[ComputeJob], comm: list[CommJob],
+                    timeline: list | None = None, background: tuple = (),
+                    bg_base_id: int = 0) -> UnifiedResult:
+        """Schedule compute and comm jobs as one dependency graph.
+
+        When no compute job depends on a comm job (the default DP training
+        iteration: comm depends on compute, never the reverse) the two
+        resource kinds decouple and the engine runs the exact seed
+        arithmetic: the serialized compute pop-order loop first, then comm
+        job readiness is resolved from the finished compute deps and the
+        comm pass runs as before — bit-identical to the split schedulers.
+        With a cyclic coupling (pipeline schedules: fwd units wait on p2p
+        transfers that wait on upstream fwd units) everything runs in the
+        phased fluid scheduler with compute streams as extra FIFO
+        resources.
+
+        ``background`` traffic is materialized over the compute-finish
+        horizon with job ids from ``bg_base_id``; as in the comm-only path,
+        when background is present the comm busy/finish reported are the
+        DP-class tallies (iteration time gates on gradient sync)."""
+        self.level_load = []
+        self.job_finish = {}
+        self.class_busy = {}
+        self.class_finish = {}
+        comm_ids = {j.jid for j in comm}
+        coupled = any(d in comm_ids
+                      for j in compute for d in j.deps)
+        if coupled:
+            return self._run_coupled(compute, comm, timeline, background,
+                                     bg_base_id)
+        c_busy, c_fin, order, busy_after, done = \
+            self._run_compute_serial(compute, timeline)
+        jobs = []
+        for j in comm:
+            if j.deps:
+                r = j.ready
+                left = []
+                for d in j.deps:
+                    t = self.job_finish.get(d)
+                    if t is None:
+                        if d in comm_ids:
+                            left.append(d)   # comm-on-comm dep: keep it
+                    elif t > r:
+                        r = t
+                if r != j.ready or len(left) != len(j.deps):
+                    j = dataclasses.replace(j, ready=r, deps=tuple(left))
+            jobs.append(j)
+        for tr in background:
+            made = tr.materialize(c_fin, bg_base_id)
+            bg_base_id += len(made)
+            jobs.extend(made)
+        # zero-byte comm jobs transfer nothing: free, deps satisfied at 0
+        for job in jobs:
+            if job.nbytes <= 0.0:
+                self._finish_job(job.jid, job.traffic_class, 0.0)
+        if self.streams == 1:
+            m_busy, m_fin = self._run_serialized(jobs, timeline)
+        else:
+            m_busy, m_fin = self._run_phased(jobs, timeline)
+        if background:
+            m_busy = self.class_busy.get(TC_DP, 0.0)
+            m_fin = self.class_finish.get(TC_DP, 0.0)
+        return UnifiedResult(
+            compute_busy=c_busy, compute_finish=c_fin,
+            comm_busy=m_busy, comm_finish=m_fin,
+            finish=max(self.job_finish.values(), default=0.0),
+            order=order, busy_after=busy_after, done_at=done)
+
+    def _run_compute_serial(self, jobs: list[ComputeJob],
+                            timeline: list | None):
+        """Serialized compute stream(s): a ready heap ordered by ``key``
+        pops jobs whose deps have finished.  On a single stream this is
+        the seed simulator's compute loop bit-exactly: the pop order is
+        independent of durations (``key`` is total), every dep of a popped
+        job finished at or before ``stream_free`` (ends are
+        non-decreasing), so ``start == stream_free`` and the busy sum
+        accumulates in pop order."""
+        by_id = {j.job_id: j for j in jobs}
+        indeg: dict[int, int] = {}
+        succs: dict[int, list[int]] = {}
+        for j in jobs:
+            c = 0
+            for d in j.deps:
+                if d in by_id:
+                    succs.setdefault(d, []).append(j.job_id)
+                    c += 1
+            indeg[j.job_id] = c
+        ready = [(j.key, j.job_id) for j in jobs if indeg[j.job_id] == 0]
+        heapq.heapify(ready)
+        free: dict[int, float] = {}
+        busy = 0.0
+        finish = 0.0
+        order: list[int] = []
+        busy_after: list[float] = []
+        done: dict[int, float] = {}
+        while ready:
+            _, jid = heapq.heappop(ready)
+            j = by_id[jid]
+            start = free.get(j.stream, 0.0)
+            for d in j.deps:     # cross-stream deps (no-op on one stream)
+                t = self.job_finish.get(d)
+                if t is not None and t > start:
+                    start = t
+            end = start + j.duration
+            free[j.stream] = end
+            busy += j.duration
+            done[j.ref] = end
+            order.append(j.ref)
+            busy_after.append(busy)
+            if end > finish:
+                finish = end
+            self._account(j.traffic_class, j.duration)
+            self._finish_job(jid, j.traffic_class, end)
+            if timeline is not None:
+                timeline.append((j.kind, j.ref, start, end, j.traffic_class,
+                                 f"stream{j.stream}", start, end))
+            for d in succs.get(jid, ()):
+                indeg[d] -= 1
+                if indeg[d] == 0:
+                    heapq.heappush(ready, (by_id[d].key, d))
+        if len(order) != len(jobs):
+            raise RuntimeError("cyclic dependency among compute jobs")
+        return busy, finish, order, busy_after, done
+
+    def _run_coupled(self, compute: list[ComputeJob], comm: list[CommJob],
+                     timeline: list | None, background: tuple,
+                     bg_base_id: int) -> UnifiedResult:
+        """Compute and comm in one phased fluid schedule (pipeline path).
+
+        Per-stream serialization is the lowering's responsibility: every
+        compute job must dep on its stream predecessor, so at most one
+        compute phase is active per stream and its share is always 1.
+        The background horizon is the whole-model serialized compute span
+        (an upper-bound proxy — the coupled makespan is unknown until the
+        schedule runs)."""
+        jobs: list = list(compute) + list(comm)
+        horizon = sum(j.duration for j in compute)
+        for tr in background:
+            made = tr.materialize(horizon, bg_base_id)
+            bg_base_id += len(made)
+            jobs.extend(made)
+        for job in jobs:
+            if not isinstance(job, ComputeJob) and job.nbytes <= 0.0:
+                self._finish_job(job.jid, job.traffic_class, 0.0)
+        self._run_phased(jobs, timeline)
+        done = {j.ref: self.job_finish[j.job_id] for j in compute}
+        order = sorted(done, key=lambda r: (done[r], r))
+        return UnifiedResult(
+            compute_busy=self.class_busy.get(TC_COMPUTE, 0.0),
+            compute_finish=self.class_finish.get(TC_COMPUTE, 0.0),
+            comm_busy=self.class_busy.get(TC_DP, 0.0),
+            comm_finish=self.class_finish.get(TC_DP, 0.0),
+            finish=max(self.job_finish.values(), default=0.0),
+            order=order, busy_after=[], done_at=done)
 
     # ------------------------------------------------------ serialized path
     def _run_serialized(self, jobs: list[CommJob],
@@ -356,10 +613,14 @@ class CommEngine:
         # a predecessor still waiting in the pending queue blocks the chain
         return pred is not None and pred.idx > a.idx
 
-    def _run_phased(self, jobs: list[CommJob],
+    def _run_phased(self, jobs: list,
                     timeline: list | None) -> tuple[float, float]:
         ids = {j.jid for j in jobs}
-        pending = sorted((j for j in jobs if j.nbytes > 0.0),
+        # zero-duration compute jobs stay in the queue (they must wait for
+        # their deps before "finishing"); zero-byte comm jobs were already
+        # pre-finished by the caller
+        pending = sorted((j for j in jobs
+                          if isinstance(j, ComputeJob) or j.nbytes > 0.0),
                          key=lambda j: (j.ready, j.bucket, j.chunk))
         active: list[_Active] = []
         by_id: dict[int, _Active] = {}
@@ -372,6 +633,16 @@ class CommEngine:
         order = 0
         names = [l.name for l in self.spec.levels]
         disc = self._disc
+        # compute streams are extra serialized resources past the link
+        # levels; FIFO is nominal — the lowering chains each stream's jobs
+        # by deps, so at most one compute phase is active per stream
+        n_streams = 0
+        for j in jobs:
+            if isinstance(j, ComputeJob) and j.stream >= n_streams:
+                n_streams = j.stream + 1
+        if n_streams:
+            names = names + [f"stream{i}" for i in range(n_streams)]
+            disc = disc + [DISC_FIFO] * n_streams
         while pending or active:
             # ---- admission: ready, deps finished, slot available
             i = 0
@@ -467,9 +738,18 @@ class CommEngine:
                     busy += a.work
                     self._account(a.tclass, a.work)
                     if timeline is not None:
-                        timeline.append((a.kind, a.bucket, a.chunk,
-                                         a.tclass, a.algo, names[a.level],
-                                         a.phase_start, t))
+                        if a.tclass == TC_COMPUTE:
+                            # compute layout: spans at both (2,3) — legacy
+                            # consumers — and (6,7) — the unified schema
+                            timeline.append((a.kind, a.bucket,
+                                             a.phase_start, t, a.tclass,
+                                             names[a.level],
+                                             a.phase_start, t))
+                        else:
+                            timeline.append((a.kind, a.bucket, a.chunk,
+                                             a.tclass, a.algo,
+                                             names[a.level],
+                                             a.phase_start, t))
                     if a.advance(t):
                         still.append(a)
                     else:
@@ -504,3 +784,8 @@ class CommEngine:
             if best is None or j.ready < best:
                 best = j.ready
         return best
+
+
+# the PR-3..5 comm-only name; same class, kept so existing callers and
+# pickled references keep working
+CommEngine = EventEngine

@@ -572,6 +572,16 @@ class FusionGraph:
     def bucket_ready_groups(self, bucket: tuple[int, ...]) -> set[int]:
         return {self.provider[self.grad_prim[g]] for g in bucket}
 
+    def bucket_deps(self) -> list[tuple[int, ...]]:
+        """Per-bucket provider groups as sorted tuples — the dependency
+        edges of each bucket's comm job in the unified event engine
+        (bucket ``i`` may start once every group in ``bucket_deps()[i]``
+        has finished).  Index-aligned with ``self.buckets``; sorted so the
+        dep tuples are deterministic regardless of set iteration order."""
+        gp = self.grad_prim
+        prov = self.provider
+        return [tuple(sorted({prov[gp[g]] for g in b})) for b in self.buckets]
+
     def signature(self) -> tuple:
         """Hashable fingerprint of the strategy (for serialization-grade
         identity; ``fast_signature`` is the O(1) search-memo variant)."""

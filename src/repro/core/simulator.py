@@ -53,6 +53,7 @@ equivalence tests run both paths and assert identical results).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
@@ -61,7 +62,8 @@ from collections import OrderedDict
 from ..cluster import (COLLECTIVE_ALGOS, ClusterSpec, KIND_AR, KIND_RS_AG,
                        comm_coeffs, phases)
 from .costs import OracleEstimator, total_comm_time, total_compute_time
-from .events import BackgroundTraffic, CommEngine, TC_DP, bucket_jobs
+from .events import (BackgroundTraffic, CommJob, ComputeJob, EventEngine,
+                     TC_COMPUTE, TC_DP, TC_PP, bucket_jobs)
 from .graph import FusionGraph
 from .hw import Hardware, TPU_V5E
 
@@ -77,6 +79,9 @@ class SimResult:
     comm_finish: float
     overlap_ratio: float         # (compute_time+comm_time)/iteration_time
     timeline: list | None = None
+    # pipeline-schedule runs only: bubble / per-stage occupancy stats
+    # (None for the default single-device replay)
+    pipeline: dict | None = None
 
 
 @dataclasses.dataclass
@@ -106,7 +111,7 @@ class Simulator:
                  keep_timeline: bool = False, incremental: bool = True,
                  state_cache_size: int = 64, max_journal: int = 24,
                  cluster: ClusterSpec | None = None, streams: int = 1,
-                 background: tuple = ()):
+                 background: tuple = (), pipeline=None):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
         # legacy (hw, n_devices) maps to the flat back-compat spec — comm
@@ -131,7 +136,13 @@ class Simulator:
         # (DESIGN.md Sec. 9).  Ignored on the serialized channel, which is
         # the seed model and must stay bit-identical.
         self.background: tuple[BackgroundTraffic, ...] = tuple(background)
-        self._engine = CommEngine(cluster, streams=self.streams)
+        # a PipelineSchedule routes run() through the coupled engine path
+        # (_run_pipeline): fused groups are split into stages, lowered to
+        # 1F1B compute+p2p job graphs, and priced together with the
+        # gradient buckets (DESIGN.md Sec. 11).  None = the paper's
+        # single-device replay.
+        self.pipeline = pipeline
+        self._engine = EventEngine(cluster, streams=self.streams)
         self._ar_coeffs = {
             algo: comm_coeffs(cluster, algo, KIND_AR)
             for algo in COLLECTIVE_ALGOS
@@ -151,7 +162,13 @@ class Simulator:
         return self.run(g).iteration_time
 
     def run(self, g: FusionGraph) -> SimResult:
-        if not self.incremental or self.keep_timeline:
+        if self.pipeline is not None:
+            # multi-stream coupled schedule: the pop-order prefix argument
+            # behind delta resume does not hold, so pipeline pricing is
+            # always a full (non-incremental) replay
+            self.stats["full"] += 1
+            return self._run_pipeline(g)
+        if not self.incremental:
             return self._run_full(g, record=False).result
         base = None
         if g._base_token is not None:
@@ -159,6 +176,8 @@ class Simulator:
             if base is not None:
                 self._states.move_to_end(g._base_token)
         if base is not None and not g._journal:
+            # a keep_timeline sim only ever remembers timeline-carrying
+            # states, so the cached result can be returned as-is
             self.stats["cached"] += 1
             return base.result
         state = None
@@ -175,66 +194,199 @@ class Simulator:
         return state.result
 
     # ------------------------------------------------------------ full path
-    def _run_full(self, g: FusionGraph, record: bool) -> _SimState:
-        succs, preds = g.quotient()
-        indeg = {gid: len(ps) for gid, ps in preds.items()}
+    def _compute_jobs(self, g: FusionGraph):
+        """Fused groups as engine compute jobs: ``job_id = ~gid`` (compute
+        ids are negative by convention), ``key`` the serialized pop-order
+        tie-break, ``deps`` the quotient predecessors.  Returns
+        ``(jobs, times)`` with ``times`` the per-gid durations (the
+        ``_SimState.times`` cache)."""
+        _, preds = g.quotient()
         key = g._group_key
-        done_at: dict[int, float] = {}
-        ready = [(key[gid], gid) for gid, k in indeg.items() if k == 0]
-        heapq.heapify(ready)
-        device_free = 0.0
-        timeline = [] if self.keep_timeline else None
-        compute_busy = 0.0
-        order: list[int] = []
-        busy_after: list[float] = []
-        # bucket i becomes ready when all provider groups of its grads done
-        bucket_waiting = {
-            i: set(g.bucket_ready_groups(b)) for i, b in enumerate(g.buckets)
-        }
-        bucket_ready_at: dict[int, float] = {
-            i: 0.0 for i, w in bucket_waiting.items() if not w
-        }
-        group_to_buckets: dict[int, list[int]] = {}
-        for i, w in bucket_waiting.items():
-            for gid in w:
-                group_to_buckets.setdefault(gid, []).append(i)
-
+        group_time = self.estimator.group_time
         times: dict[int, float] = {}
-        while ready:
-            _, gid = heapq.heappop(ready)
-            t = self.estimator.group_time(g, gid)
-            # the compute stream is serialized and a group only becomes
-            # ready once its preds have finished, so start == device_free
-            # (== max(device_free, preds' done_at) of the seed formulation)
-            start = device_free
-            end = start + t
-            done_at[gid] = end
-            device_free = end
-            compute_busy += t
-            if record:
-                times[gid] = t
-                order.append(gid)
-                busy_after.append(compute_busy)
-            if timeline is not None:
-                timeline.append(("compute", gid, start, end))
-            for i in group_to_buckets.get(gid, ()):
-                bucket_waiting[i].discard(gid)
-                if not bucket_waiting[i]:
-                    bucket_ready_at[i] = end
-            for d in succs[gid]:
-                indeg[d] -= 1
-                if indeg[d] == 0:
-                    heapq.heappush(ready, (key[d], d))
-        if len(done_at) != len(g.groups):
-            raise RuntimeError("cyclic fusion graph in simulator")
+        jobs = []
+        for gid in g.groups:
+            t = group_time(g, gid)
+            times[gid] = t
+            # (group key, gid): duplication-allowed fusion means min member
+            # pids can tie across groups — the gid component restores the
+            # seed heap's ascending-gid tie-break
+            jobs.append(ComputeJob(
+                ref=gid, duration=t, job_id=~gid, key=(key[gid], gid),
+                deps=tuple(~p for p in preds[gid])))
+        return jobs, times
 
-        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, timeline,
-                                                 horizon=device_free)
-        compute_finish = device_free
-        result = self._make_result(compute_busy, comm_busy, compute_finish,
-                                   comm_finish, timeline)
-        return _SimState(order=order, done_at=done_at,
-                         busy_after=busy_after, times=times, result=result)
+    def _grad_jobs(self, g: FusionGraph):
+        """Gradient buckets as dependency-carrying comm jobs: bucket ``i``
+        deps on the compute jobs of its provider groups (the engine derives
+        readiness — no ``bucket_waiting`` side-channel).  Zero-byte buckets
+        are skipped in both channel models: nothing transfers, so no
+        latency is charged (streams=1 parity with the seed comm pass).
+        ``streams=1`` keeps whole-bucket jobs (the serialized channel
+        ignores chunking, as the seed did); ``streams > 1`` applies the
+        chunk decomposition.  Returns ``(jobs, next_id)``."""
+        algos = g.bucket_algos
+        kinds = g.bucket_comm
+        buckets = g.buckets
+        deps_of = g.bucket_deps()
+        jobs = []
+        next_id = len(buckets)
+        if self.streams == 1:
+            for i in range(len(buckets)):
+                nbytes = g.bucket_bytes(buckets[i])
+                if nbytes <= 0.0:
+                    continue
+                jobs.append(CommJob(
+                    bucket=i, ready=0.0, nbytes=nbytes, algo=algos[i],
+                    kind=kinds[i], deps=tuple(~p for p in deps_of[i])))
+            return jobs, next_id
+        chunks = g.bucket_chunks
+        for i in range(len(buckets)):
+            nbytes = g.bucket_bytes(buckets[i])
+            if nbytes <= 0.0:
+                continue
+            js, next_id = bucket_jobs(i, 0.0, nbytes, algos[i], kinds[i],
+                                      chunks[i], next_id,
+                                      deps=tuple(~p for p in deps_of[i]))
+            jobs.extend(js)
+        return jobs, next_id
+
+    def _run_full(self, g: FusionGraph, record: bool) -> _SimState:
+        compute, times = self._compute_jobs(g)
+        comm, next_id = self._grad_jobs(g)
+        timeline = [] if self.keep_timeline else None
+        bg = self.background if self.streams > 1 else ()
+        try:
+            u = self._engine.run_unified(compute, comm, timeline,
+                                         background=bg, bg_base_id=next_id)
+        except RuntimeError as e:
+            raise RuntimeError("cyclic fusion graph in simulator") from e
+        result = self._make_result(u.compute_busy, u.comm_busy,
+                                   u.compute_finish, u.comm_finish, timeline)
+        if not record:
+            return _SimState(order=[], done_at={}, busy_after=[], times={},
+                             result=result)
+        return _SimState(order=u.order, done_at=u.done_at,
+                         busy_after=u.busy_after, times=times, result=result)
+
+    # -------------------------------------------------------- pipeline path
+    def pipeline_inputs(self, g: FusionGraph) -> dict:
+        """Derive the 1F1B lowering's inputs from the fused graph: the
+        serialized single-device schedule is bisected into ``n_stages``
+        contiguous, busy-balanced spans; each span's time splits into
+        per-microbatch fwd/bwd unit durations by ``fwd_bwd_ratio``; the
+        stage-boundary p2p volume defaults to the mean activation
+        (out_bytes) of the groups at the stage cuts, per microbatch."""
+        sched = self.pipeline
+        compute, _ = self._compute_jobs(g)
+        u = self._engine.run_unified(compute, [])
+        S = sched.n_stages
+        if S > len(u.order):
+            raise ValueError(f"n_stages={S} exceeds {len(u.order)} fused "
+                             "groups — nothing to split")
+        total = u.compute_busy
+        ends = []
+        for s in range(S - 1):
+            cut = total * (s + 1) / S
+            ends.append(bisect.bisect_left(u.busy_after, cut) + 1)
+        ends.append(len(u.order))
+        # every stage keeps at least one group, in order
+        for s in range(S):
+            lo = (ends[s - 1] if s else 0) + 1
+            hi = len(u.order) - (S - 1 - s)
+            ends[s] = min(max(ends[s], lo), hi)
+        group_stage: dict[int, int] = {}
+        stage_busy = []
+        stage_groups = []
+        prev = 0
+        for s in range(S):
+            hi = ends[s]
+            for gid in u.order[prev:hi]:
+                group_stage[gid] = s
+            lo_busy = u.busy_after[prev - 1] if prev else 0.0
+            stage_busy.append(u.busy_after[hi - 1] - lo_busy)
+            stage_groups.append(hi - prev)
+            prev = hi
+        M = sched.n_microbatches
+        r = sched.fwd_bwd_ratio
+        stage_fwd = [b / M * (r / (1.0 + r)) for b in stage_busy]
+        stage_bwd = [b / M - f for b, f in zip(stage_busy, stage_fwd)]
+        if sched.p2p_bytes is not None:
+            pbytes = sched.p2p_bytes
+        else:
+            outs = []
+            for s in range(S - 1):
+                boundary_gid = u.order[ends[s] - 1]
+                outs.append(sum(g.prims[p].out_bytes
+                                for p in g.groups[boundary_gid]))
+            pbytes = (sum(outs) / len(outs) / M) if outs else 0.0
+        return {"group_stage": group_stage, "stage_busy": stage_busy,
+                "stage_groups": stage_groups, "stage_fwd": stage_fwd,
+                "stage_bwd": stage_bwd, "p2p_bytes": pbytes}
+
+    def _run_pipeline(self, g: FusionGraph) -> SimResult:
+        from .pipeline import bubble_stats, lower_schedule
+        sched = self.pipeline
+        pi = self.pipeline_inputs(g)
+        buckets = g.buckets
+        chunks = g.bucket_chunks
+        nb = [g.bucket_bytes(b) for b in buckets]
+        # id layout: buckets 0..B-1, then chunk jobs, then p2p, then
+        # background — count the chunk ids before lowering allocates p2p's
+        cid = len(buckets)
+        for i in range(len(buckets)):
+            if nb[i] > 0.0 and chunks[i] > 1:
+                cid += chunks[i]
+        cjobs, p2p, last_bwd, bg_base = lower_schedule(
+            sched, pi["stage_fwd"], pi["stage_bwd"], pi["p2p_bytes"],
+            next_id=cid)
+        # gradient buckets dep on the *last backward unit* of every stage
+        # that provides them: that is when the stage's gradient
+        # accumulation over all microbatches completes
+        group_stage = pi["group_stage"]
+        deps_of = g.bucket_deps()
+        algos = g.bucket_algos
+        kinds = g.bucket_comm
+        comm = []
+        next_id = len(buckets)
+        for i in range(len(buckets)):
+            if nb[i] <= 0.0:
+                continue
+            stages = sorted({group_stage[p] for p in deps_of[i]})
+            bdeps = tuple(last_bwd[s] for s in stages)
+            js, next_id = bucket_jobs(i, 0.0, nb[i], algos[i], kinds[i],
+                                      chunks[i], next_id, deps=bdeps)
+            comm.extend(js)
+        timeline = [] if self.keep_timeline else None
+        u = self._engine.run_unified(cjobs, comm + p2p, timeline,
+                                     background=self.background,
+                                     bg_base_id=bg_base)
+        info = {
+            "schedule": sched.schedule,
+            "n_stages": sched.n_stages,
+            "n_microbatches": sched.n_microbatches,
+            "interleave": sched.chunks_per_stage,
+            "stage_busy_s": pi["stage_busy"],
+            "stage_groups": pi["stage_groups"],
+            "bubble": bubble_stats(sched, pi["stage_busy"],
+                                   u.compute_finish),
+            "p2p_bytes": pi["p2p_bytes"],
+            "p2p_busy_s": self._engine.class_busy.get(TC_PP, 0.0),
+        }
+        it = u.finish
+        return SimResult(
+            iteration_time=it,
+            # per-device busy sums: with S stages compute_time can exceed
+            # the iteration (distinct devices are busy concurrently)
+            compute_time=u.compute_busy,
+            comm_time=u.comm_busy,
+            compute_finish=u.compute_finish,
+            comm_finish=u.comm_finish,
+            overlap_ratio=(u.compute_busy + u.comm_busy) / it if it > 0
+            else 1.0,
+            timeline=timeline,
+            pipeline=info,
+        )
 
     # ----------------------------------------------------------- delta path
     def _run_delta(self, g: FusionGraph, base: _SimState) -> _SimState | None:
@@ -314,11 +466,24 @@ class Simulator:
                 bucket_ready_at[i] = max(done_at[x] for x in provs)
             except KeyError:
                 return None
-        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, None,
+        timeline = None
+        if self.keep_timeline:
+            # reconstruct the serialized compute records the full path
+            # would emit: on one stream each pop starts where the previous
+            # ended, so the chained starts are bit-exact (never derived by
+            # subtraction, which would not be)
+            timeline = []
+            prev = 0.0
+            for gid in order:
+                end = done_at[gid]
+                timeline.append(("compute", gid, prev, end, TC_COMPUTE,
+                                 "stream0", prev, end))
+                prev = end
+        comm_busy, comm_finish = self._comm_pass(g, bucket_ready_at, timeline,
                                                  horizon=device_free)
         compute_finish = device_free if order else 0.0
         result = self._make_result(compute_busy, comm_busy, compute_finish,
-                                   comm_finish, None)
+                                   comm_finish, timeline)
         # stale (removed-gid) entries are harmless — gids are never reused
         # within a lineage — but prune once they dominate the dicts
         if len(done_at) > 2 * len(groups):
@@ -347,7 +512,10 @@ class Simulator:
             jobs = []
             next_id = len(buckets)
             for i, r in bucket_ready_at.items():
-                js, next_id = bucket_jobs(i, r, g.bucket_bytes(buckets[i]),
+                nbytes = g.bucket_bytes(buckets[i])
+                if nbytes <= 0.0:
+                    continue  # nothing to transfer: no latency D charged
+                js, next_id = bucket_jobs(i, r, nbytes,
                                           algos[i], kinds[i], chunks[i],
                                           next_id)
                 jobs.extend(js)

@@ -42,6 +42,7 @@ from ..models import stacked as ST
 from ..optim import adamw
 from ..cluster import (COLLECTIVE_ALGOS, best_algo, bucket_time, comm_time,
                        get_preset, list_presets)
+from ..core.pipeline import PipelineSchedule, SCHED_1F1B, SCHEDULES
 from .mesh import cluster_from_mesh, make_production_mesh
 from .shapes import (FSDP_ARCHS, GRAD_ACCUM, SHAPES, ZERO1_ARCHS,
                      applicability, cache_capacity, input_specs)
@@ -377,6 +378,76 @@ def collective_cost_model(coll: dict, spec, streams: int = 1,
     return out
 
 
+def pipeline_cost_model(coll: dict, spec, sched, flops: float,
+                        streams: int = 1,
+                        keep_timeline: bool = False) -> dict:
+    """Price the compiled step under a 1F1B pipeline schedule on the
+    unified engine (DESIGN.md Sec. 11): the step's flops on the reference
+    chip are split uniformly over ``n_stages`` and ``n_microbatches`` into
+    fwd/bwd compute units, lowered to the schedule's compute+p2p job
+    graph, and run together with the DP gradient all-reduce set — so the
+    block reports the PP bubble *and* the gradient slowdown from sharing
+    link levels with stage-boundary transfers.  The stage-boundary p2p
+    volume defaults to the compiled collective-permute mean.
+    ``keep_timeline`` embeds the unified 8-tuple records (compute spans
+    carry their interval at both the legacy (2,3) and unified (6,7)
+    positions)."""
+    from repro.core.events import CommJob, EventEngine, TC_PP
+    from repro.core.hw import TPU_V5E
+    from repro.core.pipeline import bubble_stats, lower_schedule
+
+    S, M = sched.n_stages, sched.n_microbatches
+    r = sched.fwd_bwd_ratio
+    step_s = flops / (TPU_V5E.peak_flops * TPU_V5E.efficiency)
+    stage_busy = [step_s / S] * S
+    stage_fwd = [b / M * (r / (1.0 + r)) for b in stage_busy]
+    stage_bwd = [b / M - f for b, f in zip(stage_busy, stage_fwd)]
+    if sched.p2p_bytes is not None:
+        p2p_bytes = sched.p2p_bytes
+    else:
+        perm = coll.get("per_op", {}).get("collective-permute", {})
+        p2p_bytes = (perm["bytes"] / perm["count"]
+                     if perm.get("count") else 0.0)
+    # the DP gradient set, priced as `count` collectives of the mean size
+    # (same model as the streams block); the HLO carries no per-tensor
+    # stage provenance, so bucket i deps on stage i % S's last backward
+    ar = coll["per_op"].get("all-reduce", {})
+    count = int(ar.get("count", 0))
+    n_grads, mean, algo = 0, 0.0, "ring"
+    if count and ar.get("bytes", 0.0) > 0.0:
+        mean = ar["bytes"] / count
+        algo, _ = best_algo(mean, spec)
+        n_grads = min(count, 128)
+    cjobs, p2p, last_bwd, _ = lower_schedule(
+        sched, stage_fwd, stage_bwd, p2p_bytes, next_id=n_grads)
+    grads = [CommJob(bucket=i, ready=0.0, nbytes=mean, algo=algo,
+                     deps=(last_bwd[i % S],))
+             for i in range(n_grads)]
+    eng = EventEngine(spec, streams=max(int(streams or 1), 1))
+    tl: list | None = [] if keep_timeline else None
+    u = eng.run_unified(cjobs, grads + p2p, tl)
+    grad_fin = eng.class_finish.get("dp", 0.0)
+    out = {
+        "schedule": sched.schedule,
+        "n_stages": S,
+        "n_microbatches": M,
+        "interleave": sched.chunks_per_stage,
+        "ref_chip": TPU_V5E.name,
+        "step_compute_s": step_s,
+        "p2p_bytes": p2p_bytes,
+        "p2p_jobs": len(p2p),
+        "grad_jobs": n_grads,
+        "compute_finish_s": u.compute_finish,
+        "grad_finish_s": grad_fin,
+        "iteration_s": u.finish,
+        "p2p_busy_s": eng.class_busy.get(TC_PP, 0.0),
+        "bubble": bubble_stats(sched, stage_busy, u.compute_finish),
+    }
+    if tl is not None:
+        out["timeline"] = [list(e) for e in tl]
+    return out
+
+
 # -------------------------------------------------------------- plan pricing
 def price_plan(path: str, cluster: str | None = None,
                streams: int | None = None,
@@ -422,7 +493,8 @@ def price_plan(path: str, cluster: str | None = None,
 # -------------------------------------------------------------------- main
 def dryrun_one(arch: str, shape: str, multi_pod: bool,
                verbose: bool = True, cluster: str | None = None,
-               streams: int = 1, keep_timeline: bool = False) -> dict:
+               streams: int = 1, keep_timeline: bool = False,
+               pp=None) -> dict:
     cfg0 = get_config(arch)
     ok, reason, cfg = applicability(cfg0, shape)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -465,6 +537,10 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool,
         coll, spec, streams=streams,
         tp_degree=int(mesh.shape.get("model", 1)),
         keep_timeline=keep_timeline)
+    if pp is not None:
+        result["cluster"]["pp"] = pipeline_cost_model(
+            coll, spec, pp, float(ca.get("flops", 0.0)),
+            streams=streams, keep_timeline=keep_timeline)
     result.update({
         "kind": kind,
         "lower_s": round(t_lower, 2),
@@ -512,7 +588,21 @@ def main():
     ap.add_argument("--timeline", action="store_true",
                     help="print (and embed) the contended comm schedule as "
                          "(kind, bucket, chunk, traffic_class, algo, level, "
-                         "start, end) records (needs --streams > 1)")
+                         "start, end) records (needs --streams > 1); with "
+                         "--pp-stages also the unified compute+p2p+grad "
+                         "records and the PP bubble")
+    ap.add_argument("--pp-stages", type=int, default=None,
+                    help="price the step under a 1F1B pipeline schedule "
+                         "with this many stages (adds a cluster.pp block)")
+    ap.add_argument("--pp-microbatches", type=int, default=8,
+                    help="microbatches per iteration for --pp-stages "
+                         "(default 8)")
+    ap.add_argument("--pp-schedule", default=SCHED_1F1B,
+                    choices=list(SCHEDULES),
+                    help="pipeline schedule family (default 1f1b)")
+    ap.add_argument("--pp-interleave", type=int, default=1,
+                    help="virtual-stage chunks per device for "
+                         "interleaved_1f1b (default 1)")
     ap.add_argument("--plan", default=None, metavar="FILE",
                     help="price a saved repro.plan artifact instead of "
                          "compiling archs (no re-trace, no re-search); "
@@ -525,6 +615,13 @@ def main():
         price_plan(args.plan, cluster=args.cluster, streams=args.streams,
                    out_dir=args.out)
         return
+
+    pp = None
+    if args.pp_stages:
+        pp = PipelineSchedule(n_stages=args.pp_stages,
+                              n_microbatches=args.pp_microbatches,
+                              schedule=args.pp_schedule,
+                              interleave=args.pp_interleave)
 
     archs = ARCHS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
@@ -539,7 +636,7 @@ def main():
                 try:
                     res = dryrun_one(arch, shape, mp, cluster=args.cluster,
                                      streams=args.streams or 1,
-                                     keep_timeline=args.timeline)
+                                     keep_timeline=args.timeline, pp=pp)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     failures.append(tag)
@@ -553,6 +650,22 @@ def main():
                               f"start, end):")
                         for e in rec:
                             print(f"    {tuple(e)}")
+                    ppb = res.get("cluster", {}).get("pp", {})
+                    if ppb.get("timeline"):
+                        print(f"  {tag} unified pp timeline "
+                              f"(kind, ref, *, class, resource, "
+                              f"start, end):")
+                        for e in ppb["timeline"]:
+                            print(f"    {tuple(e)}")
+                    if ppb:
+                        bub = ppb["bubble"]
+                        print(f"  {tag} pp bubble: "
+                              f"fraction {bub['fraction']:.3f} over "
+                              f"{ppb['n_stages']} stages x "
+                              f"{ppb['n_microbatches']} microbatches "
+                              f"(compute finish "
+                              f"{ppb['compute_finish_s']*1e3:.3f} ms, "
+                              f"iteration {ppb['iteration_s']*1e3:.3f} ms)")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
     if failures:

@@ -45,10 +45,14 @@ from ..core.events import (BackgroundTraffic, CommEngine, CommJob, TC_DP,
                            bucket_jobs)
 from ..core.graph import FusionGraph
 from ..core.hw import Hardware
+from ..core.pipeline import PipelineSchedule
 from ..core.simulator import Simulator
 
 SCHEMA = "repro.plan"
-PLAN_VERSION = 1
+# v2 added the optional pipeline-schedule knobs; v1 artifacts load with
+# pipeline=None (every other field is unchanged)
+PLAN_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 
 class PlanError(Exception):
@@ -125,6 +129,9 @@ class Plan:
     # pricing context
     streams: int = 1
     background: tuple[tuple, ...] = ()
+    # PipelineSchedule.to_tuple(), or None when the plan was priced on the
+    # single-device replay (v1 artifacts)
+    pipeline: tuple | None = None
     cluster: tuple | None = None         # cluster_fingerprint(), or unknown
     hw: tuple | None = None              # sorted Hardware items, or unknown
     estimator: str = "oracle"
@@ -164,10 +171,12 @@ class Plan:
         kw: dict = {}
         if sim is not None:
             hw = getattr(sim, "hw", None)
+            pp = getattr(sim, "pipeline", None)
             kw = dict(
                 streams=int(getattr(sim, "streams", 1)),
                 background=tuple(_bg_tuple(b)
                                  for b in getattr(sim, "background", ())),
+                pipeline=None if pp is None else pp.to_tuple(),
                 cluster=cluster_fingerprint(sim.cluster),
                 hw=(tuple(sorted(dataclasses.asdict(hw).items()))
                     if hw is not None else None),
@@ -294,6 +303,9 @@ class Plan:
         sim_kw = dict(kw)
         if self.hw is not None:
             sim_kw.setdefault("hw", Hardware(**dict(self.hw)))
+        if self.pipeline is not None:
+            sim_kw.setdefault(
+                "pipeline", PipelineSchedule.from_tuple(self.pipeline))
         return Simulator(
             estimator=estimator, cluster=spec,
             streams=self.streams,
@@ -392,6 +404,7 @@ class Plan:
                               for k in set(self.bucket_chunks)},
             "streams": self.streams,
             "estimator": self.estimator,
+            "pipeline": self.pipeline,
             "predicted_iteration_time_s": self.predicted_iteration_time,
         }
 
@@ -445,12 +458,14 @@ class Plan:
             raise PlanVersionError(
                 f"{source}: schema {d.get('schema')!r} is not {SCHEMA!r}")
         version = d.get("version")
-        if version != PLAN_VERSION:
+        if version not in SUPPORTED_VERSIONS:
             raise PlanVersionError(
                 f"{source}: plan version {version!r} is not supported by "
-                f"this build (wants {PLAN_VERSION}); re-run compile()")
+                f"this build (wants one of {SUPPORTED_VERSIONS}); "
+                f"re-run compile()")
         try:
             cluster = d.get("cluster")
+            pipeline = d.get("pipeline")   # absent in v1 artifacts
             return Plan(
                 version=PLAN_VERSION,
                 groups=_tuplize(d["groups"]),
@@ -462,6 +477,7 @@ class Plan:
                 bucket_bytes=_tuplize(d["bucket_bytes"]),
                 streams=int(d.get("streams", 1)),
                 background=_tuplize(d.get("background", [])),
+                pipeline=None if pipeline is None else _tuplize(pipeline),
                 cluster=None if cluster is None else _tuplize(cluster),
                 hw=(None if d.get("hw") is None
                     else _tuplize(d["hw"])),

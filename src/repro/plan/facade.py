@@ -70,7 +70,7 @@ def trace_model_graph(cfg, *, batch: int = 8, seq: int = 64,
 
 
 def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
-                 background=(), workers: int | None = None,
+                 background=(), pipeline=None, workers: int | None = None,
                  graph=None, estimator=None, hw: Hardware = TPU_V5E,
                  n_devices: int = 256,
                  batch: int = 8, seq: int = 64, model: str = "stacked",
@@ -84,7 +84,10 @@ def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
     :func:`trace_model_graph`) — or pass ``graph=`` to search a pre-traced
     profiled FusionGraph directly.  ``cluster`` is a preset name or
     :class:`ClusterSpec` (default: the legacy flat ``(hw, n_devices)``
-    model).  ``streams`` / ``background`` pick the event-engine pricing,
+    model).  ``streams`` / ``background`` / ``pipeline`` pick the
+    event-engine pricing (``pipeline`` is a
+    :class:`~repro.core.pipeline.PipelineSchedule` that prices the run
+    under a 1F1B stage schedule instead of pure data parallelism),
     ``workers`` the candidate-evaluation pool; the remaining knobs are the
     search hyper-parameters of ``backtracking_search``.
     """
@@ -104,7 +107,7 @@ def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
                                   hw=hw, seed=seed)
     sim = Simulator(estimator=estimator, hw=hw, n_devices=n_devices,
                     cluster=cluster, streams=streams,
-                    background=tuple(background))
+                    background=tuple(background), pipeline=pipeline)
     kw = {} if methods is None else {"methods": tuple(methods)}
     res = backtracking_search(
         graph, sim, alpha=alpha, beta=beta,

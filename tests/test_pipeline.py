@@ -1,0 +1,167 @@
+"""1F1B / interleaved-1F1B schedule lowering (DESIGN.md Sec. 11): analytic
+makespan and bubble properties on uniform stages, and the simulator's
+pipeline pricing distinguishing dep-coupled stage traffic from the blind
+background-traffic model."""
+import pytest
+
+from repro.cluster import get_preset
+from repro.core import (BackgroundTraffic, PipelineSchedule, Simulator,
+                        SCHED_1F1B, SCHED_INTERLEAVED)
+from repro.core.events import EventEngine
+from repro.core.graph import EW, FusionGraph, PrimOp
+from repro.core.pipeline import bubble_stats, lower_schedule
+
+SPEC = get_preset("a100_nvlink_ib")
+
+
+def uniform_makespan(sched, f=1e-3, b=1e-3, p2p_bytes=0.0, streams=4):
+    S = sched.n_stages
+    cjobs, p2p, last_bwd, _ = lower_schedule(
+        sched, [f] * S, [b] * S, p2p_bytes, next_id=0)
+    eng = EventEngine(SPEC, streams=streams)
+    u = eng.run_unified(cjobs, p2p)
+    return u, cjobs, p2p, last_bwd
+
+
+def test_1f1b_textbook_makespan_and_bubble():
+    """Uniform stages, free p2p: makespan (M + S - 1) * (f + b), bubble
+    fraction (S - 1) / (M + S - 1)."""
+    S, M, f, b = 4, 8, 1e-3, 1e-3
+    sched = PipelineSchedule(n_stages=S, n_microbatches=M)
+    u, cjobs, p2p, _ = uniform_makespan(sched, f, b)
+    assert not p2p  # free transfers lower to direct deps
+    assert len(cjobs) == 2 * S * M
+    assert u.compute_finish == pytest.approx((M + S - 1) * (f + b))
+    bub = bubble_stats(sched, [M * (f + b)] * S, u.compute_finish)
+    assert bub["fraction"] == pytest.approx((S - 1) / (M + S - 1))
+
+
+def test_1f1b_two_stage_hand_check():
+    """S=2, M=2, f=b=1: stage 0 runs F0 F1 B0 B1 with a one-unit stall
+    before each backward; makespan 6 units."""
+    sched = PipelineSchedule(n_stages=2, n_microbatches=2)
+    u, _, _, _ = uniform_makespan(sched, 1.0, 1.0)
+    assert u.compute_finish == pytest.approx(6.0)
+
+
+def test_single_stage_degenerates_to_serial():
+    """S=1: no boundaries, no bubble — makespan is M * (f + b)."""
+    sched = PipelineSchedule(n_stages=1, n_microbatches=5)
+    u, _, p2p, _ = uniform_makespan(sched, 2e-3, 3e-3)
+    assert not p2p
+    assert u.compute_finish == pytest.approx(5 * 5e-3)
+    bub = bubble_stats(sched, [5 * 5e-3], u.compute_finish)
+    assert bub["fraction"] == pytest.approx(0.0)
+
+
+def test_interleaved_completes_and_cuts_bubble():
+    """Interleaving shrinks the warmup bubble: same S, M, same total work,
+    strictly smaller makespan (hence bubble) than plain 1F1B."""
+    S, M = 4, 8
+    plain = PipelineSchedule(n_stages=S, n_microbatches=M)
+    inter = PipelineSchedule(n_stages=S, n_microbatches=M,
+                             schedule=SCHED_INTERLEAVED, interleave=2)
+    up, cp, _, _ = uniform_makespan(plain)
+    ui, ci, _, _ = uniform_makespan(inter)
+    assert len(ci) == 2 * len(cp)    # twice the units (v = 2 chunks)
+    assert len(ui.order) == len(ci)  # every unit scheduled
+    assert ui.compute_busy == pytest.approx(up.compute_busy)
+    assert ui.compute_finish < up.compute_finish
+
+
+def test_interleave_one_equals_1f1b():
+    S, M = 3, 6
+    plain = PipelineSchedule(n_stages=S, n_microbatches=M)
+    inter1 = PipelineSchedule(n_stages=S, n_microbatches=M,
+                              schedule=SCHED_INTERLEAVED, interleave=1)
+    up, _, _, _ = uniform_makespan(plain)
+    ui, _, _, _ = uniform_makespan(inter1)
+    assert ui.compute_finish == up.compute_finish
+    assert ui.order == up.order
+
+
+def test_p2p_transfers_delay_the_pipeline():
+    sched = PipelineSchedule(n_stages=4, n_microbatches=8)
+    free, _, no_jobs, _ = uniform_makespan(sched, p2p_bytes=0.0)
+    paid, _, jobs, _ = uniform_makespan(sched, p2p_bytes=float(1 << 24))
+    assert not no_jobs and jobs
+    assert paid.finish > free.finish
+
+
+def test_last_bwd_is_the_gradient_release_point():
+    sched = PipelineSchedule(n_stages=3, n_microbatches=4)
+    u, cjobs, _, last_bwd = uniform_makespan(sched)
+    by_id = {j.job_id: j for j in cjobs}
+    assert len(set(last_bwd)) == len(last_bwd)
+    for s, jid in enumerate(last_bwd):
+        j = by_id[jid]
+        assert j.kind == "bwd" and j.stream == s
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        PipelineSchedule(n_stages=0, n_microbatches=4)
+    with pytest.raises(ValueError):
+        PipelineSchedule(n_stages=2, n_microbatches=5,
+                         schedule=SCHED_INTERLEAVED, interleave=2)
+    with pytest.raises(ValueError):
+        PipelineSchedule(n_stages=2, n_microbatches=4, schedule="gpipe")
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4,
+                             schedule=SCHED_INTERLEAVED, interleave=2,
+                             p2p_bytes=1024.0)
+    assert PipelineSchedule.from_tuple(sched.to_tuple()) == sched
+
+
+# ------------------------------------------------ simulator pipeline path
+def chain_graph(n=14, grads=(3, 7, 11)):
+    prims = []
+    for i in range(n):
+        gi = list(grads).index(i) if i in grads else -1
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW, flops=100.0, in_bytes=64.0,
+            out_bytes=4096.0, time=1e-6, grad_param=gi,
+            grad_bytes=float(1 << 20) if gi >= 0 else 0.0,
+            grad_sig="f32" if gi >= 0 else ""))
+    return FusionGraph(prims, [(i, i + 1) for i in range(n - 1)])
+
+
+def test_simulator_pipeline_pricing():
+    g = chain_graph()
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4)
+    sim = Simulator(cluster=SPEC, streams=4, pipeline=sched,
+                    keep_timeline=True)
+    r = sim.run(g)
+    assert r.pipeline is not None
+    assert r.pipeline["n_stages"] == 2
+    assert 0.0 <= r.pipeline["bubble"]["fraction"] < 1.0
+    assert r.pipeline["p2p_busy_s"] > 0.0
+    assert r.iteration_time > 0.0
+    kinds = {e[0] for e in r.timeline}
+    assert "fwd" in kinds and "bwd" in kinds
+    # pipeline pricing is always a full replay
+    assert sim.stats["full"] == 1 and sim.stats["delta"] == 0
+
+
+def test_pipeline_contention_differs_from_background_model():
+    """Dep-coupled stage-boundary transfers are not periodic noise: the
+    same p2p volume priced as 1F1B structure vs blind background jobs must
+    give different iteration times (this asymmetry is what fig_pp_sweep
+    measures)."""
+    g = chain_graph()
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4)
+    sim_pp = Simulator(cluster=SPEC, streams=4, pipeline=sched)
+    r_pp = sim_pp.run(g)
+    pbytes = sim_pp.pipeline_inputs(g)["p2p_bytes"]
+    n = 2 * (sched.n_stages - 1) * sched.n_microbatches
+    bg = BackgroundTraffic("pp", pbytes, period=1e-5, kind="p2p", count=n)
+    r_bg = Simulator(cluster=SPEC, streams=4, background=(bg,)).run(g)
+    assert r_pp.iteration_time > 0 and r_bg.iteration_time > 0
+    assert r_pp.iteration_time != r_bg.iteration_time
+
+
+def test_too_many_stages_raises():
+    g = chain_graph(n=3, grads=(1,))
+    sched = PipelineSchedule(n_stages=8, n_microbatches=8)
+    sim = Simulator(cluster=SPEC, streams=4, pipeline=sched)
+    with pytest.raises(ValueError):
+        sim.run(g)

@@ -1,0 +1,283 @@
+"""PR 6 regression surface for the unified event engine (DESIGN.md
+Sec. 11): seed-arithmetic golden equivalence, the unified timeline record
+schema, zero-byte bucket parity across both comm paths, and keep_timeline
+runs staying on the incremental (delta-resume) lineage."""
+import heapq
+import random
+
+import pytest
+
+from repro.cluster import KIND_AR, comm_coeffs, get_preset
+from repro.configs import get_config
+from repro.core import (BackgroundTraffic, PipelineSchedule, Simulator,
+                        profile_graph, trace_grad_graph)
+from repro.core.graph import EW, FusionGraph, PrimOp
+from repro.core.search import ALL_METHODS, random_apply
+from repro.plan import Plan
+
+
+def traced_graph(arch: str):
+    import jax
+
+    from repro.data.pipeline import materialize_batch
+    from repro.models import model as M
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    data = materialize_batch(cfg, 2, 16, seed=0)
+    return profile_graph(trace_grad_graph(
+        lambda p, bt: M.loss_fn(p, cfg, bt), params, data))
+
+
+@pytest.fixture(scope="module")
+def transformer_graph():
+    return traced_graph("transformer-paper")
+
+
+@pytest.fixture(scope="module")
+def qwen_graph():
+    return traced_graph("qwen2-0.5b")
+
+
+def chain_graph(n=14, grads=(3, 7, 11), grad_bytes=(1 << 18,) * 3):
+    prims = []
+    for i in range(n):
+        gi = list(grads).index(i) if i in grads else -1
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW, flops=100.0, in_bytes=64.0,
+            out_bytes=64.0, time=1e-6, grad_param=gi,
+            grad_bytes=float(grad_bytes[gi]) if gi >= 0 else 0.0,
+            grad_sig="f32" if gi >= 0 else ""))
+    return FusionGraph(prims, [(i, i + 1) for i in range(n - 1)])
+
+
+# ------------------------------------------- seed-arithmetic golden oracle
+def seed_reference(g, sim):
+    """The pre-refactor serialized pricing, transcribed from the seed
+    ``_run_full``/``_comm_pass``: a (key, gid) ready heap with
+    ``bucket_waiting`` provider-count side-channels, then the serialized
+    channel as a bare ``max(chan_free, ready) + C*x + D`` loop.  The
+    unified engine replaced this with one dependency-aware job graph; this
+    oracle pins its results to the seed's exact accumulation order."""
+    succs, preds = g.quotient()
+    indeg = {gid: len(ps) for gid, ps in preds.items()}
+    key = g._group_key
+    done_at = {}
+    ready = [(key[gid], gid) for gid, k in indeg.items() if k == 0]
+    heapq.heapify(ready)
+    device_free = 0.0
+    compute_busy = 0.0
+    bucket_waiting = {
+        i: set(g.bucket_ready_groups(b)) for i, b in enumerate(g.buckets)
+    }
+    bucket_ready_at = {i: 0.0 for i, w in bucket_waiting.items() if not w}
+    group_to_buckets = {}
+    for i, w in bucket_waiting.items():
+        for gid in w:
+            group_to_buckets.setdefault(gid, []).append(i)
+    while ready:
+        _, gid = heapq.heappop(ready)
+        t = sim.estimator.group_time(g, gid)
+        end = device_free + t
+        done_at[gid] = end
+        device_free = end
+        compute_busy += t
+        for i in group_to_buckets.get(gid, ()):
+            bucket_waiting[i].discard(gid)
+            if not bucket_waiting[i]:
+                bucket_ready_at[i] = end
+        for d in succs[gid]:
+            indeg[d] -= 1
+            if indeg[d] == 0:
+                heapq.heappush(ready, (key[d], d))
+    assert len(done_at) == len(g.groups)
+
+    chan_free = 0.0
+    comm_busy = 0.0
+    comm_finish = 0.0
+    algos = g.bucket_algos
+    kinds = g.bucket_comm
+    buckets = g.buckets
+    order = sorted(bucket_ready_at.items(), key=lambda kv: (kv[1], kv[0]))
+    for i, ready_t in order:
+        nbytes = g.bucket_bytes(buckets[i])
+        if nbytes <= 0.0:
+            continue
+        c, d = comm_coeffs(sim.cluster, algos[i], kinds[i])
+        t = c * nbytes + d
+        start = max(chan_free, ready_t)
+        chan_free = start + t
+        comm_busy += t
+        comm_finish = chan_free
+    return {
+        "iteration_time": max(device_free, comm_finish),
+        "compute_time": compute_busy,
+        "comm_time": comm_busy,
+        "compute_finish": device_free,
+        "comm_finish": comm_finish,
+    }
+
+
+def _golden_walk(g0, seed, steps=25):
+    rng = random.Random(seed)
+    # exactly one incremental sim: _remember stamps the graph's base token,
+    # so a second one would clobber the first's lineage into full fallbacks
+    sims = {
+        "full": Simulator(n_devices=64, incremental=False),
+        "hier_full": Simulator(cluster=get_preset("a100_nvlink_ib"),
+                               incremental=False),
+        "delta": Simulator(n_devices=64, incremental=True),
+    }
+    parent = g0
+    for step in range(steps):
+        child = parent.clone()
+        for _ in range(rng.randint(1, 2)):
+            random_apply(child, rng.choice(ALL_METHODS), 1, rng)
+        for name, sim in sims.items():
+            want = seed_reference(child, sim)
+            got = sim.run(child)
+            for f, v in want.items():
+                assert getattr(got, f) == v, (step, name, f)
+        if rng.random() < 0.6:
+            parent = child
+    assert sims["delta"].stats["delta"] > 0
+
+
+def test_unified_matches_seed_arithmetic_transformer(transformer_graph):
+    _golden_walk(transformer_graph, seed=2)
+
+
+def test_unified_matches_seed_arithmetic_qwen(qwen_graph):
+    _golden_walk(qwen_graph, seed=4, steps=15)
+
+
+# ------------------------------------------------- timeline record schema
+def _check_records(timeline):
+    assert timeline, "empty timeline"
+    for e in timeline:
+        assert isinstance(e, tuple) and len(e) == 8, e
+        kind, ref = e[0], e[1]
+        assert isinstance(kind, str) and kind, e
+        assert isinstance(ref, int), e
+        start, end = e[6], e[7]
+        assert isinstance(start, float) and isinstance(end, float), e
+        assert 0.0 <= start <= end, e
+        if kind in ("compute", "fwd", "bwd"):
+            # compute spans are readable at both the legacy (2, 3) and the
+            # unified (6, 7) positions
+            assert (e[2], e[3]) == (start, end), e
+            assert e[4] == "compute" and e[5].startswith("stream"), e
+
+
+def test_timeline_schema_all_paths(transformer_graph):
+    g = transformer_graph
+    hier = get_preset("a100_nvlink_ib")
+    bg = (BackgroundTraffic("tp", 1 << 20, period=1e-5, count=8),)
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4)
+    paths = {
+        "serialized": Simulator(n_devices=64, keep_timeline=True,
+                                incremental=False),
+        "serialized_delta": Simulator(n_devices=64, keep_timeline=True),
+        "phased": Simulator(cluster=hier, streams=4, keep_timeline=True,
+                            incremental=False),
+        "phased_bg": Simulator(cluster=hier, streams=4, background=bg,
+                               keep_timeline=True, incremental=False),
+        "pipeline": Simulator(cluster=hier, streams=4, pipeline=sched,
+                              keep_timeline=True),
+    }
+    for name, sim in paths.items():
+        r = sim.run(g)
+        assert r.timeline is not None, name
+        _check_records(r.timeline)
+        if name == "serialized_delta":
+            # the delta path must emit the same schema
+            child = g.clone()
+            assert child.merge_buckets(0, 1) or True
+            r2 = sim.run(child)
+            _check_records(r2.timeline)
+        if name == "pipeline":
+            kinds = {e[0] for e in r.timeline}
+            assert "fwd" in kinds and "bwd" in kinds, kinds
+
+
+# ------------------------------------------------- zero-byte bucket parity
+@pytest.mark.parametrize("streams", [1, 4])
+def test_zero_byte_bucket_is_noop_both_paths(streams):
+    """A zero-byte gradient bucket must vanish from pricing identically on
+    the serialized channel and the phased engine (satellite: before PR 6
+    the streams>1 path materialized zero-byte jobs)."""
+    spec = get_preset("a100_nvlink_ib")
+    gz = chain_graph(grads=(3, 7, 11), grad_bytes=(1 << 18, 0, 1 << 18))
+    # control: the zero-byte tensor is not a gradient at all — identical
+    # compute stream, identical readiness of the nonzero buckets
+    gc = chain_graph(grads=(3, 11), grad_bytes=(1 << 18, 1 << 18))
+    sim = Simulator(cluster=spec, streams=streams, keep_timeline=True,
+                    incremental=False)
+    rz = sim.run(gz)
+    # the zero-byte bucket contributes nothing: no zero-span comm record
+    zero_recs = [e for e in rz.timeline
+                 if e[0] != "compute" and e[6] == e[7]]
+    assert not zero_recs, zero_recs
+    rc = sim.run(gc)
+    assert rz.comm_time == rc.comm_time
+    assert rz.comm_finish == rc.comm_finish
+    assert rz.iteration_time == rc.iteration_time
+
+
+def test_zero_byte_streams_parity_finish():
+    """With every bucket zero-byte, both engines price pure compute."""
+    g = chain_graph(grads=(3, 7, 11), grad_bytes=(0, 0, 0))
+    spec = get_preset("a100_nvlink_ib")
+    r1 = Simulator(cluster=spec, streams=1, incremental=False).run(g)
+    r4 = Simulator(cluster=spec, streams=4, incremental=False).run(g)
+    assert r1.comm_time == r4.comm_time == 0.0
+    assert r1.comm_finish == r4.comm_finish == 0.0
+    assert r1.iteration_time == r4.iteration_time == r1.compute_finish
+
+
+# ------------------------------------------------ keep_timeline lineage
+def test_keep_timeline_runs_stay_incremental(transformer_graph):
+    """keep_timeline sims must record/remember state: mutated children hit
+    the delta path and their timelines stay bit-identical to a
+    non-incremental replay (satellite: the seed bypassed ``_remember`` for
+    timeline runs, severing the lineage)."""
+    g = transformer_graph
+    sim = Simulator(n_devices=64, keep_timeline=True, incremental=True)
+    ref = Simulator(n_devices=64, keep_timeline=True, incremental=False)
+    r0 = sim.run(g)
+    assert r0.timeline is not None
+    rng = random.Random(9)
+    parent = g
+    for _ in range(6):
+        child = parent.clone()
+        random_apply(child, rng.choice(ALL_METHODS), 1, rng)
+        ri = sim.run(child)
+        rf = ref.run(child)
+        assert ri.iteration_time == rf.iteration_time
+        assert ri.timeline == rf.timeline
+        parent = child
+    assert sim.stats["delta"] > 0, \
+        "keep_timeline severed the incremental lineage"
+
+
+# ---------------------------------------------------- Plan v2 round-trip
+def test_plan_v2_records_pipeline_and_v1_loads(transformer_graph):
+    g = transformer_graph
+    spec = get_preset("a100_nvlink_ib")
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4)
+    sim = Simulator(cluster=spec, streams=4, pipeline=sched)
+    plan = Plan.from_graph(g, sim=sim, predicted=sim.cost(g))
+    assert plan.version == 2
+    assert plan.pipeline == sched.to_tuple()
+    d = plan._to_json()
+    back = Plan.from_dict(d)
+    assert back == plan
+    sim2 = back.simulator()
+    assert sim2.pipeline == sched
+    # a v1 dict (no pipeline field) still loads, normalized to v2
+    d1 = plan._to_json()
+    d1["version"] = 1
+    d1.pop("pipeline")
+    old = Plan.from_dict(d1)
+    assert old.version == 2 and old.pipeline is None
+    assert old.simulator().pipeline is None
