@@ -1,0 +1,237 @@
+"""Fig. G (ours): plan-cache warm starts — simulations-to-quality across
+the cluster preset zoo (DESIGN.md Sec. 12).
+
+The plan cache's two claims, measured leave-one-out over every
+:mod:`repro.cluster` preset:
+
+* **Exact-key replay is free.**  Re-compiling a point that is already in
+  the cache returns the stored Plan bit-identically (same strategy
+  fingerprint, same predicted price) with zero simulator evaluations —
+  the replay wall time is file IO, gated >= 20x faster than the cold
+  search by ``perf_search.py --smoke``.
+* **Warm starts transfer across topologies.**  For each preset P, the
+  search is warm-started from a cache holding the *other* presets' plans
+  only (never its own key, so every lookup is a genuine near miss): the
+  most similar cached strategy is re-applied onto the trace as the
+  backtracking search's start state.  Headline metric:
+  **simulations-to-quality** — how many candidate evaluations the warm
+  search needs before its best cost is within 2% of the cold search's
+  final cost, read off ``plan.provenance['quality_history']``.  The
+  acceptance bar (ISSUE 7): within-2% quality at <= 50% of the cold
+  search's total simulations on at least 5 of the 7 presets.
+
+    PYTHONPATH=src python benchmarks/fig_cache_warmstart.py [--quick]
+
+Writes ``experiments/perf/cache_warmstart.json`` and prints a CSV block.
+
+``--smoke`` is the nightly CI lane: the same leave-one-out sweep at a
+reduced budget that **fails** (exit 1) when fewer than
+``--smoke-min-pass`` presets meet the within-2%-at-<=``--max-sims-frac``
+floor, when any warm start prices worse than the trivial baseline it
+replaced, or when the exact-key replay stops being bit-identical.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import arch_graph, csv_row
+from repro.cluster import PRESETS
+from repro.core import Simulator
+from repro.plan import PlanCache, compile_plan
+from repro.plan.cache import cache_features, compile_key, knob_digest
+
+OUT = "experiments/perf"
+STREAMS = 4  # multi-stream pricing: algo/comm/chunk dimensions all active
+QUALITY_TOL = 0.02  # "within 2% of the cold search's final cost"
+
+
+def sims_to_quality(quality_history, target: float):
+    """First simulation count at which the search's best cost reached
+    ``target`` (None if it never did).  ``quality_history`` is the
+    provenance list of ``[simulations_so_far, best_cost]`` checkpoints."""
+    for s, c in quality_history:
+        if c <= target:
+            return s
+    return None
+
+
+def cold_compile(g0, spec, *, unchanged_limit, max_steps, seed):
+    return compile_plan(graph=g0, cluster=spec, streams=STREAMS,
+                        unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, seed=seed)
+
+
+def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 80,
+        max_steps: int = 150, seed: int = 0, verbose: bool = True,
+        smoke: bool = False) -> dict:
+    g0 = arch_graph(arch)
+    knobs = knob_digest(alpha=1.05, beta=10, unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, methods=None, seed=seed)
+
+    # ------------------------------------------------- cold pass (no cache)
+    cold: dict[str, dict] = {}
+    for name, spec in PRESETS.items():
+        t0 = time.perf_counter()
+        plan = cold_compile(g0, spec, unchanged_limit=unchanged_limit,
+                            max_steps=max_steps, seed=seed)
+        sim = Simulator(cluster=spec, streams=STREAMS)
+        cold[name] = {
+            "plan": plan,
+            "key": compile_key(g0, sim, knobs),
+            "features": cache_features(g0, sim, arch=arch, knobs=knobs),
+            "wall_s": time.perf_counter() - t0,
+        }
+        if verbose:
+            print(f"# cold {name}: "
+                  f"{plan.provenance['simulations']} sims, "
+                  f"{plan.predicted_iteration_time*1e3:.3f} ms", flush=True)
+
+    # ------------------------------------- leave-one-out warm pass + replay
+    rows = []
+    for name, spec in PRESETS.items():
+        cache = PlanCache(tempfile.mkdtemp(prefix=f"warmstart-{name}-"))
+        for other, c in cold.items():
+            if other != name:
+                cache.put(c["key"], c["plan"], c["features"])
+
+        t0 = time.perf_counter()
+        warm = compile_plan(graph=g0, cluster=spec, streams=STREAMS,
+                            unchanged_limit=unchanged_limit,
+                            max_steps=max_steps, seed=seed, cache=cache)
+        warm_wall = time.perf_counter() - t0
+        # the warm result was stored back: the same call is now an
+        # exact-key hit and must replay bit-identically
+        t0 = time.perf_counter()
+        replay = compile_plan(graph=g0, cluster=spec, streams=STREAMS,
+                              unchanged_limit=unchanged_limit,
+                              max_steps=max_steps, seed=seed, cache=cache)
+        replay_wall = time.perf_counter() - t0
+
+        cplan = cold[name]["plan"]
+        cold_sims = cplan.provenance["simulations"]
+        cold_best = cplan.predicted_iteration_time
+        target = cold_best * (1.0 + QUALITY_TOL)
+        prov = warm.provenance
+        stq = sims_to_quality(prov["quality_history"], target)
+        row = {
+            "preset": name,
+            "n_devices": spec.n_devices,
+            "cold_simulations": cold_sims,
+            "cold_best_s": cold_best,
+            "cold_sims_to_quality": sims_to_quality(
+                cplan.provenance["quality_history"], target),
+            "cold_wall_s": round(cold[name]["wall_s"], 3),
+            "warm_outcome": prov["cache"]["outcome"],
+            "warm_from": prov["cache"].get("warm_from_cluster"),
+            "warm_similarity": prov["cache"].get("warm_similarity"),
+            "warm_start_cost_s": prov["cache"].get("warm_start_cost"),
+            "warm_simulations": prov["simulations"],
+            "warm_best_s": warm.predicted_iteration_time,
+            "warm_sims_to_quality": stq,
+            "warm_wall_s": round(warm_wall, 3),
+            "within_2pct": warm.predicted_iteration_time <= target,
+            "sims_frac": (None if stq is None or not cold_sims
+                          else stq / cold_sims),
+            "replay_bit_identical": (
+                replay.provenance["cache"]["outcome"] == "hit"
+                and replay.strategy_fingerprint()
+                == warm.strategy_fingerprint()
+                and replay.predicted_iteration_time
+                == warm.predicted_iteration_time),
+            "replay_wall_s": round(replay_wall, 4),
+        }
+        # warm start must never price worse than the trivial baseline it
+        # replaced (the facade's ladder discards such states pre-search)
+        if row["warm_start_cost_s"] is not None:
+            row["warm_start_beats_trivial"] = (
+                row["warm_start_cost_s"]
+                < Simulator(cluster=spec, streams=STREAMS).cost(g0))
+        rows.append(row)
+        if verbose:
+            frac = "n/a" if row["sims_frac"] is None \
+                else f"{row['sims_frac']*100:.0f}%"
+            print(csv_row(
+                name, row["warm_outcome"], row["warm_from"] or "-",
+                f"cold={cold_sims}sims",
+                f"warm_to_quality={stq if stq is not None else 'never'}",
+                frac, f"within2pct={row['within_2pct']}",
+                f"replay={row['replay_wall_s']*1e3:.1f}ms"), flush=True)
+
+    passes = [r["preset"] for r in rows
+              if r["within_2pct"] and r["sims_frac"] is not None
+              and r["sims_frac"] <= 0.5]
+    out = {
+        "arch": arch,
+        "streams": STREAMS,
+        "unchanged_limit": unchanged_limit,
+        "max_steps": max_steps,
+        "seed": seed,
+        "quality_tolerance": QUALITY_TOL,
+        "presets": rows,
+        "pass_within2pct_at_half_sims": passes,
+        "n_pass": len(passes),
+        "n_presets": len(rows),
+    }
+    if verbose:
+        print(f"# warm start reaches within {QUALITY_TOL*100:.0f}% of cold "
+              f"quality at <=50% of cold simulations on "
+              f"{len(passes)}/{len(rows)} presets: {passes}")
+    if not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        path = os.path.join(OUT, "cache_warmstart.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if verbose:
+            print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="nightly CI lane: reduced budget, exit 1 below "
+                         "the warm-start sims-to-quality floor")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke-min-pass", type=int, default=5,
+                    help="smoke floor: at least this many presets must "
+                         "reach within-2% quality at <= --max-sims-frac of "
+                         "the cold search's simulations")
+    ap.add_argument("--max-sims-frac", type=float, default=0.5)
+    args = ap.parse_args()
+    quick = args.quick or args.smoke
+    out = run(arch=args.arch,
+              unchanged_limit=40 if quick else 80,
+              max_steps=80 if quick else 150,
+              smoke=args.smoke)
+    if args.smoke:
+        bad = []
+        passes = [r["preset"] for r in out["presets"]
+                  if r["within_2pct"] and r["sims_frac"] is not None
+                  and r["sims_frac"] <= args.max_sims_frac]
+        if len(passes) < args.smoke_min_pass:
+            bad.append(f"only {len(passes)}/{out['n_presets']} presets "
+                       f"reach within-2% quality at "
+                       f"<={args.max_sims_frac*100:.0f}% of cold "
+                       f"simulations (floor {args.smoke_min_pass}): "
+                       f"{passes}")
+        for r in out["presets"]:
+            if not r["replay_bit_identical"]:
+                bad.append(f"{r['preset']}: exact-key replay not "
+                           f"bit-identical")
+            if r.get("warm_start_beats_trivial") is False:
+                bad.append(f"{r['preset']}: warm start priced worse than "
+                           f"the trivial baseline it replaced")
+        if bad:
+            print(f"SMOKE FAIL: {bad}")
+            raise SystemExit(1)
+        print(f"smoke OK: {len(passes)}/{out['n_presets']} presets within "
+              f"2% at <={args.max_sims_frac*100:.0f}% sims "
+              f"(floor {args.smoke_min_pass}); replay bit-identical on all")

@@ -10,11 +10,17 @@ per-bucket collective algorithm all move, and on inter-host-bottlenecked
 presets the hierarchical algorithm beats the flat ring outright.
 
     PYTHONPATH=src python benchmarks/fig_cluster_sweep.py [--quick]
+        [--cache DIR]
 
-Writes ``experiments/perf/cluster_sweep.json`` and prints a CSV block.
+``--cache DIR`` routes every ``compile()`` through a
+:class:`repro.plan.PlanCache` there: a re-run of the sweep replays every
+preset from the cache (the hit/miss/warm-start counts are reported and
+recorded in the JSON).  Writes ``experiments/perf/cluster_sweep.json``
+and prints a CSV block.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -33,11 +39,11 @@ OUT = "experiments/perf"
 
 
 def sweep_one(g0, name: str, spec: ClusterSpec, *, unchanged_limit: int,
-              max_steps: int, seed: int = 0) -> dict:
+              max_steps: int, seed: int = 0, cache=None) -> dict:
     base = evaluate_baselines(g0, Simulator(cluster=spec))
     plan = compile_plan(graph=g0, cluster=spec,
                         unchanged_limit=unchanged_limit,
-                        max_steps=max_steps, seed=seed)
+                        max_steps=max_steps, seed=seed, cache=cache)
     total_grad = sum(g0.bucket_bytes(b) for b in g0.buckets)
     d = plan.describe()
     prov = plan.provenance
@@ -67,18 +73,24 @@ def sweep_one(g0, name: str, spec: ClusterSpec, *, unchanged_limit: int,
         # compare what the search *chose*, not the per-preset pricing
         # context baked into plan.fingerprint()
         "fingerprint": plan.strategy_fingerprint(),
+        "cache_outcome": prov.get("cache", {}).get("outcome"),
     }
 
 
 def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 80,
-        max_steps: int = 150, seed: int = 0, verbose: bool = True) -> dict:
+        max_steps: int = 150, seed: int = 0, verbose: bool = True,
+        cache=None) -> dict:
+    if isinstance(cache, str):
+        from repro.plan import PlanCache
+
+        cache = PlanCache(cache)
     g0 = arch_graph(arch)
     specs = {"flat_tpu_256": ClusterSpec.flat(TPU_V5E, 256), **PRESETS}
     rows = []
     for name, spec in specs.items():
         t0 = time.perf_counter()
         row = sweep_one(g0, name, spec, unchanged_limit=unchanged_limit,
-                        max_steps=max_steps, seed=seed)
+                        max_steps=max_steps, seed=seed, cache=cache)
         row["wall_s"] = round(time.perf_counter() - t0, 2)
         rows.append(row)
         if verbose:
@@ -110,11 +122,17 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 80,
         "distinct_strategies": distinct,
         "hier_beats_ring_on": hier_wins,
     }
+    if cache is not None:
+        out["cache"] = {"root": cache.root, **cache.stats}
     if verbose:
         print(f"# {distinct}/{len(rows)} topologies produced distinct "
               f"winning strategies")
         for k, v in sorted(hier_wins.items()):
             print(f"# hierarchical beats flat ring {v:.1f}x on {k}")
+        if cache is not None:
+            print(f"# cache {cache.root}: {cache.stats['hits']} hits, "
+                  f"{cache.stats['misses']} misses, "
+                  f"{cache.stats['warm_starts']} warm starts")
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, "cluster_sweep.json")
     with open(path, "w") as f:
@@ -125,6 +143,12 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 80,
 
 
 if __name__ == "__main__":
-    quick = "--quick" in sys.argv
-    run(unchanged_limit=40 if quick else 80,
-        max_steps=80 if quick else 150)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="route compile() through a PlanCache here "
+                         "(re-runs replay from the cache)")
+    args = ap.parse_args()
+    run(unchanged_limit=40 if args.quick else 80,
+        max_steps=80 if args.quick else 150,
+        cache=args.cache)

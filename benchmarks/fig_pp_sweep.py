@@ -24,6 +24,11 @@ many presets the two searches pick different strategies
 strategy under the schedule it would actually run on.
 
     PYTHONPATH=src python benchmarks/fig_pp_sweep.py [--quick] [--smoke]
+        [--cache DIR]
+
+``--cache DIR`` routes both searches per preset through a
+:class:`repro.plan.PlanCache` there (hit/warm-start counts are reported
+and recorded in the JSON) — a re-run of the sweep replays every plan.
 
 ``--smoke`` is the CI lane: three presets, a reduced search budget, and a
 hard failure (exit 1) when the pipeline pricing goes insane (bubble
@@ -73,14 +78,14 @@ def pp_models(g0, spec):
 
 
 def sweep_one(g0, name: str, spec, *, unchanged_limit: int, max_steps: int,
-              seed: int = 0) -> dict:
+              seed: int = 0, cache=None) -> dict:
     sched, bg, pbytes = pp_models(g0, spec)
     plan_bg = compile_plan(graph=g0, cluster=spec, streams=STREAMS,
                            background=(bg,), unchanged_limit=unchanged_limit,
-                           max_steps=max_steps, seed=seed)
+                           max_steps=max_steps, seed=seed, cache=cache)
     plan_pp = compile_plan(graph=g0, cluster=spec, streams=STREAMS,
                            pipeline=sched, unchanged_limit=unchanged_limit,
-                           max_steps=max_steps, seed=seed)
+                           max_steps=max_steps, seed=seed, cache=cache)
     # regret: enact the blind-model strategy under the schedule it would
     # actually run on, and compare against the pipeline-aware pick
     sim_pp = Simulator(cluster=spec, streams=STREAMS, pipeline=sched)
@@ -110,12 +115,21 @@ def sweep_one(g0, name: str, spec, *, unchanged_limit: int, max_steps: int,
         "strategies_differ": differ,
         "bg_regret": (r_bg_under_pp.iteration_time / r_pp.iteration_time
                       if r_pp.iteration_time > 0 else 1.0),
+        "cache_outcomes": [
+            p.provenance.get("cache", {}).get("outcome")
+            for p in (plan_bg, plan_pp)
+        ] if cache is not None else None,
     }
 
 
 def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         max_steps: int = 80, seed: int = 0, verbose: bool = True,
-        batch: int = 2, seq: int = 32, smoke: bool = False) -> dict:
+        batch: int = 2, seq: int = 32, smoke: bool = False,
+        cache=None) -> dict:
+    if isinstance(cache, str):
+        from repro.plan import PlanCache
+
+        cache = PlanCache(cache)
     # comm-bound regime: gradient volume is model-sized while compute
     # shrinks with tokens, so comm-schedule choices dominate the ranking
     g0 = arch_graph(arch, batch=batch, seq=seq)
@@ -125,7 +139,7 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         spec = PRESETS[name]
         t0 = time.perf_counter()
         row = sweep_one(g0, name, spec, unchanged_limit=unchanged_limit,
-                        max_steps=max_steps, seed=seed)
+                        max_steps=max_steps, seed=seed, cache=cache)
         row["wall_s"] = round(time.perf_counter() - t0, 2)
         rows.append(row)
         if verbose:
@@ -149,10 +163,16 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         "presets": rows,
         "strategies_differ_on": diff,
     }
+    if cache is not None:
+        out["cache"] = {"root": cache.root, **cache.stats}
     if verbose:
         print(f"# pipeline-aware search picks a different strategy than "
               f"the background-traffic model on {len(diff)}/{len(rows)} "
               f"presets: {diff}")
+        if cache is not None:
+            print(f"# cache {cache.root}: {cache.stats['hits']} hits, "
+                  f"{cache.stats['misses']} misses, "
+                  f"{cache.stats['warm_starts']} warm starts")
     if not smoke:
         os.makedirs(OUT, exist_ok=True)
         path = os.path.join(OUT, "pp_sweep.json")
@@ -171,12 +191,15 @@ if __name__ == "__main__":
                          "when pipeline pricing is insane or the models "
                          "stop disagreeing on every smoke preset")
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="route compile() through a PlanCache here "
+                         "(re-runs replay from the cache)")
     args = ap.parse_args()
     quick = args.quick or args.smoke
     out = run(arch=args.arch,
               unchanged_limit=20 if quick else 40,
               max_steps=40 if quick else 80,
-              smoke=args.smoke)
+              smoke=args.smoke, cache=args.cache)
     if args.smoke:
         bad = []
         for r in out["presets"]:

@@ -32,7 +32,11 @@ through the ``repro.plan.compile()`` facade and fails when the facade adds
 more than ``--smoke-max-facade-overhead`` (default 5%) over the direct
 ``backtracking_search`` wall time, or when its plan's predicted cost
 drifts from the direct search's best (the facade must be wiring, not a
-fork of the pipeline).
+fork of the pipeline).  Finally it compiles through an empty
+``repro.plan.PlanCache``: the cold trajectory must be identical to the
+uncached search, and the exact-key replay must be bit-identical and at
+least ``--smoke-min-cache-speedup`` (default 20x) faster than the cold
+compile it replays.
 """
 from __future__ import annotations
 
@@ -205,6 +209,9 @@ def main():
     ap.add_argument("--smoke-max-facade-overhead", type=float, default=0.05,
                     help="ceiling on compile() facade overhead relative to "
                          "the direct backtracking_search wall time")
+    ap.add_argument("--smoke-min-cache-speedup", type=float, default=20.0,
+                    help="floor on the plan-cache exact-key replay's "
+                         "speedup over the cold compile it replays")
     args = ap.parse_args()
     if args.smoke:
         args.archs = "transformer-paper"
@@ -274,6 +281,52 @@ def main():
                   f"{fac['facade_wall_seconds']}s "
                   f"({fac['overhead']*100:.2f}% overhead)", flush=True)
             report[arch]["facade"] = fac
+            # plan cache: a cold compile through an empty cache must be
+            # trajectory-identical to the direct search (initial=None
+            # draws the same RNG stream), and its exact-key replay must
+            # be bit-identical and pay file IO only
+            import tempfile
+
+            from repro.plan import PlanCache
+
+            pcache = PlanCache(tempfile.mkdtemp(prefix="perf-cache-"))
+            t0 = time.perf_counter()
+            cold_plan = compile_plan(graph=arch_graph(arch),
+                                     unchanged_limit=10**9,
+                                     max_steps=args.steps, seed=0,
+                                     cache=pcache)
+            cold_wall = time.perf_counter() - t0
+            # min-of-5: a single replay is a few ms of file IO, small
+            # enough for one GC pass over this process's searched-graph
+            # heap to dominate a lone sample
+            replay_wall = float("inf")
+            for _ in range(5):
+                t0 = time.perf_counter()
+                replay = compile_plan(graph=arch_graph(arch),
+                                      unchanged_limit=10**9,
+                                      max_steps=args.steps, seed=0,
+                                      cache=pcache)
+                replay_wall = min(replay_wall, time.perf_counter() - t0)
+            crep = {
+                "cold_wall_seconds": round(cold_wall, 3),
+                "replay_wall_seconds": round(replay_wall, 4),
+                "speedup": round(cold_wall / replay_wall, 1),
+                "outcome": replay.provenance["cache"]["outcome"],
+                "replay_bit_identical": (
+                    replay == cold_plan
+                    and replay.strategy_fingerprint()
+                    == cold_plan.strategy_fingerprint()
+                    and replay.predicted_iteration_time
+                    == cold_plan.predicted_iteration_time),
+                "cold_trajectory_identical": (
+                    cold_plan.predicted_iteration_time
+                    == srch["incremental"]["best_cost"]),
+            }
+            print(f"  plan cache: cold {crep['cold_wall_seconds']}s, "
+                  f"replay {crep['replay_wall_seconds']}s "
+                  f"({crep['speedup']}x, outcome={crep['outcome']})",
+                  flush=True)
+            report[arch]["plan_cache"] = crep
     if not args.skip_deepseek:
         arch = "deepseek-v2-236b"
         print(f"=== {arch} (scale probe, budget {args.seed_budget}s) ===",
@@ -321,6 +374,22 @@ def main():
                       f"{fac['overhead']*100:.2f}% exceeds "
                       f"{args.smoke_max_facade_overhead*100:.0f}%")
                 raise SystemExit(1)
+        caches = {a: r["plan_cache"] for a, r in report.items()
+                  if "plan_cache" in r}
+        for a, crep in caches.items():
+            if crep["outcome"] != "hit" or not crep["replay_bit_identical"]:
+                print(f"SMOKE FAIL: {a}: plan-cache replay not a "
+                      f"bit-identical exact-key hit ({crep})")
+                raise SystemExit(1)
+            if not crep["cold_trajectory_identical"]:
+                print(f"SMOKE FAIL: {a}: compiling through an empty cache "
+                      f"changed the search trajectory ({crep})")
+                raise SystemExit(1)
+            if crep["speedup"] < args.smoke_min_cache_speedup:
+                print(f"SMOKE FAIL: {a}: plan-cache replay speedup "
+                      f"{crep['speedup']}x below "
+                      f"{args.smoke_min_cache_speedup}x floor")
+                raise SystemExit(1)
         print(f"smoke OK: incremental/seed throughput {speedups}, "
               f"chunked multi-stream {chunked}, unified serialized "
               f"{unified} "
@@ -328,7 +397,10 @@ def main():
               f"{args.smoke_min_speedup_chunked}x / "
               f"{args.smoke_min_speedup_unified}x); facade overhead "
               f"{ {a: f['overhead'] for a, f in facades.items()} } "
-              f"(ceiling {args.smoke_max_facade_overhead*100:.0f}%)")
+              f"(ceiling {args.smoke_max_facade_overhead*100:.0f}%); "
+              f"cache replay "
+              f"{ {a: c['speedup'] for a, c in caches.items()} }x "
+              f"(floor {args.smoke_min_cache_speedup}x, bit-identical)")
 
 
 if __name__ == "__main__":

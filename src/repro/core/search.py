@@ -71,6 +71,10 @@ class SearchResult:
     simulations: int
     wall_time: float
     history: list  # (step, best_cost)
+    # (simulations-so-far, best_cost) at every improvement — the
+    # simulations-to-quality curve the plan-cache warm-start benchmark
+    # gates on (DESIGN.md Sec. 12)
+    quality_history: list = dataclasses.field(default_factory=list)
 
 
 # --------------------------------------------------------- worker-pool eval
@@ -157,7 +161,16 @@ def backtracking_search(
     max_steps: int | None = None,
     on_step: Callable | None = None,
     workers: int | None = None,
+    initial: FusionGraph | None = None,
 ) -> SearchResult:
+    """``initial`` injects a warm start state (e.g. a cached plan's
+    strategy re-applied onto ``g0`` — see :mod:`repro.plan.cache`): it is
+    costed and enqueued alongside ``g0``, and since the incumbent starts
+    at the cheaper of the two, the search can never return a plan worse
+    than its own start state.  ``initial_cost`` still reports ``g0``'s
+    cost (the trivial baseline), so speedup-vs-initial stays comparable
+    between warm and cold runs.  ``initial=None`` draws the identical RNG
+    stream as before — cold trajectories are unchanged."""
     rng = random.Random(seed)
     tick = itertools.count()
     cost_cache: dict = {}
@@ -188,6 +201,14 @@ def backtracking_search(
     unchanged = 0
     steps = 0
     history = [(0, c0)]
+    quality_history = [(sims, c0)]
+    if initial is not None and initial.fast_signature() != g0.fast_signature():
+        ci = cost(initial)
+        if ci < best_cost:
+            best, best_cost = initial, ci
+            history.append((0, ci))
+        quality_history.append((sims, best_cost))
+        heapq.heappush(q, (ci, next(tick), initial))
 
     try:
         while q and unchanged < unchanged_limit:
@@ -228,6 +249,7 @@ def backtracking_search(
                     best, best_cost = h2, c2
                     improved = True
                     history.append((steps, best_cost))
+                    quality_history.append((sims, best_cost))
                 if c2 <= alpha * best_cost and len(q) < max_queue:
                     heapq.heappush(q, (c2, next(tick), h2))
             # Alg. 1: H_opt "unchanged" is per dequeued step, not per method
@@ -248,4 +270,5 @@ def backtracking_search(
         simulations=sims,
         wall_time=_time.perf_counter() - t0,
         history=history,
+        quality_history=quality_history,
     )

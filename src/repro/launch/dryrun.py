@@ -455,10 +455,13 @@ def price_plan(path: str, cluster: str | None = None,
     """Price a saved :class:`repro.plan.Plan` artifact without re-tracing
     or re-searching (``--plan <file>``): the serialized-channel sum and the
     event-engine finish of the plan's recorded bucket volumes, on the
-    plan's own cluster fingerprint or an explicit ``--cluster`` override
-    (the override is reported as ``cluster_fingerprint_match: false`` when
-    it differs from what the plan was searched against)."""
-    from repro.plan import Plan
+    plan's own cluster fingerprint or an explicit ``--cluster`` override.
+    An override that differs from what the plan was searched against is
+    reported field-by-field (``cluster_fingerprint_diff``: which levels
+    and which constants disagree) so the mismatch is diagnosable, and the
+    CLI exits nonzero."""
+    from repro.plan import (Plan, cluster_fingerprint,
+                            cluster_fingerprint_diff)
 
     plan = Plan.load(path)
     spec = get_preset(cluster) if cluster else None
@@ -469,12 +472,18 @@ def price_plan(path: str, cluster: str | None = None,
         "provenance": plan.provenance,
         "pricing": plan.price(cluster=spec, streams=streams),
     }
+    if (spec is not None and plan.cluster is not None
+            and not result["pricing"]["cluster_fingerprint_match"]):
+        result["pricing"]["cluster_fingerprint_diff"] = \
+            cluster_fingerprint_diff(plan.cluster, cluster_fingerprint(spec))
     if verbose:
         p = result["pricing"]
         print(f"  plan {path} [{result['fingerprint']}]: "
               f"{p['buckets']} buckets, "
               f"{p['total_grad_bytes']:.3e} B on {p['cluster']['name']} "
               f"(fingerprint match: {p['cluster_fingerprint_match']})")
+        for line in p.get("cluster_fingerprint_diff", ()):
+            print(f"    fingerprint diff: {line}")
         print(f"    serialized comm {p['serialized_comm_s']*1e3:.3f} ms, "
               f"{p['streams']}-stream engine finish "
               f"{p['engine_finish_s']*1e3:.3f} ms, searched prediction "
@@ -612,8 +621,15 @@ def main():
     args = ap.parse_args()
 
     if args.plan:
-        price_plan(args.plan, cluster=args.cluster, streams=args.streams,
-                   out_dir=args.out)
+        result = price_plan(args.plan, cluster=args.cluster,
+                            streams=args.streams, out_dir=args.out)
+        diff = result["pricing"].get("cluster_fingerprint_diff")
+        if diff:
+            print(f"CLUSTER MISMATCH: plan {args.plan} was searched "
+                  f"against a different topology than --cluster "
+                  f"{args.cluster} ({len(diff)} field(s) differ; "
+                  f"first: {diff[0]})")
+            raise SystemExit(1)
         return
 
     pp = None

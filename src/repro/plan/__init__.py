@@ -13,20 +13,31 @@ produces one (trace -> profile -> search).  From a plan:
   (equal ``fast_signature()`` and simulated cost);
 * ``plan.price()`` prices the saved gradient traffic without re-tracing
   (``python -m repro.launch.dryrun --plan <file>``);
-* ``plan.save(path)`` / ``Plan.load(path)`` round-trip JSON, with a
-  migration shim for legacy v0 ``strategy.json`` files and
-  :class:`PlanError` on corruption / foreign versions / cluster
-  mismatches.
+* ``plan.save(path)`` / ``Plan.load(path)`` round-trip JSON (atomic
+  writes — no torn artifacts), with a migration shim for legacy v0
+  ``strategy.json`` files and :class:`PlanError` on corruption / foreign
+  versions / cluster mismatches;
+* :class:`PlanCache` (``repro.plan.cache``) stores compiled plans
+  content-addressed on disk — ``compile(cache=...)`` replays exact-key
+  hits bit-identically and warm-starts the search from the nearest
+  cached strategy on a near miss (``python -m repro.plan.cache
+  ls|stats|prune|verify`` to inspect a cache directory).
 
-See DESIGN.md Sec. 10.  jax-free except ``compile()``'s tracing mode.
+See DESIGN.md Sec. 10 and 12.  jax-free except ``compile()``'s tracing
+mode.
 """
 from .artifact import (ClusterMismatchError, PLAN_VERSION, Plan, PlanError,
                        PlanVersionError, SCHEMA, cluster_fingerprint,
-                       estimator_name)
+                       cluster_fingerprint_diff, estimator_name)
+from .cache import (PlanCache, cache_features, compile_key, graph_digest,
+                    knob_digest, open_cache, similarity, warm_start_state)
 from .facade import compile, compile_plan, trace_model_graph
 
 __all__ = [
-    "ClusterMismatchError", "PLAN_VERSION", "Plan", "PlanError",
-    "PlanVersionError", "SCHEMA", "cluster_fingerprint", "estimator_name",
-    "compile", "compile_plan", "trace_model_graph",
+    "ClusterMismatchError", "PLAN_VERSION", "Plan", "PlanCache",
+    "PlanError", "PlanVersionError", "SCHEMA", "cache_features",
+    "cluster_fingerprint", "cluster_fingerprint_diff", "compile",
+    "compile_key", "compile_plan", "estimator_name", "graph_digest",
+    "knob_digest", "open_cache", "similarity", "trace_model_graph",
+    "warm_start_state",
 ]

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 from typing import Sequence
 
 from ..cluster import ClusterSpec, LinkLevel, comm_time
@@ -79,6 +80,49 @@ def cluster_fingerprint(spec: ClusterSpec) -> tuple:
             tuple((l.name, int(l.degree), float(l.bandwidth),
                    float(l.alpha), float(l.straggler), float(l.contention))
                   for l in spec.levels))
+
+
+_LEVEL_FIELDS = ("name", "degree", "bandwidth", "alpha", "straggler",
+                 "contention")
+
+
+def cluster_fingerprint_diff(a: tuple, b: tuple) -> list[str]:
+    """Human-readable field-level differences between two cluster
+    fingerprints — which levels and which per-level constants disagree —
+    so a ``--plan`` / ``--cluster`` mismatch reports *what* differs
+    instead of only that something does.  Empty list iff equal.  Accepts
+    either tuple- or (JSON round-tripped) list-shaped fingerprints."""
+    a, b = _tuplize(_listize(a)), _tuplize(_listize(b))
+    if a == b:
+        return []
+    if a[0] != b[0]:
+        return [f"topology family: {a[0]} != {b[0]}"]
+    diffs: list[str] = []
+    if a[0] == "flat":
+        if a[1] != b[1]:
+            diffs.append(f"n_devices: {a[1]} != {b[1]}")
+        for (ka, va), (kb, vb) in zip(a[2], b[2]):
+            if va != vb:
+                diffs.append(f"hw.{ka}: {va} != {vb}")
+        return diffs or [f"flat fingerprint differs: {a} != {b}"]
+    if a[1] != b[1]:
+        diffs.append(f"name: {a[1]!r} != {b[1]!r}")
+    la, lb = a[2], b[2]
+    if len(la) != len(lb):
+        diffs.append(f"levels: {len(la)} != {len(lb)} "
+                     f"({[l[0] for l in la]} vs {[l[0] for l in lb]})")
+    for i, (lvl_a, lvl_b) in enumerate(zip(la, lb)):
+        for f, va, vb in zip(_LEVEL_FIELDS, lvl_a, lvl_b):
+            if va != vb:
+                diffs.append(f"level[{i}].{f}: {va} != {vb}")
+    return diffs or [f"fingerprint differs: {a} != {b}"]
+
+
+def _listize(x):
+    """Mirror of ``_tuplize`` so diffing works on raw JSON shapes too."""
+    if isinstance(x, tuple):
+        return [_listize(e) for e in x]
+    return x
 
 
 def _spec_from_fingerprint(fp: tuple) -> ClusterSpec:
@@ -288,10 +332,13 @@ class Plan:
         if cluster is not None:
             if (self.cluster is not None
                     and cluster_fingerprint(cluster) != self.cluster):
+                diff = cluster_fingerprint_diff(
+                    self.cluster, cluster_fingerprint(cluster))
                 raise ClusterMismatchError(
                     f"plan was searched against "
                     f"{spec.name if spec else '<unknown>'} but "
-                    f"{cluster.name} was requested; re-run compile() to "
+                    f"{cluster.name} was requested "
+                    f"({'; '.join(diff)}); re-run compile() to "
                     f"target a different cluster")
             spec = cluster
         if self.estimator != "oracle" and estimator is None:
@@ -435,8 +482,21 @@ class Plan:
         return d
 
     def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self._to_json(), f, indent=1)
+        """Atomic write: temp file in the target directory + ``os.replace``,
+        so an interrupted save can never leave a torn JSON artifact (a
+        half-written plan in a cache directory must stay a *miss*, not
+        become a crash or a silently-wrong strategy)."""
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self._to_json(), f, indent=1)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
 
     @staticmethod
     def load(path: str) -> "Plan":

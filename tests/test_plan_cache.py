@@ -1,0 +1,339 @@
+"""Plan-cache + warm-started search property tests (DESIGN.md Sec. 12):
+
+* an exact-key cache hit replays a Plan with equal ``fast_signature()``,
+  bit-equal simulated cost and identical ``strategy_fingerprint()`` to the
+  cold-compiled one — and burns zero simulator evaluations;
+* warm-started search never returns a plan worse than its own start state,
+  and the re-application contract resets the per-bucket dimensions the new
+  simulator cannot price;
+* every failure is a *miss*, never a crash: truncated artifacts (torn
+  writes), corrupt indexes, foreign files — and concurrent writers on the
+  same key leave a readable index;
+* ``Plan.save`` is atomic (temp + ``os.replace``), and the
+  ``--plan``/``--cluster`` mismatch diff names the differing fields.
+"""
+import json
+import os
+import random
+import subprocess
+import sys
+import tempfile
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import ClusterSpec, get_preset
+from repro.core import (ALL_METHODS, FusionGraph, PrimOp, Simulator,
+                        backtracking_search, profile_graph, random_apply)
+from repro.core.graph import EW
+from repro.core.hw import TPU_V5E
+from repro.plan import (ClusterMismatchError, Plan, PlanCache,
+                        cluster_fingerprint, cluster_fingerprint_diff,
+                        compile_key, compile_plan, graph_digest, knob_digest,
+                        similarity, warm_start_state)
+from repro.plan.cache import cache_features, open_cache
+
+SPEC = get_preset("a100_nvlink_ib")
+OTHER = get_preset("h100_superpod")
+
+
+def chain_graph(n=16, grads=(3, 6, 9, 12), grad_bytes=float(1 << 20)):
+    prims = []
+    for i in range(n):
+        prims.append(PrimOp(
+            pid=i, op_type="mul", category=EW, flops=100.0, in_bytes=64.0,
+            out_bytes=64.0, time=1e-6,
+            grad_param=list(grads).index(i) if i in grads else -1,
+            grad_bytes=grad_bytes if i in grads else 0.0,
+            grad_sig="f32" if i in grads else ""))
+    return profile_graph(FusionGraph(prims, [(i, i + 1) for i in range(n - 1)]))
+
+
+def mutated(base, seed, n_mut):
+    rng = random.Random(seed)
+    g = base.clone()
+    for _ in range(n_mut):
+        random_apply(g, rng.choice(ALL_METHODS), 1, rng)
+    return g
+
+
+KNOBS = dict(unchanged_limit=25, max_steps=20)
+
+
+# ----------------------------------------------------------- exact-key hits
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_exact_hit_is_bit_identical_to_cold(seed):
+    # tempfile (not a pytest fixture): the _propcheck shim's @given wrapper
+    # hides the signature from pytest's fixture resolution
+    d = tempfile.mkdtemp(prefix="plan-cache-")
+    g0 = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=4)
+    cache = PlanCache(d)
+    cold = compile_plan(graph=g0, cluster=SPEC, streams=4, seed=seed,
+                        cache=cache, **KNOBS)
+    assert cold.provenance["cache"]["outcome"] == "cold"
+    hit = compile_plan(graph=g0, cluster=SPEC, streams=4, seed=seed,
+                       cache=cache, **KNOBS)
+    assert hit.provenance["cache"]["outcome"] == "hit"
+    # the replay is the cold artifact: equal plan, fingerprints, price,
+    # and the re-applied strategy state is signature-identical
+    assert hit == cold
+    assert hit.fingerprint() == cold.fingerprint()
+    assert hit.strategy_fingerprint() == cold.strategy_fingerprint()
+    assert hit.predicted_iteration_time == cold.predicted_iteration_time
+    g_hit, g_cold = hit.to_graph(g0), cold.to_graph(g0)
+    assert g_hit.fast_signature() == g_cold.fast_signature()
+    assert sim.cost(g_hit) == sim.cost(g_cold) \
+        == cold.predicted_iteration_time
+    assert cache.stats["hits"] == 1
+
+
+def test_key_separates_graph_cluster_and_knobs():
+    g0, g1 = chain_graph(), chain_graph(n=20, grads=(3, 7))
+    sim_a = Simulator(cluster=SPEC, streams=4)
+    sim_b = Simulator(cluster=OTHER, streams=4)
+    k1 = knob_digest(alpha=1.05, beta=10, unchanged_limit=25, max_steps=20,
+                     methods=None, seed=0)
+    k2 = knob_digest(alpha=1.05, beta=10, unchanged_limit=25, max_steps=20,
+                     methods=None, seed=1)
+    assert compile_key(g0, sim_a, k1) == compile_key(g0, sim_a, k1)
+    assert compile_key(g0, sim_a, k1) != compile_key(g1, sim_a, k1)
+    assert compile_key(g0, sim_a, k1) != compile_key(g0, sim_b, k1)
+    assert compile_key(g0, sim_a, k1) != compile_key(g0, sim_a, k2)
+    # strategy state is part of the content address
+    assert graph_digest(g0) != graph_digest(mutated(g0, 3, 6))
+
+
+# --------------------------------------------------------------- warm start
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_warm_start_never_worse_than_start_state(seed):
+    d = tempfile.mkdtemp(prefix="plan-cache-")
+    g0 = chain_graph()
+    cache = PlanCache(d)
+    compile_plan(graph=g0, cluster=SPEC, streams=4, seed=seed, cache=cache,
+                 **KNOBS)
+    warm = compile_plan(graph=g0, cluster=OTHER, streams=4, seed=seed,
+                        cache=cache, **KNOBS)
+    prov = warm.provenance["cache"]
+    if prov["outcome"] == "warm":
+        # the incumbent starts at the warm state: the final plan can only
+        # be at least as good
+        assert warm.predicted_iteration_time <= prov["warm_start_cost"]
+        # ... and the warm state beat the trivial baseline by construction
+        assert prov["warm_start_cost"] < Simulator(
+            cluster=OTHER, streams=4).cost(g0)
+    else:
+        assert prov["outcome"] == "cold"
+
+
+def test_search_initial_injection_never_worse():
+    g0 = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=4)
+    start = mutated(g0, 11, 12)
+    res = backtracking_search(g0, sim, unchanged_limit=5, max_steps=4,
+                              seed=0, initial=start)
+    assert res.best_cost <= sim.cost(start)
+    assert res.best_cost <= sim.cost(g0)
+    assert res.initial_cost == sim.cost(g0)
+    # quality history: sims nondecreasing, cost nonincreasing
+    sims = [s for s, _ in res.quality_history]
+    costs = [c for _, c in res.quality_history]
+    assert sims == sorted(sims)
+    assert costs == sorted(costs, reverse=True)
+    assert costs[-1] == res.best_cost
+
+
+def test_warm_start_resets_inapplicable_dimensions():
+    g0 = chain_graph()
+    rich = mutated(g0, 5, 14)
+    plan = Plan.from_graph(rich, sim=Simulator(cluster=SPEC, streams=4))
+    # serialized channel: comm-kind and chunk flips are unpriceable —
+    # the re-applied state must reset them to the defaults
+    ser = warm_start_state(plan, g0, Simulator(cluster=SPEC, streams=1))
+    assert all(k == "ar" for k in ser.bucket_comm)
+    assert all(c == 1 for c in ser.bucket_chunks)
+    assert ser.bucket_algos == list(plan.bucket_algos)[:len(ser.buckets)]
+    # flat spec: algorithm-blind too
+    flat = warm_start_state(plan, g0, Simulator(hw=TPU_V5E, n_devices=64))
+    assert all(a == "ring" for a in flat.bucket_algos)
+    # multi-stream engine keeps the full strategy: signature round-trips
+    full = warm_start_state(plan, g0, Simulator(cluster=SPEC, streams=4))
+    assert full.fast_signature() == rich.fast_signature()
+    # wrong trace family -> None (ladder falls through, no crash)
+    assert warm_start_state(plan, chain_graph(n=20, grads=(3, 7)),
+                            Simulator(cluster=SPEC, streams=4)) is None
+
+
+def test_similarity_ranking_prefers_same_arch_then_cluster():
+    g0 = chain_graph()
+    req = cache_features(g0, Simulator(cluster=SPEC, streams=4), arch="a")
+    same_arch_other_cluster = cache_features(
+        g0, Simulator(cluster=OTHER, streams=4), arch="a")
+    other_graph_same_cluster = cache_features(
+        chain_graph(n=20, grads=(3, 7)),
+        Simulator(cluster=SPEC, streams=4), arch="b")
+    assert similarity(req, req) > similarity(req, same_arch_other_cluster)
+    assert similarity(req, same_arch_other_cluster) \
+        > similarity(req, other_graph_same_cluster)
+
+
+# ------------------------------------------------- corruption / atomicity
+def test_truncated_entry_is_a_miss_not_a_crash(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    g = mutated(chain_graph(), 3, 8)
+    plan = Plan.from_graph(g, sim=Simulator(cluster=SPEC, streams=4))
+    cache.put("k1", plan)
+    path = cache._plan_path("k1")
+    blob = open(path).read()
+    open(path, "w").write(blob[:len(blob) // 2])  # torn write
+    assert cache.get("k1") is None
+    assert cache.stats["stale"] == 1 and cache.stats["misses"] == 1
+    # verify names it; prune drops it
+    rep = cache.verify()
+    assert [c["key"] for c in rep["corrupt"]] == ["k1"]
+    assert cache.prune()["dropped"] == ["k1"]
+    assert len(cache) == 0 and not os.path.exists(path)
+
+
+def test_plan_save_is_atomic(tmp_path):
+    g = mutated(chain_graph(), 1, 6)
+    plan = Plan.from_graph(g, sim=Simulator(cluster=SPEC))
+    path = str(tmp_path / "p.json")
+    plan.save(path)
+    assert Plan.load(path) == plan
+    # no temp droppings, and a re-save replaces in place
+    plan.save(path)
+    assert sorted(os.listdir(tmp_path)) == ["p.json"]
+
+
+def test_corrupt_index_is_rebuilt_from_plan_files(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    g0 = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=4)
+    feats = cache_features(g0, sim, arch="chain")
+    plan = Plan.from_graph(mutated(g0, 2, 8), sim=sim)
+    cache.put("kx", plan, feats)
+    open(cache._index_path(), "w").write("{torn")
+    fresh = PlanCache(str(tmp_path))
+    ents = fresh.entries()
+    assert [e["key"] for e in ents] == ["kx"]
+    # similarity coordinates ride inside the artifact and survive rebuild
+    assert ents[0]["arch"] == "chain"
+    assert fresh.get("kx") == plan
+
+
+def test_capacity_evicts_oldest(tmp_path):
+    cache = PlanCache(str(tmp_path), capacity=2)
+    g0 = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=4)
+    for i in range(4):
+        cache.put(f"k{i}", Plan.from_graph(mutated(g0, i, 6), sim=sim))
+    assert len(cache) == 2
+    assert cache.stats["evictions"] == 2
+    assert cache.get("k0") is None and cache.get("k3") is not None
+
+
+_WRITER = """
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, "tests")
+from test_plan_cache import chain_graph, mutated, SPEC
+from repro.core import Simulator
+from repro.plan import Plan, PlanCache
+
+d, key, seed = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cache = PlanCache(d)
+sim = Simulator(cluster=SPEC, streams=4)
+for _ in range(20):
+    cache.put(key, Plan.from_graph(mutated(chain_graph(), seed, 8), sim=sim))
+print("done")
+"""
+
+
+def test_concurrent_writers_leave_readable_index(tmp_path):
+    d = str(tmp_path)
+    env = dict(os.environ)
+    procs = [
+        subprocess.Popen([sys.executable, "-c", _WRITER, d, "shared", "7"],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE)
+        for _ in range(2)
+    ]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+    # both raced on the same key: the index is readable JSON and the
+    # surviving entry loads (last writer wins)
+    cache = PlanCache(d)
+    idx = json.load(open(cache._index_path()))
+    assert set(idx["entries"]) == {"shared"}
+    assert cache.get("shared") is not None
+    assert not [n for n in os.listdir(d) if ".tmp." in n]
+
+
+# -------------------------------------------------------- mismatch diff UX
+def test_cluster_fingerprint_diff_names_fields():
+    assert cluster_fingerprint_diff(cluster_fingerprint(SPEC),
+                                    cluster_fingerprint(SPEC)) == []
+    diff = cluster_fingerprint_diff(cluster_fingerprint(SPEC),
+                                    cluster_fingerprint(OTHER))
+    assert any(d.startswith("name:") for d in diff)
+    # flat vs hierarchical: family-level difference
+    flat = ClusterSpec.flat(TPU_V5E, 64)
+    fam = cluster_fingerprint_diff(cluster_fingerprint(flat),
+                                   cluster_fingerprint(SPEC))
+    assert fam and "topology family" in fam[0]
+    # flat vs flat: the differing Hardware field is named
+    flat2 = ClusterSpec.flat(TPU_V5E, 128)
+    nd = cluster_fingerprint_diff(cluster_fingerprint(flat),
+                                  cluster_fingerprint(flat2))
+    assert nd == ["n_devices: 64 != 128"]
+    # JSON round-tripped (list-shaped) fingerprints diff identically
+    rt = json.loads(json.dumps(cluster_fingerprint(SPEC)))
+    assert cluster_fingerprint_diff(rt, cluster_fingerprint(OTHER)) == diff
+
+
+def test_mismatch_error_carries_diff():
+    p = Plan.from_graph(chain_graph(), sim=Simulator(cluster=SPEC))
+    with pytest.raises(ClusterMismatchError) as ei:
+        p.simulator(cluster=OTHER)
+    assert "name:" in str(ei.value)
+
+
+# ---------------------------------------------------------------- CLI / misc
+def test_cache_cli_ls_stats_prune_verify(tmp_path, capsys):
+    from repro.plan.cache import main
+
+    d = str(tmp_path)
+    cache = PlanCache(d)
+    g0 = chain_graph()
+    sim = Simulator(cluster=SPEC, streams=4)
+    cache.put("a", Plan.from_graph(mutated(g0, 0, 6), sim=sim),
+              cache_features(g0, sim, arch="chain"))
+    cache.put("b", Plan.from_graph(mutated(g0, 1, 6), sim=sim))
+    assert main(["ls", "--dir", d]) == 0
+    assert "2 entries" in capsys.readouterr().out
+    assert main(["stats", "--dir", d]) == 0
+    assert json.loads(capsys.readouterr().out)["entries"] == 2
+    assert main(["verify", "--dir", d]) == 0
+    capsys.readouterr()
+    open(cache._plan_path("b"), "w").write("{torn")
+    assert main(["verify", "--dir", d]) == 1
+    capsys.readouterr()
+    assert main(["prune", "--dir", d]) == 0
+    assert "dropped 1" in capsys.readouterr().out
+    assert main(["prune", "--dir", d, "--max-entries", "0"]) == 0
+    assert len(PlanCache(d)) == 0
+
+
+def test_open_cache_accepts_path_and_rejects_junk(tmp_path):
+    c = open_cache(str(tmp_path / "c"))
+    assert isinstance(c, PlanCache)
+    assert open_cache(c) is c
+    assert open_cache(None) is None
+    with pytest.raises(TypeError):
+        open_cache(42)
