@@ -20,10 +20,13 @@ plus two budget-matched joint backtracking searches (one with
 unchunked** per preset.
 
     PYTHONPATH=src python benchmarks/fig_chunk_sweep.py [--quick] [--smoke]
+        [--cache DIR]
 
 ``--smoke`` is the CI lane: two presets, the static family only, and a
 hard failure (exit 1) when chunking stops strictly beating whole-bucket
-pipelining on at least one of them.  Full runs write
+pipelining on at least one of them.  ``--cache DIR`` runs the joint
+searches through a :class:`repro.plan.PlanCache` (re-runs replay; each
+searched config reports its ``cache_outcome``).  Full runs write
 ``experiments/perf/chunk_sweep.json`` and print a CSV block.
 """
 from __future__ import annotations
@@ -69,7 +72,8 @@ def set_all_chunks(g, k: int):
 
 
 def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
-              max_steps: int, seed: int = 0, smoke: bool = False) -> dict:
+              max_steps: int, seed: int = 0, smoke: bool = False,
+              cache=None) -> dict:
     cands = {
         label: threshold_tensor_fusion(opfused, threshold=thr)
         for label, thr in THRESHOLDS.items()
@@ -98,7 +102,7 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
             plan = compile_plan(
                 graph=g0, cluster=spec, streams=STREAMS,
                 unchanged_limit=unchanged_limit, max_steps=max_steps,
-                seed=seed, methods=methods)
+                seed=seed, methods=methods, cache=cache)
             d = plan.describe()
             configs[tag] = {
                 "iteration_time_s": plan.predicted_iteration_time,
@@ -107,6 +111,8 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
                 "bucket_chunks": d["bucket_chunks"],
                 "bucket_algos": d["bucket_algos"],
                 "simulations": plan.provenance["simulations"],
+                "cache_outcome": plan.provenance.get("cache",
+                                                     {}).get("outcome"),
             }
     whole = {k: v["iteration_time_s"] for k, v in configs.items()
              if v["chunks"] == 1}
@@ -130,7 +136,12 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
 
 def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         max_steps: int = 80, seed: int = 0, verbose: bool = True,
-        batch: int = 2, seq: int = 32, smoke: bool = False) -> dict:
+        batch: int = 2, seq: int = 32, smoke: bool = False,
+        cache=None) -> dict:
+    if isinstance(cache, str):
+        from repro.plan import PlanCache
+
+        cache = PlanCache(cache)
     # small batch/seq: gradient volume (comm) is model-sized while compute
     # shrinks with tokens — the comm-bound regime chunking exists for
     g0 = arch_graph(arch, batch=batch, seq=seq)
@@ -143,7 +154,8 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         t0 = time.perf_counter()
         row = sweep_one(g0, opfused, name, spec,
                         unchanged_limit=unchanged_limit,
-                        max_steps=max_steps, seed=seed, smoke=smoke)
+                        max_steps=max_steps, seed=seed, smoke=smoke,
+                        cache=cache)
         row["wall_s"] = round(time.perf_counter() - t0, 2)
         rows.append(row)
         if verbose:
@@ -165,9 +177,15 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         "presets": rows,
         "chunked_beats_whole_on": winners,
     }
+    if cache is not None:
+        out["cache"] = {"root": cache.root, **cache.stats}
     if verbose:
         print(f"# chunked schedules strictly beat whole-bucket pipelining "
               f"on {len(winners)}/{len(rows)} presets: {winners}")
+        if cache is not None:
+            print(f"# cache {cache.root}: {cache.stats['hits']} hits, "
+                  f"{cache.stats['misses']} misses, "
+                  f"{cache.stats['warm_starts']} warm starts")
     if not smoke:
         os.makedirs(OUT, exist_ok=True)
         path = os.path.join(OUT, "chunk_sweep.json")
@@ -185,12 +203,15 @@ if __name__ == "__main__":
                     help="CI lane: 2 presets, static family only; exit 1 "
                          "unless chunking strictly wins on every smoke "
                          "preset")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="compile searches through a PlanCache at DIR "
+                         "(re-runs replay from the cache)")
     ap.add_argument("--arch", default="qwen2-0.5b")
     args = ap.parse_args()
     out = run(arch=args.arch,
               unchanged_limit=25 if args.quick else 40,
               max_steps=50 if args.quick else 80,
-              smoke=args.smoke)
+              smoke=args.smoke, cache=args.cache)
     if args.smoke:
         losers = [r["preset"] for r in out["presets"]
                   if not r["chunked_strictly_beats_whole"]]

@@ -19,13 +19,25 @@ comm-bound regime (small batch/seq, model-sized gradients) where the
 communication schedule is the critical path — the regime the engine
 exists for.
 
+On top of the scheduled-overlap family, the sweep prices the *in-kernel
+fused* dimension (ISSUE 8): per-granularity all-fused variants, a joint
+search with ``METHOD_FUSED`` active (the preset's calibrated overlap
+discount), and the scheduled-search winner with every bucket flipped
+fused.  The second headline is fused-best vs scheduled-overlap-best:
+``fused_beats_scheduled`` per preset, with the fused side never allowed
+to regress (an unfused graph is a point of the fused space).
+
     PYTHONPATH=src python benchmarks/fig_overlap_sweep.py [--quick]
-        [--timeline]
+        [--timeline] [--smoke] [--cache DIR]
 
 ``--timeline`` embeds each preset's winning comm schedule as
 ``(kind, bucket, chunk, traffic_class, algo, level, start, end)`` records —
-ring vs tree vs hierarchical phases, RS/AG legs, chunk indices and traffic
-classes are distinguishable by construction.
+ring vs tree vs hierarchical phases, RS/AG legs, chunk indices, traffic
+classes and the ``fused_``-prefixed phases of in-kernel fused buckets are
+distinguishable by construction.  ``--smoke`` is the CI lane: two
+calibrated presets, reduced budget, and a hard gate that the fused side
+never regresses the scheduled-overlap best.  ``--cache DIR`` runs the
+searches through a :class:`repro.plan.PlanCache` (re-runs replay).
 Writes ``experiments/perf/overlap_sweep.json`` and prints a CSV block.
 """
 from __future__ import annotations
@@ -53,9 +65,17 @@ THRESHOLDS = {"512KB": 512 << 10, "1MB": 1 << 20, "2MB": 2 << 20,
 STREAMS = (1, 2, 4, 8)
 
 
+def _all_fused(g):
+    """Every bucket flipped to the in-kernel fused path."""
+    z = g.clone()
+    for i in range(len(z.buckets)):
+        z.set_bucket_fused(i, True)
+    return z
+
+
 def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
               max_steps: int, seed: int = 0,
-              keep_timeline: bool = False) -> dict:
+              keep_timeline: bool = False, cache=None) -> dict:
     # strategy family: bucket granularities x stream counts, auto algos
     cands = {
         label: assign_bucket_algos(
@@ -76,28 +96,40 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
                 "buckets": len(g.buckets),
                 "streams": s,
             }
-    # ZeRO-3 RS+AG split of each granularity on the 4-stream engine
+    # ZeRO-3 RS+AG split of each granularity on the 4-stream engine, plus
+    # the in-kernel fused variant of both comm kinds (every bucket fused
+    # under the preset's calibrated overlap discount)
     for label, g in cands.items():
         z = assign_bucket_comm(g, "rs_ag")
-        r = Simulator(cluster=spec, streams=4).run(z)
-        key = f"{label}_rs_ag@s4"
-        graphs[key] = (z, 4)
-        configs[key] = {
-            "iteration_time_s": r.iteration_time,
-            "comm_finish_s": r.comm_finish,
-            "comm_busy_s": r.comm_time,
-            "buckets": len(z.buckets),
-            "streams": 4,
-        }
+        variants = {f"{label}_rs_ag@s4": z,
+                    f"{label}_fused@s4": _all_fused(g),
+                    f"{label}_rs_ag_fused@s4": _all_fused(z)}
+        for key, v in variants.items():
+            r = Simulator(cluster=spec, streams=4).run(v)
+            graphs[key] = (v, 4)
+            configs[key] = {
+                "iteration_time_s": r.iteration_time,
+                "comm_finish_s": r.comm_finish,
+                "comm_busy_s": r.comm_time,
+                "buckets": len(v.buckets),
+                "streams": 4,
+                "fused": "fused" in key,
+            }
     # budget-matched joint searches: one against the serialized channel,
-    # one against the 4-stream engine (op x tensor x algo [x comm kind]) —
-    # both through the compile() facade; the winning strategy comes back
-    # as a Plan whose to_graph() reconstructs the graph when the timeline
-    # replay needs it
-    for tag, s in (("searched@s1", 1), ("searched@s4", 4)):
+    # one against the 4-stream engine with the fused dimension *disabled*
+    # (overlap_discount=0 -> METHOD_FUSED drops out: the scheduled-overlap
+    # side), one with the preset's calibrated discount (the joint fused
+    # search) — all through the compile() facade; the winning strategy
+    # comes back as a Plan whose to_graph() reconstructs the graph when
+    # the timeline replay needs it
+    searches = (("searched@s1", 1, 0.0),
+                ("searched@s4", 4, 0.0),
+                ("searched_fused@s4", 4, None))
+    for tag, s, disc in searches:
         plan = compile_plan(graph=g0, cluster=spec, streams=s,
+                            overlap_discount=disc,
                             unchanged_limit=unchanged_limit,
-                            max_steps=max_steps, seed=seed)
+                            max_steps=max_steps, seed=seed, cache=cache)
         d = plan.describe()
         graphs[tag] = (plan.to_graph(g0), s)
         configs[tag] = {
@@ -106,19 +138,41 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
             "streams": s,
             "bucket_algos": d["bucket_algos"],
             "bucket_comm": d["bucket_comm"],
+            "fused": tag.endswith("_fused@s4"),
+            "fused_comm_buckets": d["fused_comm_buckets"],
             "simulations": plan.provenance["simulations"],
+            "cache_outcome": plan.provenance.get("cache", {}).get("outcome"),
         }
+    # the scheduled-search winner with every bucket flipped fused: pins the
+    # fused side at <= the scheduled side (an unfused graph is a point of
+    # the fused space, and the discount only moves job starts earlier)
+    sched_g, _ = graphs["searched@s4"]
+    fz = _all_fused(sched_g)
+    r = Simulator(cluster=spec, streams=4).run(fz)
+    graphs["searched_sched_fused@s4"] = (fz, 4)
+    configs["searched_sched_fused@s4"] = {
+        "iteration_time_s": r.iteration_time,
+        "buckets": len(fz.buckets),
+        "streams": 4,
+        "fused": True,
+    }
 
     ser = {k: v["iteration_time_s"] for k, v in configs.items()
            if v["streams"] == 1}
     ovl = {k: v["iteration_time_s"] for k, v in configs.items()
            if v["streams"] > 1}
+    sched = {k: t for k, t in ovl.items() if not configs[k].get("fused")}
+    fusd = {k: t for k, t in ovl.items() if configs[k].get("fused")}
     best_ser = min(ser, key=ser.get)
     best_ovl = min(ovl, key=ovl.get)
+    best_sched = min(sched, key=sched.get)
+    best_fused = min(fusd, key=fusd.get)
     row = {
         "preset": name,
         "n_devices": spec.n_devices,
         "levels": [l.name for l in spec.levels],
+        "overlap_discount": Simulator(cluster=spec,
+                                      streams=4).overlap_discount,
         "configs": configs,
         "best_serialized_config": best_ser,
         "best_serialized_s": ser[best_ser],
@@ -126,6 +180,13 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
         "best_overlap_s": ovl[best_ovl],
         "overlap_speedup": ser[best_ser] / ovl[best_ovl],
         "multistream_strictly_beats_serialized": ovl[best_ovl] < ser[best_ser],
+        "best_scheduled_config": best_sched,
+        "best_scheduled_s": sched[best_sched],
+        "best_fused_config": best_fused,
+        "best_fused_s": fusd[best_fused],
+        "fused_speedup": sched[best_sched] / fusd[best_fused],
+        "fused_beats_scheduled": fusd[best_fused] < sched[best_sched],
+        "fused_regresses": fusd[best_fused] > sched[best_sched] * (1 + 1e-9),
     }
     if keep_timeline:
         win_g, win_s = graphs[best_ovl]
@@ -137,30 +198,42 @@ def sweep_one(g0, opfused, name: str, spec, *, unchanged_limit: int,
 
 def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         max_steps: int = 80, seed: int = 0, verbose: bool = True,
-        keep_timeline: bool = False, batch: int = 2, seq: int = 32) -> dict:
+        keep_timeline: bool = False, batch: int = 2, seq: int = 32,
+        smoke: bool = False, cache=None) -> dict:
+    if isinstance(cache, str):
+        from repro.plan import PlanCache
+
+        cache = PlanCache(cache)
     # small batch/seq: gradient volume (comm) is model-sized while compute
     # shrinks with tokens — the comm-bound regime
     g0 = arch_graph(arch, batch=batch, seq=seq)
     opfused = xla_post_order_op_fusion(g0)
+    presets = (("a100_nvlink_ib", "cross_dc_2pod") if smoke
+               else tuple(PRESETS))
     rows = []
-    for name, spec in PRESETS.items():
+    for name in presets:
+        spec = PRESETS[name]
         t0 = time.perf_counter()
         row = sweep_one(g0, opfused, name, spec,
                         unchanged_limit=unchanged_limit,
                         max_steps=max_steps, seed=seed,
-                        keep_timeline=keep_timeline)
+                        keep_timeline=keep_timeline, cache=cache)
         row["wall_s"] = round(time.perf_counter() - t0, 2)
         rows.append(row)
         if verbose:
             print(csv_row(name, spec.n_devices,
                           row["best_serialized_config"],
                           f"{row['best_serialized_s']*1e3:.3f}ms",
-                          row["best_overlap_config"],
-                          f"{row['best_overlap_s']*1e3:.3f}ms",
-                          f"{row['overlap_speedup']:.3f}x",
-                          row["multistream_strictly_beats_serialized"]))
+                          row["best_scheduled_config"],
+                          f"{row['best_scheduled_s']*1e3:.3f}ms",
+                          row["best_fused_config"],
+                          f"{row['best_fused_s']*1e3:.3f}ms",
+                          f"{row['fused_speedup']:.3f}x",
+                          row["fused_beats_scheduled"]))
     winners = [r["preset"] for r in rows
                if r["multistream_strictly_beats_serialized"]]
+    fused_wins = [r["preset"] for r in rows if r["fused_beats_scheduled"]]
+    regressions = [r["preset"] for r in rows if r["fused_regresses"]]
     out = {
         "arch": arch,
         "batch": batch,
@@ -170,17 +243,31 @@ def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
         "seed": seed,
         "presets": rows,
         "multistream_beats_serialized_on": winners,
+        "fused_beats_scheduled_on": fused_wins,
+        "fused_regresses_on": regressions,
     }
+    if cache is not None:
+        out["cache"] = {"root": cache.root, **cache.stats}
     if verbose:
         print(f"# multi-stream/pipelined schedules strictly beat the "
               f"serialized channel on {len(winners)}/{len(rows)} presets: "
               f"{winners}")
-    os.makedirs(OUT, exist_ok=True)
-    path = os.path.join(OUT, "overlap_sweep.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    if verbose:
-        print(f"# wrote {path}")
+        print(f"# in-kernel fused schedules strictly beat the best "
+              f"scheduled overlap on {len(fused_wins)}/{len(rows)} "
+              f"presets: {fused_wins}")
+        if regressions:
+            print(f"# WARNING: fused side regressed on {regressions}")
+        if cache is not None:
+            print(f"# cache {cache.root}: {cache.stats['hits']} hits, "
+                  f"{cache.stats['misses']} misses, "
+                  f"{cache.stats['warm_starts']} warm starts")
+    if not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        path = os.path.join(OUT, "overlap_sweep.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if verbose:
+            print(f"# wrote {path}")
     return out
 
 
@@ -191,9 +278,26 @@ if __name__ == "__main__":
                     help="embed each preset's winning comm schedule as "
                          "(kind, bucket, chunk, traffic_class, algo, level, "
                          "start, end) records")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: two calibrated presets, reduced budget; "
+                         "exits non-zero if the fused side regresses the "
+                         "scheduled-overlap best anywhere")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="compile searches through a PlanCache at DIR "
+                         "(re-runs replay from the cache)")
     ap.add_argument("--arch", default="qwen2-0.5b")
     args = ap.parse_args()
-    run(arch=args.arch,
-        unchanged_limit=25 if args.quick else 40,
-        max_steps=50 if args.quick else 80,
-        keep_timeline=args.timeline)
+    out = run(arch=args.arch,
+              unchanged_limit=15 if args.smoke else
+              (25 if args.quick else 40),
+              max_steps=30 if args.smoke else (50 if args.quick else 80),
+              keep_timeline=args.timeline,
+              smoke=args.smoke, cache=args.cache)
+    if args.smoke:
+        assert not out["fused_regresses_on"], (
+            f"fused side regressed the scheduled-overlap best on "
+            f"{out['fused_regresses_on']}")
+        assert out["fused_beats_scheduled_on"], (
+            "in-kernel fusion beat the scheduled overlap on no smoke "
+            "preset — the discount calibration or fused pricing is broken")
+        print("# smoke gate passed")

@@ -1,0 +1,159 @@
+"""Calibrate the in-kernel fusion overlap discount per cluster preset.
+
+The pricing layer models a *fused* bucket (``FusionGraph.bucket_fused``,
+DESIGN.md Sec. 13) with one scalar per preset: the collective's effective
+ready time reaches ``discount x duration`` back into the tail of the
+producing compute job.  The ground truth it approximates is the fused
+kernel's fine-grained behaviour — gradient chunks stream onto the wire as
+they are produced, store-and-forward, long before the producer retires.
+
+This microbenchmark prices both on the same event engine:
+
+* **reference** — the producing compute (duration ``T``) emits ``FINE``
+  equal chunks inside ONE collective launch; chunk ``k`` becomes ready at
+  ``(k+1)/FINE x T`` and the chunks ``after``-chain store-and-forward down
+  the link levels (``chunk_phases`` conserves the (c, d) coefficients:
+  in-kernel streaming splits the launch's work, it does not re-launch).
+* **model** — one unchunked job of the full volume with ready
+  ``T x (1 - discount)``.
+
+``fit_overlap_discount`` grid-fits the discount minimising the relative
+finish-time error over a sweep of bucket sizes x compute/comm ratios.
+The fitted values are stored in ``repro.cluster.calibrate
+.OVERLAP_DISCOUNTS`` beside the per-level alpha/beta coefficients.
+
+A deliberate property of the fit: because the event engine prices every
+interval of a single bucket's schedule proportionally to its opaque
+``c x nbytes + d`` term, both schedules are *scale-free* — the relative
+error depends only on the compute/comm ratio and the streaming
+granularity, not on a preset's absolute coefficients — so today every
+preset calibrates to the same discount.  The table stays per-preset
+keyed: a measured-kernel truth (real TPU profiles instead of the engine's
+own fine-grained schedule) slots in per preset without an interface
+change.
+
+    PYTHONPATH=src python benchmarks/micro_overlap.py --fit    # print table
+    PYTHONPATH=src python benchmarks/micro_overlap.py --check  # vs stored
+
+Writes ``experiments/perf/micro_overlap.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster import PRESETS, comm_coeffs
+from repro.cluster.calibrate import (OVERLAP_DISCOUNTS,
+                                     fit_overlap_discount,
+                                     overlap_discount_for)
+from repro.core import CommJob, EventEngine
+
+OUT = "experiments/perf"
+FINE = 8           # in-kernel streaming granularity (== max CHUNK_CHOICES)
+STREAMS = 4        # the engine configuration the sweep prices fused on
+# bucket bytes: small buckets expose the per-chunk latency overhead (and
+# the per-level phase structure of hierarchical presets), large ones the
+# bandwidth regime
+SIZES = (64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20)
+RATIOS = (0.25, 0.5, 1.0, 2.0, 4.0)              # T_compute / T_comm
+
+
+def _sweep_points(spec) -> list[tuple[float, float]]:
+    """(nbytes, compute_duration) pairs spanning compute- to comm-bound."""
+    c, d = comm_coeffs(spec, "ring", "ar")
+    pts = []
+    for nbytes in SIZES:
+        t_comm = c * nbytes + d
+        for ratio in RATIOS:
+            pts.append((float(nbytes), ratio * t_comm))
+    return pts
+
+
+def reference_finish(spec, nbytes: float, t_compute: float) -> float:
+    """Fine-grained truth: FINE store-and-forward chunks of one launch,
+    chunk k ready at (k+1)/FINE x t_compute — the fused kernel streams
+    chunks onto the wire as the producer writes them."""
+    jobs, prev = [], None
+    for k in range(FINE):
+        jobs.append(CommJob(bucket=0, ready=t_compute * (k + 1) / FINE,
+                            nbytes=nbytes / FINE, algo="ring",
+                            job_id=100 + k, after=prev, chunk=k,
+                            chunks=FINE))
+        prev = 100 + k
+    _, finish = EventEngine(spec, streams=STREAMS).run(jobs)
+    return finish
+
+
+def model_finish(spec, nbytes: float, t_compute: float,
+                 discount: float) -> float:
+    """The priced model: one job, ready advanced into the compute tail."""
+    job = CommJob(bucket=0, ready=t_compute * (1.0 - discount),
+                  nbytes=nbytes, algo="ring")
+    _, finish = EventEngine(spec, streams=STREAMS).run([job])
+    return finish
+
+
+def calibrate_preset(name: str, spec) -> dict:
+    pts = _sweep_points(spec)
+    reference = [reference_finish(spec, b, t) for b, t in pts]
+
+    def model(d):
+        return [model_finish(spec, b, t, d) for b, t in pts]
+
+    fitted, rms = fit_overlap_discount(reference, model)
+    return {
+        "preset": name,
+        "n_devices": spec.n_devices,
+        "fitted_discount": fitted,
+        "rms_rel_err": rms,
+        "stored_discount": overlap_discount_for(spec),
+        "points": len(pts),
+        "fine_chunks": FINE,
+        "streams": STREAMS,
+    }
+
+
+def run(check: bool = False, tol: float = 0.05, verbose: bool = True) -> dict:
+    rows = [calibrate_preset(name, spec) for name, spec in PRESETS.items()]
+    if verbose:
+        print(f"{'preset':24s} {'fitted':>8s} {'stored':>8s} {'rms_err':>8s}")
+        for r in rows:
+            print(f"{r['preset']:24s} {r['fitted_discount']:8.3f} "
+                  f"{r['stored_discount']:8.3f} {r['rms_rel_err']:8.3f}")
+        print("\n# paste into repro/cluster/calibrate.py:")
+        print("OVERLAP_DISCOUNTS: dict[str, float] = {")
+        for r in rows:
+            print(f'    "{r["preset"]}": {r["fitted_discount"]},')
+        print("}")
+    out = {"fine_chunks": FINE, "streams": STREAMS,
+           "sizes": list(SIZES), "ratios": list(RATIOS), "presets": rows}
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "micro_overlap.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    if verbose:
+        print(f"# wrote {path}")
+    if check:
+        stale = [r["preset"] for r in rows
+                 if abs(r["fitted_discount"] - r["stored_discount"]) > tol]
+        assert not stale, (
+            f"stored OVERLAP_DISCOUNTS drifted beyond {tol} from a fresh "
+            f"fit on: {stale} — rerun with --fit and paste the table")
+        if verbose:
+            print(f"# stored discounts within {tol} of fresh fit "
+                  f"on all {len(rows)} presets")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fit", action="store_true",
+                    help="fit and print the OVERLAP_DISCOUNTS table")
+    ap.add_argument("--check", action="store_true",
+                    help="assert stored discounts match a fresh fit")
+    args = ap.parse_args()
+    run(check=args.check)

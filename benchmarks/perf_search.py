@@ -36,7 +36,11 @@ fork of the pipeline).  Finally it compiles through an empty
 ``repro.plan.PlanCache``: the cold trajectory must be identical to the
 uncached search, and the exact-key replay must be bit-identical and at
 least ``--smoke-min-cache-speedup`` (default 20x) faster than the cold
-compile it replays.
+compile it replays.  A final gate offers ``METHOD_FUSED`` to searches on
+sims where in-kernel fusion is inapplicable (flat topology, serialized
+channel, zero overlap discount) and fails unless the cold trajectories are
+bit-identical to runs never offered it — the fused dimension must cost
+legacy configs nothing.
 """
 from __future__ import annotations
 
@@ -327,6 +331,42 @@ def main():
                   f"({crep['speedup']}x, outcome={crep['outcome']})",
                   flush=True)
             report[arch]["plan_cache"] = crep
+            # METHOD_FUSED gating: where in-kernel fusion is inapplicable
+            # (flat topology / serialized channel / zero discount) the
+            # active method set drops it, so a cold search offered the
+            # fused method draws the exact pre-fused RNG stream — the
+            # trajectory must be bit-identical to one never offered it
+            from repro.core.search import (ALL_METHODS, METHOD_FUSED,
+                                           backtracking_search)
+
+            gate = {}
+            skw = dict(unchanged_limit=10**9, max_steps=args.steps, seed=0)
+            for tag, sim in (
+                    ("flat", Simulator(n_devices=N_DEVICES)),
+                    ("serialized", Simulator(
+                        cluster=get_preset("a100_nvlink_ib"), streams=1,
+                        overlap_discount=0.525)),
+                    ("undiscounted", Simulator(
+                        cluster=get_preset("a100_nvlink_ib"), streams=4,
+                        overlap_discount=0.0))):
+                legacy = backtracking_search(arch_graph(arch), sim,
+                                             methods=ALL_METHODS, **skw)
+                offered = backtracking_search(
+                    arch_graph(arch), sim,
+                    methods=ALL_METHODS + (METHOD_FUSED,), **skw)
+                gate[tag] = {
+                    "identical": (
+                        legacy.best_cost == offered.best_cost
+                        and legacy.simulations == offered.simulations
+                        and legacy.best.signature()
+                        == offered.best.signature()
+                        and not any(offered.best.bucket_fused)),
+                    "best_cost": legacy.best_cost,
+                }
+            print(f"  fused gating: trajectories unchanged on "
+                  f"{[t for t, g_ in gate.items() if g_['identical']]}",
+                  flush=True)
+            report[arch]["fused_gating"] = gate
     if not args.skip_deepseek:
         arch = "deepseek-v2-236b"
         print(f"=== {arch} (scale probe, budget {args.seed_budget}s) ===",
@@ -390,6 +430,13 @@ def main():
                       f"{crep['speedup']}x below "
                       f"{args.smoke_min_cache_speedup}x floor")
                 raise SystemExit(1)
+        for a, r in report.items():
+            for tag, g_ in r.get("fused_gating", {}).items():
+                if not g_["identical"]:
+                    print(f"SMOKE FAIL: {a}[{tag}]: offering METHOD_FUSED "
+                          f"on a sim where it is inapplicable changed the "
+                          f"cold search trajectory ({g_})")
+                    raise SystemExit(1)
         print(f"smoke OK: incremental/seed throughput {speedups}, "
               f"chunked multi-stream {chunked}, unified serialized "
               f"{unified} "

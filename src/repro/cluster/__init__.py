@@ -15,18 +15,22 @@ from .topology import (ClusterSpec, LinkLevel, PRESETS, dcn_level,
 from .collectives import (ALGO_HIER, ALGO_RING, ALGO_TREE, ALGORITHMS,
                           BUCKET_COMM_KINDS, COLLECTIVE_ALGOS, CommPhase,
                           DEFAULT_ALGO, DEFAULT_COMM_KIND, KIND_AG, KIND_AR,
-                          KIND_P2P, KIND_RS, KIND_RS_AG, allreduce_coeffs,
-                          best_algo, bucket_time, chunk_phases, comm_coeffs,
-                          comm_time, hier_allreduce, phases, ring_allreduce,
+                          KIND_FUSED, KIND_P2P, KIND_RS, KIND_RS_AG,
+                          allreduce_coeffs, best_algo, bucket_time,
+                          chunk_phases, comm_coeffs, comm_time, fused_phases,
+                          hier_allreduce, phases, ring_allreduce,
                           tree_allreduce)
+from .calibrate import (DEFAULT_OVERLAP_DISCOUNT, OVERLAP_DISCOUNTS,
+                        overlap_discount_for)
 
 __all__ = [
     "ClusterSpec", "LinkLevel", "PRESETS", "dcn_level", "get_preset",
     "list_presets", "tpu_pod_levels",
     "ALGO_HIER", "ALGO_RING", "ALGO_TREE", "ALGORITHMS", "COLLECTIVE_ALGOS",
     "BUCKET_COMM_KINDS", "CommPhase", "DEFAULT_ALGO", "DEFAULT_COMM_KIND",
-    "KIND_AG", "KIND_AR", "KIND_P2P", "KIND_RS", "KIND_RS_AG",
+    "KIND_AG", "KIND_AR", "KIND_FUSED", "KIND_P2P", "KIND_RS", "KIND_RS_AG",
     "allreduce_coeffs", "best_algo", "bucket_time", "chunk_phases",
-    "comm_coeffs", "comm_time", "hier_allreduce", "phases",
+    "comm_coeffs", "comm_time", "fused_phases", "hier_allreduce", "phases",
     "ring_allreduce", "tree_allreduce",
+    "DEFAULT_OVERLAP_DISCOUNT", "OVERLAP_DISCOUNTS", "overlap_discount_for",
 ]

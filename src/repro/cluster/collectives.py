@@ -101,6 +101,12 @@ KIND_RS_AG = "rs_ag"
 KIND_P2P = "p2p"
 BUCKET_COMM_KINDS = (KIND_AR, KIND_RS_AG)
 DEFAULT_COMM_KIND = KIND_AR
+# In-kernel fused compute+comm (CoCoNet-style, DESIGN.md Sec. 13).  NOT a
+# BUCKET_COMM_KINDS member: the searched flag lives in
+# ``FusionGraph.bucket_fused`` so the base kind (ar / rs_ag) keeps pricing
+# the wire traffic — "fused" tags phases/timeline records of buckets whose
+# collective is issued from inside the producing kernel.
+KIND_FUSED = "fused"
 
 
 # ------------------------------------------------------------- coefficients
@@ -246,6 +252,12 @@ class CommPhase:
     level: int    # index into spec.levels
     c: float      # seconds/byte at full bandwidth
     d: float      # fixed latency seconds
+    # overlap discount of an in-kernel fused collective (DESIGN.md Sec. 13):
+    # fraction of the *producing compute job* the transfer reaches back
+    # into.  Link work (c, d) stays FULL — fusion never shrinks wire
+    # traffic, it only starts it earlier — so coefficient conservation and
+    # ``full_overlap_bound`` hold unchanged.  0.0 for ordinary phases.
+    overlap: float = 0.0
 
     def seconds(self, nbytes: float) -> float:
         return self.c * nbytes + self.d
@@ -402,6 +414,39 @@ def chunk_phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
     return tuple(
         dataclasses.replace(p, d=p.d / chunks)
         for p in phases(spec, algo, kind)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def fused_phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
+                 kind: str = KIND_AR, chunks: int = 1,
+                 discount: float = 0.0) -> tuple[CommPhase, ...]:
+    """Phase decomposition of one chunk of an **in-kernel fused** collective
+    (DESIGN.md Sec. 13).
+
+    ``discount`` is the calibrated overlap factor delta in ``[0, 1)``: the
+    fused kernel issues the collective from inside the producing compute
+    job, so the transfer's ready time reaches ``delta x producer_duration``
+    back into that job's tail.  The per-chunk ``(c, d)`` coefficients are
+    the :func:`chunk_phases` ones **unchanged** — fusion conserves link work
+    exactly (the bytes still cross the wire; they just start earlier), so
+    the coefficient-conservation property and the engine's
+    ``full_overlap_bound`` floor hold with no special cases.  Phase kinds
+    are tagged ``fused_*`` so event-engine timelines can tell in-kernel
+    overlap apart from scheduled overlap.
+
+    ``discount <= 0`` returns the :func:`chunk_phases` tuple itself
+    (bit-identical schedules: an undiscounted fused bucket prices exactly
+    as its base kind)."""
+    if discount <= 0.0:
+        return chunk_phases(spec, algo, kind, chunks)
+    if not discount < 1.0:
+        raise ValueError(f"overlap discount must be in [0, 1), "
+                         f"got {discount!r}")
+    return tuple(
+        dataclasses.replace(p, kind=f"{KIND_FUSED}_{p.kind}",
+                            overlap=discount)
+        for p in chunk_phases(spec, algo, kind, chunks)
     )
 
 

@@ -64,7 +64,7 @@ import math
 
 from ..cluster import ClusterSpec
 from ..cluster.collectives import (KIND_AR, KIND_RS_AG, chunk_phases,
-                                   comm_coeffs)
+                                   comm_coeffs, fused_phases)
 
 # traffic classes a job can belong to
 TC_DP = "dp"    # data-parallel gradient bucket (the searched dimension)
@@ -104,6 +104,12 @@ class CommJob:
     chunk: int = 0
     chunks: int = 1
     traffic_class: str = TC_DP
+    # in-kernel fusion overlap discount (DESIGN.md Sec. 13): > 0 lets this
+    # job's effective ready reach ``discount x dep_duration`` back into the
+    # tail of each *compute* dep — the fused kernel streams chunks onto the
+    # wire before the producer retires.  Link work stays full; only the
+    # start moves.  0.0 (every non-fused job) changes nothing.
+    discount: float = 0.0
 
     @property
     def jid(self) -> int:
@@ -256,25 +262,28 @@ class _Active:
 
 def bucket_jobs(bucket: int, ready: float, nbytes: float, algo: str,
                 kind: str, chunks: int, next_id: int,
-                deps: tuple[int, ...] = ()) -> tuple[list[CommJob], int]:
+                deps: tuple[int, ...] = (),
+                discount: float = 0.0) -> tuple[list[CommJob], int]:
     """The canonical job decomposition of one gradient bucket: a single
     job when ``chunks <= 1``, else ``chunks`` store-and-forward chunk jobs
     (each ``nbytes/chunks``, ``after``-chained, ids allocated from
     ``next_id``).  ``deps`` (e.g. the bucket's provider compute jobs) are
-    stamped onto every chunk.  Shared by the simulator's comm pass and
+    stamped onto every chunk, as is the in-kernel fusion ``discount`` of a
+    fused bucket (0.0 otherwise).  Shared by the simulator's comm pass and
     ``repro.plan.Plan.comm_jobs`` so plan pricing can never drift from
     search pricing.  Returns ``(jobs, next_id)``."""
     deps = tuple(deps)
     if chunks <= 1:
         return [CommJob(bucket=bucket, ready=ready, nbytes=nbytes,
-                        algo=algo, kind=kind, deps=deps)], next_id
+                        algo=algo, kind=kind, deps=deps,
+                        discount=discount)], next_id
     jobs = []
     prev = None
     for c in range(chunks):
         jobs.append(CommJob(bucket=bucket, ready=ready,
                             nbytes=nbytes / chunks, algo=algo, kind=kind,
                             job_id=next_id, after=prev, chunk=c,
-                            chunks=chunks, deps=deps))
+                            chunks=chunks, deps=deps, discount=discount))
         prev = next_id
         next_id += 1
     return jobs, next_id
@@ -316,7 +325,7 @@ class EventEngine:
         self.class_busy: dict[str, float] = {}
         self.class_finish: dict[str, float] = {}
         self._coeffs: dict[tuple[str, str], tuple[float, float]] = {}
-        self._steps: dict[tuple[str, str, int], tuple] = {}
+        self._steps: dict[tuple[str, str, int, float], tuple] = {}
         self._chan_level = spec.levels[spec.bottleneck_index()].name
 
     # ------------------------------------------------------------- helpers
@@ -334,10 +343,16 @@ class EventEngine:
             # indexed past the link levels (see _run_phased's names/disc)
             return [(job.kind, len(self.spec.levels) + job.stream,
                      job.duration)]
-        key = (job.algo, job.kind, job.chunks)
+        key = (job.algo, job.kind, job.chunks, job.discount)
         ph = self._steps.get(key)
         if ph is None:
-            ph = chunk_phases(self.spec, job.algo, job.kind, job.chunks)
+            if job.discount > 0.0:
+                # fused_* phase kinds tag the timeline; (c, d) are the
+                # chunk_phases ones unchanged (link work is conserved)
+                ph = fused_phases(self.spec, job.algo, job.kind,
+                                  job.chunks, job.discount)
+            else:
+                ph = chunk_phases(self.spec, job.algo, job.kind, job.chunks)
             self._steps[key] = ph
         return [(p.kind, p.level, p.c * job.nbytes + p.d) for p in ph]
 
@@ -400,6 +415,7 @@ class EventEngine:
                                      bg_base_id)
         c_busy, c_fin, order, busy_after, done = \
             self._run_compute_serial(compute, timeline)
+        dur: dict[int, float] | None = None  # compute durations, on demand
         jobs = []
         for j in comm:
             if j.deps:
@@ -410,8 +426,18 @@ class EventEngine:
                     if t is None:
                         if d in comm_ids:
                             left.append(d)   # comm-on-comm dep: keep it
-                    elif t > r:
-                        r = t
+                    else:
+                        if j.discount > 0.0:
+                            # in-kernel fusion: the collective is issued
+                            # from inside the producing kernel, so it may
+                            # start discount x duration into the dep's tail
+                            # (never before the dep started: discount < 1)
+                            if dur is None:
+                                dur = {cj.job_id: cj.duration
+                                       for cj in compute}
+                            t -= j.discount * dur.get(d, 0.0)
+                        if t > r:
+                            r = t
                 if r != j.ready or len(left) != len(j.deps):
                     j = dataclasses.replace(j, ready=r, deps=tuple(left))
             jobs.append(j)

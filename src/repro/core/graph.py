@@ -144,13 +144,18 @@ class FusionGraph:
         # that store-and-forward through the event engine's phase pipeline
         # (1, the seed model, is one whole-bucket collective)
         self.bucket_chunks: list[int] = [1] * len(self.buckets)
+        # per-bucket in-kernel fusion flag: True issues the bucket's
+        # collective from inside the producing kernel, reaching back into
+        # the producer's tail by the cluster's calibrated overlap discount
+        # (DESIGN.md Sec. 13); False is scheduled overlap (the seed model)
+        self.bucket_fused: list[bool] = [False] * len(self.buckets)
         self._rebuild_derived()
 
     @classmethod
     def _from_parts(cls, prims, psuccs, ppreds, groups, provider, next_gid,
                     grad_prim, buckets, family: int | None = None,
                     bucket_algos=None, bucket_comm=None,
-                    bucket_chunks=None) -> "FusionGraph":
+                    bucket_chunks=None, bucket_fused=None) -> "FusionGraph":
         """Assemble a graph from explicit state (see ``profile_graph``);
         derived structures are rebuilt from scratch.  ``family`` pins the
         estimator-cache lineage when the prims are shared with an existing
@@ -170,6 +175,8 @@ class FusionGraph:
                          else ["ar"] * len(g.buckets))
         g.bucket_chunks = (list(bucket_chunks) if bucket_chunks is not None
                            else [1] * len(g.buckets))
+        g.bucket_fused = (list(bucket_fused) if bucket_fused is not None
+                          else [False] * len(g.buckets))
         g._rebuild_derived()
         if family is not None:
             g._family = family
@@ -233,6 +240,7 @@ class FusionGraph:
         g.bucket_algos = list(self.bucket_algos)
         g.bucket_comm = list(self.bucket_comm)
         g.bucket_chunks = list(self.bucket_chunks)
+        g.bucket_fused = list(self.bucket_fused)
         # quotient structures are shared: mutations are copy-on-write (they
         # replace modified adjacency sets, never mutate them in place)
         g._qsuccs = self._qsuccs
@@ -463,11 +471,12 @@ class FusionGraph:
             return False
         lo = min(i, j)
         self.buckets[lo : lo + 2] = [a + b]
-        # the merged bucket keeps the leading bucket's algorithm, comm kind
-        # and chunk count
+        # the merged bucket keeps the leading bucket's algorithm, comm kind,
+        # chunk count and in-kernel fusion flag
         self.bucket_algos[lo : lo + 2] = [self.bucket_algos[lo]]
         self.bucket_comm[lo : lo + 2] = [self.bucket_comm[lo]]
         self.bucket_chunks[lo : lo + 2] = [self.bucket_chunks[lo]]
+        self.bucket_fused[lo : lo + 2] = [self.bucket_fused[lo]]
         self._journal.append(("bucket", lo))
         return True
 
@@ -523,6 +532,22 @@ class FusionGraph:
             return False
         self.bucket_chunks[i] = chunks
         self._journal.append(("chunk", i))
+        return True
+
+    def set_bucket_fused(self, i: int, flag: bool) -> bool:
+        """Kernel method (vii): toggle in-kernel compute+comm fusion for
+        bucket ``i`` (DESIGN.md Sec. 13).  A fused bucket's collective is
+        issued from inside the producing kernel, so it may start
+        ``discount x producer_duration`` before the producer finishes; link
+        work is conserved (never a volume discount).  A no-op choice
+        returns False."""
+        flag = bool(flag)
+        if not 0 <= i < len(self.buckets):
+            return False
+        if self.bucket_fused[i] == flag:
+            return False
+        self.bucket_fused[i] = flag
+        self._journal.append(("fused", i))
         return True
 
     # ------------------------------------------------------------ accessors
@@ -589,7 +614,8 @@ class FusionGraph:
         pv = tuple(sorted(self.provider.items()))
         bk = tuple(self.buckets)
         return (gs, pv, bk, tuple(self.bucket_algos),
-                tuple(self.bucket_comm), tuple(self.bucket_chunks))
+                tuple(self.bucket_comm), tuple(self.bucket_chunks),
+                tuple(self.bucket_fused))
 
     def fast_signature(self) -> tuple[int, int]:
         """Order-independent rolling hash of (groups, provider, buckets,
@@ -597,7 +623,8 @@ class FusionGraph:
         mutations — O(#buckets) instead of O(V log V)."""
         return (self._ghash,
                 hash((tuple(self.buckets), tuple(self.bucket_algos),
-                      tuple(self.bucket_comm), tuple(self.bucket_chunks))))
+                      tuple(self.bucket_comm), tuple(self.bucket_chunks),
+                      tuple(self.bucket_fused))))
 
     # --------------------------------------------------------------- stats
     def describe(self) -> dict:
@@ -623,4 +650,5 @@ class FusionGraph:
                 k: self.bucket_chunks.count(k)
                 for k in set(self.bucket_chunks)
             },
+            "fused_comm_buckets": sum(1 for f in self.bucket_fused if f),
         }

@@ -43,6 +43,7 @@ METHOD_TENSOR = "tensor"
 METHOD_ALGO = "algo"
 METHOD_COMM = "comm"
 METHOD_CHUNK = "chunk"
+METHOD_FUSED = "fused"
 
 # store-and-forward chunk counts METHOD_CHUNK draws from (1 restores the
 # whole-bucket collective; powers of two mirror NCCL's chunk granularity)
@@ -74,6 +75,15 @@ def _algo_applicable(sim) -> bool:
 
 def _engine_applicable(sim) -> bool:
     return _algo_applicable(sim) and getattr(sim, "streams", 1) > 1
+
+
+def _fused_applicable(sim) -> bool:
+    # in-kernel fusion only matters where the engine can price the early
+    # comm start (multi-stream) AND the cluster has a calibrated overlap
+    # discount — an undiscounted fused bucket prices exactly as its base
+    # kind, so searching the flag would burn candidate evaluations
+    return (_engine_applicable(sim)
+            and getattr(sim, "overlap_discount", 0.0) > 0.0)
 
 
 # ------------------------------------------------------------- applications
@@ -124,6 +134,13 @@ def _apply_chunk(g: FusionGraph, rng: random.Random) -> bool:
     return g.set_bucket_chunks(i, rng.choice(CHUNK_CHOICES))
 
 
+def _apply_fused(g: FusionGraph, rng: random.Random) -> bool:
+    if not g.buckets:
+        return False
+    i = rng.randrange(len(g.buckets))
+    return g.set_bucket_fused(i, rng.choice((False, True)))
+
+
 # ------------------------------------------------------------------ registry
 MUTATIONS: dict[str, Mutation] = {}
 
@@ -159,7 +176,17 @@ register_mutation(Mutation(
     METHOD_CHUNK, _apply_chunk, _engine_applicable,
     doc="event-engine method (vi): store-and-forward chunk count "
         "(pure scheduling; needs a multi-stream engine to matter)"))
+register_mutation(Mutation(
+    METHOD_FUSED, _apply_fused, _fused_applicable,
+    doc="kernel method (vii): in-kernel fused compute+comm per bucket "
+        "(CoCoNet-style; needs a multi-stream engine and a calibrated "
+        "overlap discount)"))
 
+# METHOD_FUSED is deliberately NOT in ALL_METHODS: this tuple keys the
+# RNG streams of seed-era benchmarks/tests (perf_search.py throughput,
+# trajectory-identity assertions), so it is frozen — ``active_methods``
+# appends registered extras after it, which is how default searches pick
+# the fused dimension up.
 ALL_METHODS = (METHOD_NONDUP, METHOD_DUP, METHOD_TENSOR, METHOD_ALGO,
                METHOD_COMM, METHOD_CHUNK)
 

@@ -50,15 +50,15 @@ from .costs import OracleEstimator
 from .graph import FusionGraph
 from .mutations import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO,
                         METHOD_CHUNK, METHOD_COMM, METHOD_DUP,
-                        METHOD_NONDUP, METHOD_TENSOR, MUTATIONS, Mutation,
-                        active_methods, random_apply)
+                        METHOD_FUSED, METHOD_NONDUP, METHOD_TENSOR,
+                        MUTATIONS, Mutation, active_methods, random_apply)
 from .simulator import Simulator
 
 __all__ = [
     "ALL_METHODS", "CHUNK_CHOICES", "METHOD_ALGO", "METHOD_CHUNK",
-    "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
-    "MUTATIONS", "Mutation", "SearchResult", "active_methods",
-    "backtracking_search", "random_apply",
+    "METHOD_COMM", "METHOD_DUP", "METHOD_FUSED", "METHOD_NONDUP",
+    "METHOD_TENSOR", "MUTATIONS", "Mutation", "SearchResult",
+    "active_methods", "backtracking_search", "random_apply",
 ]
 
 
@@ -84,21 +84,23 @@ _WORKER_CTX = None
 def _pool_init(payload: bytes) -> None:
     global _WORKER_CTX
     (prims, psuccs, ppreds, grad_prim, family, hw, n_devices,
-     cluster, streams, background) = pickle.loads(payload)
+     cluster, streams, background, overlap_discount) = pickle.loads(payload)
     sim = Simulator(hw=hw, n_devices=n_devices, incremental=False,
-                    cluster=cluster, streams=streams, background=background)
+                    cluster=cluster, streams=streams, background=background,
+                    overlap_discount=overlap_discount)
     _WORKER_CTX = (prims, psuccs, ppreds, grad_prim, family, sim)
 
 
 def _pool_cost(state: tuple) -> float:
     (groups, provider, next_gid, buckets, bucket_algos, bucket_comm,
-     bucket_chunks) = state
+     bucket_chunks, bucket_fused) = state
     prims, psuccs, ppreds, grad_prim, family, sim = _WORKER_CTX
     g = FusionGraph._from_parts(prims, psuccs, ppreds, groups, provider,
                                 next_gid, grad_prim, buckets, family=family,
                                 bucket_algos=bucket_algos,
                                 bucket_comm=bucket_comm,
-                                bucket_chunks=bucket_chunks)
+                                bucket_chunks=bucket_chunks,
+                                bucket_fused=bucket_fused)
     return sim.cost(g)
 
 
@@ -114,7 +116,8 @@ class _CandidatePool:
             (base.prims, base.psuccs, base.ppreds, base.grad_prim,
              base.family_token(), sim.hw, sim.n_devices,
              getattr(sim, "cluster", None), getattr(sim, "streams", 1),
-             getattr(sim, "background", ()))
+             getattr(sim, "background", ()),
+             getattr(sim, "overlap_discount", 0.0))
         )
         # spawn: workers only import repro.core (pure python, no jax), and
         # forking a process that already holds jax's thread pools can hang
@@ -127,7 +130,8 @@ class _CandidatePool:
         futs = [
             self._ex.submit(
                 _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets,
-                             g.bucket_algos, g.bucket_comm, g.bucket_chunks)
+                             g.bucket_algos, g.bucket_comm, g.bucket_chunks,
+                             g.bucket_fused)
             )
             for g in graphs
         ]

@@ -60,7 +60,7 @@ import itertools
 from collections import OrderedDict
 
 from ..cluster import (COLLECTIVE_ALGOS, ClusterSpec, KIND_AR, KIND_RS_AG,
-                       comm_coeffs, phases)
+                       comm_coeffs, overlap_discount_for, phases)
 from .costs import OracleEstimator, total_comm_time, total_compute_time
 from .events import (BackgroundTraffic, CommJob, ComputeJob, EventEngine,
                      TC_COMPUTE, TC_DP, TC_PP, bucket_jobs)
@@ -111,7 +111,8 @@ class Simulator:
                  keep_timeline: bool = False, incremental: bool = True,
                  state_cache_size: int = 64, max_journal: int = 24,
                  cluster: ClusterSpec | None = None, streams: int = 1,
-                 background: tuple = (), pipeline=None):
+                 background: tuple = (), pipeline=None,
+                 overlap_discount: float | None = None):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
         # legacy (hw, n_devices) maps to the flat back-compat spec — comm
@@ -142,6 +143,15 @@ class Simulator:
         # gradient buckets (DESIGN.md Sec. 11).  None = the paper's
         # single-device replay.
         self.pipeline = pipeline
+        # in-kernel fusion overlap discount (DESIGN.md Sec. 13): how far a
+        # fused bucket's collective reaches back into its producing compute
+        # job's tail, as a fraction of the producer's duration.  Resolved
+        # from the per-preset calibration table (0.0 on flat/uncalibrated
+        # specs, where fused buckets price exactly as their base kind and
+        # METHOD_FUSED drops out of the search).
+        if overlap_discount is None:
+            overlap_discount = overlap_discount_for(cluster)
+        self.overlap_discount = float(overlap_discount)
         self._engine = EventEngine(cluster, streams=self.streams)
         self._ar_coeffs = {
             algo: comm_coeffs(cluster, algo, KIND_AR)
@@ -241,13 +251,16 @@ class Simulator:
                     kind=kinds[i], deps=tuple(~p for p in deps_of[i])))
             return jobs, next_id
         chunks = g.bucket_chunks
+        fused = g.bucket_fused
+        disc = self.overlap_discount
         for i in range(len(buckets)):
             nbytes = g.bucket_bytes(buckets[i])
             if nbytes <= 0.0:
                 continue
             js, next_id = bucket_jobs(i, 0.0, nbytes, algos[i], kinds[i],
                                       chunks[i], next_id,
-                                      deps=tuple(~p for p in deps_of[i]))
+                                      deps=tuple(~p for p in deps_of[i]),
+                                      discount=disc if fused[i] else 0.0)
             jobs.extend(js)
         return jobs, next_id
 
@@ -354,6 +367,10 @@ class Simulator:
                 continue
             stages = sorted({group_stage[p] for p in deps_of[i]})
             bdeps = tuple(last_bwd[s] for s in stages)
+            # fused buckets are priced conservatively (no overlap discount)
+            # under a pipeline schedule: the coupled fluid scheduler cannot
+            # know a dep's finish ahead of service, so early-ready has no
+            # exact seam there (DESIGN.md Sec. 13)
             js, next_id = bucket_jobs(i, 0.0, nb[i], algos[i], kinds[i],
                                       chunks[i], next_id, deps=bdeps)
             comm.extend(js)
@@ -460,10 +477,20 @@ class Simulator:
             return None  # cyclic or inconsistent — let the full path decide
 
         bucket_ready_at: dict[int, float] = {}
+        fused = g.bucket_fused
+        disc = self.overlap_discount if self.streams > 1 else 0.0
         for i, b in enumerate(g.buckets):
             provs = g.bucket_ready_groups(b)
             try:
-                bucket_ready_at[i] = max(done_at[x] for x in provs)
+                if disc > 0.0 and fused[i]:
+                    # in-kernel fusion: ready reaches discount x duration
+                    # back into each provider's tail — same subtraction the
+                    # unified engine applies per dep, so delta stays
+                    # bit-identical to the full path (max is arithmetic-free)
+                    bucket_ready_at[i] = max(done_at[x] - disc * times[x]
+                                             for x in provs)
+                else:
+                    bucket_ready_at[i] = max(done_at[x] for x in provs)
             except KeyError:
                 return None
         timeline = None
@@ -509,15 +536,22 @@ class Simulator:
             # recurring TP/PP background traffic contends on the same
             # levels over the compute horizon (DESIGN.md Sec. 9).
             chunks = g.bucket_chunks
+            fused = g.bucket_fused
+            disc = self.overlap_discount
             jobs = []
             next_id = len(buckets)
             for i, r in bucket_ready_at.items():
                 nbytes = g.bucket_bytes(buckets[i])
                 if nbytes <= 0.0:
                     continue  # nothing to transfer: no latency D charged
+                # a fused bucket's ready was already discounted into the
+                # producer tail by the caller; the discount is re-stamped
+                # on the jobs so their phases carry the fused_* tags (the
+                # deps are resolved, so no second subtraction happens)
                 js, next_id = bucket_jobs(i, r, nbytes,
                                           algos[i], kinds[i], chunks[i],
-                                          next_id)
+                                          next_id,
+                                          discount=disc if fused[i] else 0.0)
                 jobs.extend(js)
             if self.background:
                 for traffic in self.background:
@@ -592,7 +626,9 @@ class Simulator:
         exactly (per-chunk coefficients sum to the unchunked ones), so the
         unchunked phase sums below stay an exact floor for chunked
         schedules; background TP/PP traffic is excluded (the bound is on
-        the gradient traffic the search controls)."""
+        the gradient traffic the search controls).  In-kernel fused buckets
+        conserve link work too — the overlap discount moves a job's start
+        earlier, never shrinks its phases — so the same floor holds."""
         comp = total_compute_time(g, self.estimator, self.hw)
         if self.streams == 1:
             comm = total_comm_time(g, cluster=self.cluster)

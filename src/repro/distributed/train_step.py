@@ -47,17 +47,25 @@ class GradSyncStrategy:
     even byte ranges, each synchronised by its own collective — the
     searched ``FusionGraph.bucket_chunks`` store-and-forward dimension,
     enacted for real (identical numerics: a psum of disjoint slices is the
-    sliced psum)."""
+    sliced psum).  ``fused[i]`` truthy marks bucket ``i`` for the in-kernel
+    compute+comm overlap path (the searched ``FusionGraph.bucket_fused``
+    dimension): Pallas staging kernels pack straight into reduce-scatter
+    layout and unpack straight out of the all-gather, with the same RS+AG
+    wire arithmetic — loss-bit-identical to the psum path."""
     buckets: list[list[int]]
     barriers: bool = False      # fence buckets with optimization_barrier
     comms: Optional[list[str]] = None   # per-bucket "ar" | "rs_ag"
     chunks: Optional[list[int]] = None  # per-bucket collective count (>= 1)
+    fused: Optional[list[int]] = None   # per-bucket in-kernel overlap flag
 
     def comm_kind(self, i: int) -> str:
         return self.comms[i] if self.comms else "ar"
 
     def chunk_count(self, i: int) -> int:
         return max(int(self.chunks[i]), 1) if self.chunks else 1
+
+    def is_fused(self, i: int) -> bool:
+        return bool(self.fused[i]) if self.fused else False
 
     @staticmethod
     def per_tensor(params) -> "GradSyncStrategy":
@@ -87,35 +95,39 @@ class GradSyncStrategy:
 
     @staticmethod
     def from_buckets(buckets, comms=None, chunks=None, params=None,
-                     barriers: bool = False) -> "GradSyncStrategy":
+                     barriers: bool = False, fused=None) -> "GradSyncStrategy":
         """Build a strategy from explicit per-bucket state (the single
         implementation of the clip-to-leaves contract, shared by
         ``from_fusion_graph`` and ``repro.plan.Plan.grad_sync``).  With
         ``params``, bucket entries are clipped to the real leaf count and
-        uncovered leaves get singleton AllReduce buckets."""
+        uncovered leaves get singleton unfused AllReduce buckets."""
         buckets = [list(b) for b in buckets]
         comms = (list(comms) if comms is not None
                  else ["ar"] * len(buckets))
         chunks = ([int(k) for k in chunks] if chunks is not None
                   else [1] * len(buckets))
+        fused = ([int(bool(f)) for f in fused] if fused is not None
+                 else [0] * len(buckets))
         if params is not None:
             n = len(jax.tree.leaves(params))
             seen: set = set()
-            kept, kcomms, kchunks = [], [], []
-            for b, kind, k in zip(buckets, comms, chunks):
+            kept, kcomms, kchunks, kfused = [], [], [], []
+            for b, kind, k, fz in zip(buckets, comms, chunks, fused):
                 bk = [i for i in b if i < n]
                 seen.update(bk)
                 if bk:
                     kept.append(bk)
                     kcomms.append(kind)
                     kchunks.append(k)
+                    kfused.append(fz)
             rest = [i for i in range(n) if i not in seen]
             kept.extend([[i] for i in rest])
             kcomms.extend(["ar"] * len(rest))
             kchunks.extend([1] * len(rest))
-            buckets, comms, chunks = kept, kcomms, kchunks
+            kfused.extend([0] * len(rest))
+            buckets, comms, chunks, fused = kept, kcomms, kchunks, kfused
         return GradSyncStrategy(buckets, barriers=barriers, comms=comms,
-                                chunks=chunks)
+                                chunks=chunks, fused=fused)
 
     @staticmethod
     def from_fusion_graph(g, params) -> "GradSyncStrategy":
@@ -126,13 +138,15 @@ class GradSyncStrategy:
         to per-chunk collectives when enacted."""
         kinds = getattr(g, "bucket_comm", None) or ["ar"] * len(g.buckets)
         counts = getattr(g, "bucket_chunks", None) or [1] * len(g.buckets)
+        flags = getattr(g, "bucket_fused", None)
         return GradSyncStrategy.from_buckets(g.buckets, kinds, counts,
-                                             params=params)
+                                             params=params, fused=flags)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump({"buckets": self.buckets, "barriers": self.barriers,
-                       "comms": self.comms, "chunks": self.chunks}, f)
+                       "comms": self.comms, "chunks": self.chunks,
+                       "fused": self.fused}, f)
 
     @staticmethod
     def load(path: str) -> "GradSyncStrategy":
@@ -140,7 +154,36 @@ class GradSyncStrategy:
             d = json.load(f)
         return GradSyncStrategy(d["buckets"], d.get("barriers", False),
                                 comms=d.get("comms"),
-                                chunks=d.get("chunks"))
+                                chunks=d.get("chunks"),
+                                fused=d.get("fused"))
+
+
+def _fused_bucket_sync(leaves, dp: int, chunks: int, dp_axes,
+                       barrier_with=None):
+    """In-kernel fused bucket sync: Pallas pack (grad leaves -> chunked,
+    shard-tiled f32 staging, cast fused) -> per-chunk real reduce-scatter +
+    mean + all-gather -> Pallas unpack (f32 -> grad dtype cast fused into
+    the un-staging pass).  The wire arithmetic is exactly the ``rs_ag``
+    lowering's, so numerics match the fused ``psum`` bit-for-bit.  Raises
+    at trace time when Pallas cannot trace inside this shard_map region;
+    the caller falls back to the jnp RS+AG lowering (same numerics)."""
+    from ..kernels import ops as K
+    total = sum(l.size for l in leaves)
+    k = min(max(int(chunks), 1), max(total, 1))
+    parts = K.fused_pack(leaves, total, dp, k)
+    if barrier_with is not None:
+        fenced = jax.lax.optimization_barrier(tuple(parts) + (barrier_with,))
+        parts = list(fenced[:-1])
+    cuts = [total * c // k for c in range(k + 1)]
+    outs = []
+    for c, part in enumerate(parts):
+        shard = jax.lax.psum_scatter(part, tuple(dp_axes),
+                                     scatter_dimension=0, tiled=True) / dp
+        part = jax.lax.all_gather(shard, tuple(dp_axes), tiled=True)
+        outs.append(part[:cuts[c + 1] - cuts[c]])
+    f32 = jnp.concatenate(outs) if k > 1 else outs[0]
+    return K.fused_unpack(f32, [l.shape for l in leaves],
+                          [l.dtype for l in leaves]), f32
 
 
 def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
@@ -164,6 +207,16 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
     count the event engine priced.  Numerics are bit-identical to the
     whole-bucket collective: each element's reduction is unchanged, only
     the op it rides in shrinks.
+
+    A *fused* bucket (``strategy.fused[i]`` — the searched in-kernel
+    compute+comm overlap dimension) routes through
+    :func:`_fused_bucket_sync`: Pallas staging kernels pack the leaves
+    straight into the reduce-scatter's chunked shard-tiled layout and
+    unpack straight out of the all-gather with the dtype cast fused, with
+    the identical RS+AG wire arithmetic in between.  Where Pallas or
+    gather-type collectives cannot lower, the bucket falls down the same
+    ladder as ``rs_ag`` (jnp RS+AG, then fused ``psum``) — numerics are
+    preserved on every rung.
 
     Compat gate: stock JAX 0.4.x's bundled XLA aborts on gather-type
     collectives (``all_gather``/``all_to_all``/``ppermute``) inside a
@@ -189,6 +242,28 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
         out: list = [None] * len(leaves_local)
         prev_fused = None
         for bi, bucket in enumerate(strategy.buckets):
+            gather_ok = (full_manual
+                         or not compat.needs_partial_manual_workarounds())
+            # searched in-kernel fused path: Pallas staging kernels around
+            # a real RS+AG pair.  The ladder: Pallas kernel path -> (when
+            # Pallas cannot trace in this region) the jnp RS+AG lowering
+            # below -> (when gather-type ops cannot lower at all) the fused
+            # psum — every rung loss-bit-identical.
+            want_fused = strategy.is_fused(bi) and dp > 1 and gather_ok
+            if want_fused:
+                try:
+                    outs, packed = _fused_bucket_sync(
+                        [leaves_local[i] for i in bucket], dp,
+                        strategy.chunk_count(bi), dp_axes,
+                        barrier_with=(prev_fused if strategy.barriers
+                                      else None))
+                except Exception:
+                    pass  # Pallas unavailable here -> jnp RS+AG below
+                else:
+                    for i, o in zip(bucket, outs):
+                        out[i] = o
+                    prev_fused = packed
+                    continue
             flats = [leaves_local[i].reshape(-1) for i in bucket]
             fused = jnp.concatenate(flats) if len(flats) > 1 else flats[0]
             if strategy.barriers and prev_fused is not None:
@@ -197,10 +272,8 @@ def sync_grads(grads, strategy: GradSyncStrategy, dp_axes: Sequence[str],
             # around an XLA:CPU bf16 all-reduce miscompile in the dry-run.
             dt = fused.dtype
             f32 = fused.astype(jnp.float32)
-            gather_ok = (full_manual
-                         or not compat.needs_partial_manual_workarounds())
-            rs_ag = (strategy.comm_kind(bi) == "rs_ag" and dp > 1
-                     and gather_ok)
+            rs_ag = ((strategy.comm_kind(bi) == "rs_ag" or want_fused)
+                     and dp > 1 and gather_ok)
 
             def reduce_one(part):
                 if rs_ag:

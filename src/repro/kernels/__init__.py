@@ -8,5 +8,7 @@ Each kernel ships three artifacts:
 
 Kernels: flash_attention (GQA / causal / sliding-window), rglru (RG-LRU
 chunked recurrence), rwkv6 (WKV-6 chunked recurrence), bucket_pack
-(tensor-fusion gradient packing — the paper's fused-AllReduce staging copy).
+(tensor-fusion gradient packing — the paper's fused-AllReduce staging copy),
+fused_grad_sync (in-kernel compute+comm overlap: reduce-scatter-ready
+chunked pack + all-gather unpack/cast halves around the wire collective).
 """

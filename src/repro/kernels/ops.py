@@ -19,6 +19,7 @@ from . import flash_attention as _fa
 from . import rglru as _rg
 from . import rwkv6 as _rk
 from . import bucket_pack as _bp
+from . import fused_grad_sync as _fg
 from . import ref as _ref
 
 _INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
@@ -58,8 +59,25 @@ def bucket_pack(leaves, total: int, out_dtype=jnp.float32):
                                   interpret=_INTERPRET)
 
 
+def fused_pack(leaves, total: int, dp: int, chunks: int = 1):
+    """Reduce-scatter-ready chunked staging of a fused bucket (the
+    in-kernel compute+comm overlap path's pack half)."""
+    return _fg.fused_pack_kernel(leaves, total, dp, chunks,
+                                 interpret=_INTERPRET)
+
+
+def fused_unpack(buf, shapes, dtypes):
+    """All-gather epilogue: un-stage the gathered f32 bucket back into
+    leaves with the dtype cast fused (the overlap path's unpack half)."""
+    return _fg.fused_unpack_kernel(buf, shapes, dtypes,
+                                   interpret=_INTERPRET)
+
+
 # re-exported oracles (tests assert kernel == ref)
 flash_attention_ref = _ref.flash_attention_ref
 rglru_ref = _ref.rglru_ref
 rwkv6_ref = _ref.rwkv6_ref
 bucket_pack_ref = _ref.bucket_pack_ref
+bucket_unpack_ref = _ref.bucket_unpack_ref
+fused_pack_ref = _ref.fused_pack_ref
+fused_unpack_ref = _ref.fused_unpack_ref

@@ -89,3 +89,25 @@ def bucket_unpack_ref(buf, shapes, dtypes):
         out.append(buf[off:off + n].reshape(shape).astype(dt))
         off += n
     return out
+
+
+def fused_pack_ref(leaves: list, total: int, dp: int, chunks: int = 1):
+    """Reduce-scatter-ready staging: fused f32 bucket (padded to ``total``)
+    cut at even byte boundaries into ``chunks`` ranges, each zero-padded to
+    a multiple of ``dp``."""
+    flat = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    buf = jnp.concatenate(flat)
+    buf = jnp.pad(buf, (0, total - buf.shape[0]))
+    k = max(int(chunks), 1)
+    cuts = [total * c // k for c in range(k + 1)]
+    out = []
+    for c in range(k):
+        part = buf[cuts[c]:cuts[c + 1]]
+        out.append(jnp.pad(part, (0, (-part.shape[0]) % max(int(dp), 1))))
+    return out
+
+
+def fused_unpack_ref(buf, shapes, dtypes):
+    """All-gather epilogue: un-stage + cast back — same contract as
+    ``bucket_unpack_ref``."""
+    return bucket_unpack_ref(buf, shapes, dtypes)

@@ -596,10 +596,18 @@ def main():
                          "pricing; default: the recorded width)")
     ap.add_argument("--timeline", action="store_true",
                     help="print (and embed) the contended comm schedule as "
-                         "(kind, bucket, chunk, traffic_class, algo, level, "
-                         "start, end) records (needs --streams > 1); with "
-                         "--pp-stages also the unified compute+p2p+grad "
-                         "records and the PP bubble")
+                         "8-tuple records (kind, bucket, chunk, "
+                         "traffic_class, algo, level, start, end): kind is "
+                         "the phase ('allreduce' / 'reduce_scatter' / "
+                         "'all_gather', hierarchical legs prefixed per "
+                         "level; in-kernel fused buckets carry a 'fused_' "
+                         "prefix), bucket/chunk index the job, "
+                         "traffic_class is 'dp'|'pp'|'bg', algo the "
+                         "collective algorithm, level the link-level name, "
+                         "start/end seconds from iteration start (needs "
+                         "--streams > 1); with --pp-stages also the "
+                         "unified compute+p2p+grad records and the PP "
+                         "bubble")
     ap.add_argument("--pp-stages", type=int, default=None,
                     help="price the step under a 1F1B pipeline schedule "
                          "with this many stages (adds a cluster.pp block)")

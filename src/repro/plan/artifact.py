@@ -170,6 +170,10 @@ class Plan:
     bucket_comm: tuple[str, ...]
     bucket_chunks: tuple[int, ...]
     bucket_bytes: tuple[float, ...]      # () when unknown (v0 migration)
+    # per-bucket in-kernel compute+comm fusion flags (0/1, DESIGN.md
+    # Sec. 13).  Optional v2 field: () in pre-fused artifacts means "no
+    # bucket fused", so old plans load (and fingerprint) unchanged.
+    bucket_fused: tuple[int, ...] = ()
     # pricing context
     streams: int = 1
     background: tuple[tuple, ...] = ()
@@ -195,6 +199,10 @@ class Plan:
         if self.bucket_bytes and len(self.bucket_bytes) != nb:
             raise PlanError(f"corrupt plan: bucket_bytes has "
                             f"{len(self.bucket_bytes)} entries for "
+                            f"{nb} buckets")
+        if self.bucket_fused and len(self.bucket_fused) != nb:
+            raise PlanError(f"corrupt plan: bucket_fused has "
+                            f"{len(self.bucket_fused)} entries for "
                             f"{nb} buckets")
 
     # ------------------------------------------------------------ graph I/O
@@ -238,6 +246,7 @@ class Plan:
             bucket_comm=tuple(g.bucket_comm),
             bucket_chunks=tuple(int(k) for k in g.bucket_chunks),
             bucket_bytes=tuple(float(g.bucket_bytes(b)) for b in g.buckets),
+            bucket_fused=tuple(int(bool(f)) for f in g.bucket_fused),
             predicted_iteration_time=predicted,
             provenance=dict(provenance or {}),
             **kw,
@@ -273,7 +282,9 @@ class Plan:
                 family=base.family_token(),
                 bucket_algos=list(self.bucket_algos),
                 bucket_comm=list(self.bucket_comm),
-                bucket_chunks=list(self.bucket_chunks))
+                bucket_chunks=list(self.bucket_chunks),
+                bucket_fused=([bool(f) for f in self.bucket_fused]
+                              if self.bucket_fused else None))
         else:
             # v0-migrated bucket-only plan: keep base's op-fusion state
             g = FusionGraph._from_parts(
@@ -283,7 +294,9 @@ class Plan:
                 family=base.family_token(),
                 bucket_algos=list(self.bucket_algos),
                 bucket_comm=list(self.bucket_comm),
-                bucket_chunks=list(self.bucket_chunks))
+                bucket_chunks=list(self.bucket_chunks),
+                bucket_fused=([bool(f) for f in self.bucket_fused]
+                              if self.bucket_fused else None))
         seen: set[int] = set()
         for b in g.buckets:
             for p in b:
@@ -312,6 +325,7 @@ class Plan:
 
         return GradSyncStrategy.from_buckets(
             self.buckets, self.bucket_comm, self.bucket_chunks,
+            fused=self.bucket_fused or None,
             params=params, barriers=self.barriers)
 
     def cluster_spec(self) -> ClusterSpec | None:
@@ -449,6 +463,7 @@ class Plan:
                             for k in set(self.bucket_comm)},
             "bucket_chunks": {k: self.bucket_chunks.count(k)
                               for k in set(self.bucket_chunks)},
+            "fused_comm_buckets": sum(1 for f in self.bucket_fused if f),
             "streams": self.streams,
             "estimator": self.estimator,
             "pipeline": self.pipeline,
@@ -469,10 +484,13 @@ class Plan:
         searches that converge on the same strategy under different
         clusters/streams fingerprint identically (the cross-topology
         distinctness metric of ``fig_cluster_sweep``)."""
-        blob = json.dumps(
-            [self.groups, self.provider, self.buckets, self.bucket_algos,
-             self.bucket_comm, self.bucket_chunks],
-            sort_keys=True).encode()
+        parts = [self.groups, self.provider, self.buckets, self.bucket_algos,
+                 self.bucket_comm, self.bucket_chunks]
+        if any(self.bucket_fused):
+            # appended only when some bucket is fused: all-unfused (and
+            # pre-fused) plans keep their historical fingerprints
+            parts.append(self.bucket_fused)
+        blob = json.dumps(parts, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:16]
 
     # -------------------------------------------------------------- file I/O
@@ -535,6 +553,7 @@ class Plan:
                 bucket_comm=_tuplize(d["bucket_comm"]),
                 bucket_chunks=_tuplize(d["bucket_chunks"]),
                 bucket_bytes=_tuplize(d["bucket_bytes"]),
+                bucket_fused=_tuplize(d.get("bucket_fused", [])),
                 streams=int(d.get("streams", 1)),
                 background=_tuplize(d.get("background", [])),
                 pipeline=None if pipeline is None else _tuplize(pipeline),

@@ -51,7 +51,7 @@ from typing import Iterable, Sequence
 from ..cluster import ClusterSpec
 from ..core.graph import FusionGraph
 from ..core.mutations import (METHOD_ALGO, METHOD_CHUNK, METHOD_COMM,
-                              active_methods)
+                              METHOD_FUSED, active_methods)
 from .artifact import Plan, PlanError, cluster_fingerprint, estimator_name
 
 INDEX_NAME = "index.json"
@@ -133,6 +133,9 @@ def _context_parts(sim) -> dict:
         "pipeline": None if pp is None else list(pp.to_tuple()),
         "hw": None if hw is None else sorted(dataclasses.asdict(hw).items()),
         "estimator": estimator_name(getattr(sim, "estimator", None)),
+        # the in-kernel overlap discount changes every fused bucket's price,
+        # so two sims differing only in calibration must not share entries
+        "overlap_discount": float(getattr(sim, "overlap_discount", 0.0)),
     }
 
 
@@ -252,6 +255,8 @@ def warm_start_state(plan: Plan, base: FusionGraph, sim) -> FusionGraph | None:
             g.set_bucket_comm(i, "ar")
         if METHOD_CHUNK not in active:
             g.set_bucket_chunks(i, 1)
+        if METHOD_FUSED not in active:
+            g.set_bucket_fused(i, False)
     return g
 
 

@@ -71,6 +71,7 @@ def trace_model_graph(cfg, *, batch: int = 8, seq: int = 64,
 
 def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
                  background=(), pipeline=None, workers: int | None = None,
+                 overlap_discount: float | None = None,
                  graph=None, estimator=None, hw: Hardware = TPU_V5E,
                  n_devices: int = 256,
                  batch: int = 8, seq: int = 64, model: str = "stacked",
@@ -89,8 +90,11 @@ def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
     event-engine pricing (``pipeline`` is a
     :class:`~repro.core.pipeline.PipelineSchedule` that prices the run
     under a 1F1B stage schedule instead of pure data parallelism),
-    ``workers`` the candidate-evaluation pool; the remaining knobs are the
-    search hyper-parameters of ``backtracking_search``.
+    ``workers`` the candidate-evaluation pool; ``overlap_discount``
+    overrides the preset's calibrated in-kernel fusion discount (pass
+    ``0.0`` to exclude the fused dimension from the search); the
+    remaining knobs are the search hyper-parameters of
+    ``backtracking_search``.
 
     ``cache`` (a :class:`repro.plan.cache.PlanCache` or a directory path)
     short-circuits the search (DESIGN.md Sec. 12): an exact key hit —
@@ -118,7 +122,8 @@ def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
                                   hw=hw, seed=seed)
     sim = Simulator(estimator=estimator, hw=hw, n_devices=n_devices,
                     cluster=cluster, streams=streams,
-                    background=tuple(background), pipeline=pipeline)
+                    background=tuple(background), pipeline=pipeline,
+                    overlap_discount=overlap_discount)
 
     # ---------------------------------------------------------- plan cache
     store = key = features = None

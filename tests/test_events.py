@@ -13,14 +13,14 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.cluster import (BUCKET_COMM_KINDS, COLLECTIVE_ALGOS, ClusterSpec,
-                           PRESETS, chunk_phases, comm_coeffs, get_preset,
-                           phases)
+                           PRESETS, chunk_phases, comm_coeffs, fused_phases,
+                           get_preset, phases)
 from repro.core import (BackgroundTraffic, CommEngine, CommJob, FusionGraph,
                         PrimOp, Simulator, backtracking_search, profile_graph)
 from repro.core.graph import EW
 from repro.core.hw import TPU_V5E
 from repro.core.search import (ALL_METHODS, CHUNK_CHOICES, METHOD_CHUNK,
-                               METHOD_COMM, random_apply)
+                               METHOD_COMM, METHOD_FUSED, random_apply)
 
 
 def serialized_reference(jobs, spec):
@@ -255,6 +255,81 @@ def test_chunk_phases_conserve_coefficients():
                         c0, rel=1e-12)
                     assert k * sum(p.d for p in ph) == pytest.approx(
                         d0, rel=1e-12, abs=1e-30)
+
+
+def test_fused_phases_conserve_coefficients():
+    """In-kernel fusion conserves link work exactly: the per-chunk fused
+    phase ``(c, d)`` coefficients equal the :func:`chunk_phases` ones for
+    every discount (only readiness moves), kinds gain the ``fused_`` tag,
+    and ``discount=0`` is the identical ``chunk_phases`` tuple
+    (bit-identical schedules, same cache line)."""
+    for spec in PRESETS.values():
+        for algo in COLLECTIVE_ALGOS:
+            for kind in ("ar", "rs_ag"):
+                for k in (1, 2, 8):
+                    base = chunk_phases(spec, algo, kind, k)
+                    assert fused_phases(spec, algo, kind, k, 0.0) is base
+                    fz = fused_phases(spec, algo, kind, k, 0.525)
+                    assert len(fz) == len(base)
+                    for p, q in zip(base, fz):
+                        assert q.c == p.c and q.d == p.d
+                        assert q.level == p.level
+                        assert q.kind == f"fused_{p.kind}"
+                        assert q.overlap == 0.525
+    with pytest.raises(ValueError):
+        fused_phases(get_preset("a100_nvlink_ib"), "ring", "ar", 1, 1.0)
+
+
+@pytest.mark.parametrize("streams", [1, 4])
+def test_incremental_equals_full_with_fused_mutations(streams):
+    """Delta simulation == full replay when METHOD_FUSED flips per-bucket
+    in-kernel fusion flags alongside every legacy mutation, on a calibrated
+    (discounted) sim."""
+    spec = get_preset("a100_nvlink_ib")
+    kw = dict(cluster=spec, streams=streams, overlap_discount=0.525)
+    sim_inc = Simulator(incremental=True, **kw)
+    sim_full = Simulator(incremental=False, **kw)
+    rng = random.Random(23)
+    parent = chain_graph(n=18, grads=(3, 7, 11, 15),
+                         grad_bytes=float(1 << 22))
+    methods = ALL_METHODS + (METHOD_FUSED,)
+    saw_fused = False
+    for step in range(60):
+        child = parent.clone()
+        for _ in range(rng.randint(1, 3)):
+            m = rng.choice(methods)
+            changed = random_apply(child, m, 1, rng)
+            saw_fused |= changed and m == METHOD_FUSED
+        ri = sim_inc.run(child)
+        rf = sim_full.run(child)
+        assert ri.iteration_time == rf.iteration_time, step
+        assert ri.comm_time == rf.comm_time, step
+        assert ri.comm_finish == rf.comm_finish, step
+        if rng.random() < 0.6:
+            parent = child
+    assert saw_fused, "fused mutation never drawn"
+    assert sim_inc.stats["delta"] > 0
+
+
+def test_search_fuses_only_on_discounted_multistream_sim():
+    """METHOD_FUSED is dropped on serialized or undiscounted sims (legacy
+    trajectories bit-identical) and live on a calibrated multi-stream sim,
+    where a fused bucket never prices worse than its unfused twin."""
+    spec = get_preset("cross_dc_2pod")
+    g = chain_graph(n=20, grads=(3, 7, 11, 15), grad_bytes=float(1 << 24))
+    kw = dict(unchanged_limit=40, max_steps=60, seed=2)
+    for sim in (Simulator(cluster=spec, streams=1, overlap_discount=0.525),
+                Simulator(cluster=spec, streams=4, overlap_discount=0.0)):
+        res = backtracking_search(g, sim, **kw)
+        assert not any(res.best.bucket_fused)
+    sim4 = Simulator(cluster=spec, streams=4, overlap_discount=0.525)
+    res4 = backtracking_search(g, sim4, **kw)
+    assert res4.best_cost <= res4.initial_cost
+    base = sim4.run(g).iteration_time
+    fz = g.clone()
+    for i in range(len(fz.buckets)):
+        fz.set_bucket_fused(i, True)
+    assert sim4.run(fz).iteration_time <= base + 1e-15
 
 
 def _chunk_chain(bucket, ready, nbytes, algo, k, base_id, kind="ar"):

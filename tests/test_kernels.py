@@ -92,6 +92,45 @@ def test_bucket_pack(sizes, dtype):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("sizes", [[17], [31, 64], [5, 1000, 3]])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dp,chunks", [(1, 1), (4, 1), (4, 3), (8, 8)])
+def test_fused_pack(sizes, dtype, dp, chunks):
+    """Chunked fused-sync pack == jnp oracle exactly: same chunk cuts, same
+    per-chunk shard padding, f32 upcast, zero tails."""
+    leaves = [arr((s,), dtype) for s in sizes]
+    total = sum(sizes)
+    parts = K.fused_pack(leaves, total, dp, chunks)
+    refs = K.fused_pack_ref(leaves, total, dp, chunks)
+    assert len(parts) == len(refs)
+    for part, ref in zip(parts, refs):
+        assert part.dtype == jnp.float32
+        assert part.shape == ref.shape
+        assert part.shape[0] % dp == 0
+        np.testing.assert_array_equal(np.asarray(part), np.asarray(ref))
+
+
+@pytest.mark.parametrize("sizes", [[17], [31, 64], [5, 1000, 3]])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_unpack_roundtrip(sizes, dtype):
+    """unpack(concat(pack(...)) trimmed to total) returns every leaf
+    bit-identically (f32) / value-identically after the bf16 round-trip."""
+    leaves = [arr((s,), dtype) for s in sizes]
+    total = sum(sizes)
+    parts = K.fused_pack(leaves, total, 1, 2)
+    flat = jnp.concatenate(parts)[:total]
+    out = K.fused_unpack(flat, [l.shape for l in leaves],
+                         [l.dtype for l in leaves])
+    ref = K.fused_unpack_ref(flat, [l.shape for l in leaves],
+                             [l.dtype for l in leaves])
+    for o, r, l in zip(out, ref, leaves):
+        assert o.shape == l.shape and o.dtype == l.dtype
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+        np.testing.assert_array_equal(
+            np.asarray(o, np.float32),
+            np.asarray(l.astype(jnp.float32).astype(dtype), np.float32))
+
+
 def test_flash_kernel_inside_model():
     """use_kernels=True path produces the same logits as the XLA path."""
     from repro.configs import get_config
