@@ -1,0 +1,202 @@
+"""Fig. G (ours): TP-aware joint search (dep-coupled activation traffic +
+searched pipeline knobs) vs blind background-traffic modeling across the
+cluster preset zoo (DESIGN.md Sec. 14).
+
+PR 4 modeled tensor-parallel activation collectives as *periodic
+background noise*: recurring ``tp``-class all-reduce jobs at a fixed
+cadence with no dependency structure.  The unified engine now lowers them
+as first-class per-layer jobs dep-coupled to the compute that produces
+and consumes them (``repro.core.tp_traffic``): forward activations gate
+downstream compute, backward ones gate gradient readiness.  Together with
+the searched pipeline knobs (``pp_split`` / ``pp_microbatch`` /
+``pp_interleave``) the search prices candidates under the contention
+structure they would actually run under, instead of a horizon-averaged
+smear.
+
+For each preset, two backtracking searches over the same comm-bound
+traced graph:
+
+* ``blind`` — 4-stream engine + 1F1B pipeline + the legacy periodic
+  ``tp``-class background jobs (``TPTraffic.to_background``),
+* ``joint`` — the same engine and pipeline with ``tp=TPTraffic(...)``
+  (dep-coupled lowering), *seeded* with the blind search's winning
+  strategy (``initial=``),
+
+both fed the *same* per-layer activation volume, so only the contention
+structure differs.  Because the joint search starts from the blind
+winner, its best can never price worse than enacting the blind strategy
+under the truthful model — regressions are structurally impossible; the
+headline is on how many presets the joint search finds a *strictly*
+better strategy.
+
+    PYTHONPATH=src python benchmarks/fig_tp_sweep.py [--quick] [--smoke]
+
+``--smoke`` is the CI lane: three presets at a reduced budget and a hard
+failure (exit 1) on any regression (joint strictly worse than enacting
+the blind pick — impossible by construction, so firing means the seeding
+contract broke) or insane pricing.  Full runs write
+``experiments/perf/tp_sweep.json`` and print a CSV block.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import arch_graph, csv_row
+from repro.cluster import PRESETS
+from repro.core import (PipelineSchedule, Simulator, TPTraffic,
+                        backtracking_search)
+
+OUT = "experiments/perf"
+
+STREAMS = 4
+STAGES = 4
+MICROBATCHES = 8
+TP_LAYERS = 6  # matches arch_graph's layer count
+SMOKE_PRESETS = ("a100_nvlink_ib", "cross_dc_2pod", "tpu_v5e_pod_256")
+
+
+def tp_models(g0, spec):
+    """The two pricing models under comparison, fed the same per-layer
+    activation volume: the legacy periodic ``tp``-class background jobs
+    and the dep-coupled per-layer lowering.  The volume reuses the
+    simulator's own stage-cut activation estimate (one all-reduce of the
+    mean boundary activation per layer per direction), so the models
+    differ only in contention structure."""
+    sched = PipelineSchedule(n_stages=STAGES, n_microbatches=MICROBATCHES)
+    probe = Simulator(cluster=spec, streams=STREAMS, pipeline=sched)
+    pi = probe.pipeline_inputs(g0)
+    tp = TPTraffic(n_layers=TP_LAYERS, fwd_bytes=pi["p2p_bytes"])
+    horizon = sum(pi["stage_busy"])
+    return sched, tp, horizon
+
+
+def sweep_one(g0, name: str, spec, *, unchanged_limit: int, max_steps: int,
+              seed: int = 0) -> dict:
+    sched, tp, horizon = tp_models(g0, spec)
+    blind_sim = Simulator(cluster=spec, streams=STREAMS, pipeline=sched,
+                          background=tuple(tp.to_background(horizon)))
+    joint_sim = Simulator(cluster=spec, streams=STREAMS, pipeline=sched,
+                          tp=tp)
+    skw = dict(unchanged_limit=unchanged_limit, max_steps=max_steps,
+               seed=seed)
+    blind = backtracking_search(g0, blind_sim, **skw)
+    # seed the joint search with the blind winner: best-vs-best under the
+    # truthful model can then never regress (see module docstring)
+    joint = backtracking_search(g0, joint_sim, initial=blind.best, **skw)
+    blind_under_joint = joint_sim.cost(blind.best)
+    r_joint = joint_sim.run(joint.best)
+    ratio = (blind_under_joint / joint.best_cost
+             if joint.best_cost > 0 else 1.0)
+    return {
+        "preset": name,
+        "n_devices": spec.n_devices,
+        "levels": [l.name for l in spec.levels],
+        "tp_fwd_bytes": tp.fwd_bytes,
+        "tp_total_bytes": tp.total_bytes,
+        "blind": {
+            "best_cost": blind.best_cost,
+            "simulations": blind.simulations,
+            "under_joint_s": blind_under_joint,
+            "pp_knobs": (None if blind.best.pp_knobs is None
+                         else list(blind.best.pp_knobs)),
+        },
+        "joint": {
+            "best_cost": joint.best_cost,
+            "simulations": joint.simulations,
+            "pp_knobs": (None if joint.best.pp_knobs is None
+                         else list(joint.best.pp_knobs)),
+            "bubble_fraction": r_joint.pipeline["bubble"]["fraction"],
+            "tp_busy_s": (r_joint.tp or {}).get("tp_busy_s"),
+        },
+        "strategies_differ": (blind.best.signature()
+                              != joint.best.signature()),
+        "joint_win": ratio,
+        "strict_win": blind_under_joint > joint.best_cost * (1 + 1e-12),
+        "regression": joint.best_cost > blind_under_joint * (1 + 1e-9),
+    }
+
+
+def run(arch: str = "qwen2-0.5b", unchanged_limit: int = 40,
+        max_steps: int = 80, seed: int = 0, verbose: bool = True,
+        batch: int = 2, seq: int = 32, smoke: bool = False) -> dict:
+    # comm-bound regime (same as fig_pp_sweep): model-sized gradients with
+    # shrunk compute, so comm-schedule choices dominate the ranking
+    g0 = arch_graph(arch, batch=batch, seq=seq)
+    presets = SMOKE_PRESETS if smoke else tuple(PRESETS)
+    rows = []
+    for name in presets:
+        spec = PRESETS[name]
+        t0 = time.perf_counter()
+        row = sweep_one(g0, name, spec, unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, seed=seed)
+        row["wall_s"] = round(time.perf_counter() - t0, 2)
+        rows.append(row)
+        if verbose:
+            print(csv_row(
+                name, spec.n_devices, row["strategies_differ"],
+                f"{row['blind']['under_joint_s']*1e3:.3f}ms",
+                f"{row['joint']['best_cost']*1e3:.3f}ms",
+                f"{row['joint_win']:.3f}x",
+                "WIN" if row["strict_win"] else "tie"))
+    wins = [r["preset"] for r in rows if r["strict_win"]]
+    out = {
+        "arch": arch,
+        "batch": batch,
+        "seq": seq,
+        "streams": STREAMS,
+        "n_stages": STAGES,
+        "n_microbatches": MICROBATCHES,
+        "tp_layers": TP_LAYERS,
+        "unchanged_limit": unchanged_limit,
+        "max_steps": max_steps,
+        "seed": seed,
+        "presets": rows,
+        "strict_wins_on": wins,
+        "regressions_on": [r["preset"] for r in rows if r["regression"]],
+    }
+    if verbose:
+        print(f"# TP-aware joint search strictly beats the blind model's "
+              f"best-vs-best on {len(wins)}/{len(rows)} presets: {wins}")
+    if not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        path = os.path.join(OUT, "tp_sweep.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if verbose:
+            print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: 3 presets at reduced budget; exit 1 on "
+                         "any regression or insane pricing")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+    quick = args.quick or args.smoke
+    out = run(arch=args.arch,
+              unchanged_limit=20 if quick else 40,
+              max_steps=40 if quick else 80,
+              smoke=args.smoke)
+    if args.smoke:
+        bad = []
+        for r in out["presets"]:
+            if r["regression"]:
+                bad.append(f"{r['preset']}: joint regressed vs blind "
+                           f"({r['joint_win']:.4f}x)")
+            if not (0.0 < r["joint"]["bubble_fraction"] < 1.0):
+                bad.append(f"{r['preset']}: bubble "
+                           f"{r['joint']['bubble_fraction']:.3f}")
+            if not r["joint"]["best_cost"] > 0.0:
+                bad.append(f"{r['preset']}: non-positive cost")
+        if bad:
+            print(f"SMOKE FAIL: {bad}")
+            raise SystemExit(1)

@@ -367,6 +367,45 @@ def main():
                   f"{[t for t, g_ in gate.items() if g_['identical']]}",
                   flush=True)
             report[arch]["fused_gating"] = gate
+            # pp-knob gating: the searched pipeline mutations (pp_split /
+            # pp_microbatch / pp_interleave) apply only to pipeline-enabled
+            # sims.  On every non-pipeline sim the active method set drops
+            # them, so a cold search offered the pp methods draws the exact
+            # legacy RNG stream — trajectory bit-identical, knobs untouched.
+            from repro.core import (METHOD_PP_INTERLEAVE,
+                                    METHOD_PP_MICROBATCH, METHOD_PP_SPLIT)
+
+            ppgate = {}
+            pp_methods = (METHOD_PP_SPLIT, METHOD_PP_MICROBATCH,
+                          METHOD_PP_INTERLEAVE)
+            for tag, sim in (
+                    ("flat", Simulator(n_devices=N_DEVICES)),
+                    ("serialized", Simulator(
+                        cluster=get_preset("a100_nvlink_ib"), streams=1,
+                        overlap_discount=0.525)),
+                    ("undiscounted", Simulator(
+                        cluster=get_preset("a100_nvlink_ib"), streams=4,
+                        overlap_discount=0.0))):
+                legacy = backtracking_search(
+                    arch_graph(arch), sim,
+                    methods=ALL_METHODS + (METHOD_FUSED,), **skw)
+                offered = backtracking_search(
+                    arch_graph(arch), sim,
+                    methods=ALL_METHODS + (METHOD_FUSED,) + pp_methods,
+                    **skw)
+                ppgate[tag] = {
+                    "identical": (
+                        legacy.best_cost == offered.best_cost
+                        and legacy.simulations == offered.simulations
+                        and legacy.best.signature()
+                        == offered.best.signature()
+                        and offered.best.pp_knobs is None),
+                    "best_cost": legacy.best_cost,
+                }
+            print(f"  pp gating: trajectories unchanged on "
+                  f"{[t for t, g_ in ppgate.items() if g_['identical']]}",
+                  flush=True)
+            report[arch]["pp_gating"] = ppgate
     if not args.skip_deepseek:
         arch = "deepseek-v2-236b"
         print(f"=== {arch} (scale probe, budget {args.seed_budget}s) ===",
@@ -435,6 +474,12 @@ def main():
                 if not g_["identical"]:
                     print(f"SMOKE FAIL: {a}[{tag}]: offering METHOD_FUSED "
                           f"on a sim where it is inapplicable changed the "
+                          f"cold search trajectory ({g_})")
+                    raise SystemExit(1)
+            for tag, g_ in r.get("pp_gating", {}).items():
+                if not g_["identical"]:
+                    print(f"SMOKE FAIL: {a}[{tag}]: offering the pp-knob "
+                          f"methods on a non-pipeline sim changed the "
                           f"cold search trajectory ({g_})")
                     raise SystemExit(1)
         print(f"smoke OK: incremental/seed throughput {speedups}, "

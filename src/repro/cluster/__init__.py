@@ -18,8 +18,8 @@ from .collectives import (ALGO_HIER, ALGO_RING, ALGO_TREE, ALGORITHMS,
                           KIND_FUSED, KIND_P2P, KIND_RS, KIND_RS_AG,
                           allreduce_coeffs, best_algo, bucket_time,
                           chunk_phases, comm_coeffs, comm_time, fused_phases,
-                          hier_allreduce, phases, ring_allreduce,
-                          tree_allreduce)
+                          hier_allreduce, level_chunk_phases, phases,
+                          ring_allreduce, tree_allreduce)
 from .calibrate import (DEFAULT_OVERLAP_DISCOUNT, OVERLAP_DISCOUNTS,
                         overlap_discount_for)
 
@@ -30,7 +30,7 @@ __all__ = [
     "BUCKET_COMM_KINDS", "CommPhase", "DEFAULT_ALGO", "DEFAULT_COMM_KIND",
     "KIND_AG", "KIND_AR", "KIND_FUSED", "KIND_P2P", "KIND_RS", "KIND_RS_AG",
     "allreduce_coeffs", "best_algo", "bucket_time", "chunk_phases",
-    "comm_coeffs", "comm_time", "fused_phases", "hier_allreduce", "phases",
-    "ring_allreduce", "tree_allreduce",
+    "comm_coeffs", "comm_time", "fused_phases", "hier_allreduce",
+    "level_chunk_phases", "phases", "ring_allreduce", "tree_allreduce",
     "DEFAULT_OVERLAP_DISCOUNT", "OVERLAP_DISCOUNTS", "overlap_discount_for",
 ]

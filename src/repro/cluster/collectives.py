@@ -417,6 +417,67 @@ def chunk_phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
     )
 
 
+def _cohort_size(level_bw: float, bottleneck_bw: float, chunks: int) -> int:
+    """Chunks coalesced into one transfer on a fat level: the largest power
+    of two <= min(chunks, level_bw / bottleneck_bw) that divides
+    ``chunks`` evenly (partial cohorts would break exact conservation).
+    A level no faster than the bottleneck gets cohort 1 (no coalescing)."""
+    if bottleneck_bw <= 0.0 or level_bw <= 0.0:
+        return 1
+    cap = min(float(chunks), level_bw / bottleneck_bw)
+    m = 1
+    while m * 2 <= cap:
+        m *= 2
+    while m > 1 and chunks % m:
+        m //= 2
+    return m
+
+
+@functools.lru_cache(maxsize=None)
+def level_chunk_phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
+                       kind: str = KIND_AR, chunks: int = 1,
+                       chunk_index: int = 0) -> tuple[CommPhase, ...]:
+    """Per-level chunk sizing (DESIGN.md Sec. 14): the phase decomposition
+    of chunk ``chunk_index`` when fat link levels coalesce chunks into
+    bigger transfers.
+
+    Uniform chunking (:func:`chunk_phases`) sizes every phase's transfer
+    for the bottleneck level, so a fat intra-host level pays its per-chunk
+    latency ``chunks`` times for no pipelining benefit — real collectives
+    (NCCL's proxy path) keep fine chunks only where the wire is slow.
+    Here the **leading** phase coalesces each cohort of ``m`` consecutive
+    chunks into the cohort's *first* chunk (every chunk's payload is
+    resident at the source before the collective starts, so the carrier
+    can ship the whole cohort causally-exactly) and the **trailing** phase
+    coalesces into the cohort's *last* chunk (the delivery can only
+    complete once the cohort's last chunk has arrived); ``m`` is
+    :func:`_cohort_size` of that phase's level.  Non-carrier chunks get a
+    zero-work phase — the event engine's positional after-gating and
+    zero-phase skipping handle them untouched.
+
+    Conservation is exact: per phase, ``chunks/m`` carriers each carry
+    ``m x`` the per-chunk ``(c, d/chunks)``, summing to the unchunked
+    ``(c, d)`` — coalescing is pure scheduling, never a cost discount.
+    Interior phases, single-phase decompositions (nothing to pipeline
+    through), flat compat specs and ``chunks <= 1`` are unchanged from
+    :func:`chunk_phases`."""
+    base = chunk_phases(spec, algo, kind, chunks)
+    if chunks <= 1 or len(base) < 2 or spec.compat_hw is not None:
+        return base
+    bw_bottleneck = spec.bottleneck().bandwidth
+    out = list(base)
+    for pos, last in ((0, False), (len(base) - 1, True)):
+        p = base[pos]
+        m = _cohort_size(spec.levels[p.level].bandwidth, bw_bottleneck,
+                         chunks)
+        if m <= 1:
+            continue
+        carrier = (chunk_index % m) == (m - 1 if last else 0)
+        out[pos] = (dataclasses.replace(p, c=p.c * m, d=p.d * m)
+                    if carrier else dataclasses.replace(p, c=0.0, d=0.0))
+    return tuple(out)
+
+
 @functools.lru_cache(maxsize=None)
 def fused_phases(spec: ClusterSpec, algo: str = DEFAULT_ALGO,
                  kind: str = KIND_AR, chunks: int = 1,

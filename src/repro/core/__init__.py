@@ -7,10 +7,14 @@ from .events import (BackgroundTraffic, CommEngine, CommJob, ComputeJob,
                      DISC_FAIR, DISC_FIFO, EventEngine, TC_COMPUTE, TC_DP,
                      TC_PP, TC_TP, TRAFFIC_CLASSES, UnifiedResult)
 from .pipeline import (PipelineSchedule, SCHED_1F1B, SCHED_INTERLEAVED,
-                       SCHEDULES)
+                       SCHEDULES, resolve_schedule)
+from .tp_traffic import (TPTraffic, balanced_spans, couple_tp,
+                         couple_tp_pipeline)
 from .mutations import (ALL_METHODS, CHUNK_CHOICES, METHOD_ALGO,
                         METHOD_CHUNK, METHOD_COMM, METHOD_DUP,
-                        METHOD_NONDUP, METHOD_TENSOR, MUTATIONS, Mutation,
+                        METHOD_NONDUP, METHOD_PP_INTERLEAVE,
+                        METHOD_PP_MICROBATCH, METHOD_PP_SPLIT,
+                        METHOD_TENSOR, MUTATIONS, Mutation,
                         active_methods, random_apply, register_mutation)
 from .search import SearchResult, backtracking_search
 from .baselines import (BASELINES, assign_bucket_algos,
@@ -27,8 +31,11 @@ __all__ = [
     "DISC_FAIR", "DISC_FIFO", "TC_COMPUTE", "TC_DP", "TC_PP", "TC_TP",
     "TRAFFIC_CLASSES",
     "PipelineSchedule", "SCHED_1F1B", "SCHED_INTERLEAVED", "SCHEDULES",
+    "resolve_schedule",
+    "TPTraffic", "balanced_spans", "couple_tp", "couple_tp_pipeline",
     "ALL_METHODS", "CHUNK_CHOICES", "METHOD_ALGO", "METHOD_CHUNK",
-    "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_TENSOR",
+    "METHOD_COMM", "METHOD_DUP", "METHOD_NONDUP", "METHOD_PP_INTERLEAVE",
+    "METHOD_PP_MICROBATCH", "METHOD_PP_SPLIT", "METHOD_TENSOR",
     "MUTATIONS", "Mutation", "active_methods", "register_mutation",
     "SearchResult", "backtracking_search", "random_apply",
     "BASELINES", "assign_bucket_algos", "assign_bucket_chunks",

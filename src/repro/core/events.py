@@ -64,7 +64,8 @@ import math
 
 from ..cluster import ClusterSpec
 from ..cluster.collectives import (KIND_AR, KIND_RS_AG, chunk_phases,
-                                   comm_coeffs, fused_phases)
+                                   comm_coeffs, fused_phases,
+                                   level_chunk_phases)
 
 # traffic classes a job can belong to
 TC_DP = "dp"    # data-parallel gradient bucket (the searched dimension)
@@ -300,10 +301,15 @@ class EventEngine:
 
     def __init__(self, spec: ClusterSpec, streams: int = 1,
                  record_load: bool = False,
-                 discipline: str | dict[int, str] = DISC_FAIR):
+                 discipline: str | dict[int, str] = DISC_FAIR,
+                 level_chunks: bool = False):
         self.spec = spec
         self.streams = max(int(streams), 1)
         self.record_load = record_load
+        # per-level chunk sizing (DESIGN.md Sec. 14): fat link levels
+        # coalesce chunk cohorts into bigger transfers.  Off by default —
+        # uniform chunk_phases schedules stay bit-identical.
+        self.level_chunks = bool(level_chunks)
         if isinstance(discipline, str):
             if discipline not in DISCIPLINES:
                 raise ValueError(f"unknown discipline {discipline!r}; "
@@ -325,7 +331,7 @@ class EventEngine:
         self.class_busy: dict[str, float] = {}
         self.class_finish: dict[str, float] = {}
         self._coeffs: dict[tuple[str, str], tuple[float, float]] = {}
-        self._steps: dict[tuple[str, str, int, float], tuple] = {}
+        self._steps: dict[tuple[str, str, int, float, int], tuple] = {}
         self._chan_level = spec.levels[spec.bottleneck_index()].name
 
     # ------------------------------------------------------------- helpers
@@ -343,7 +349,13 @@ class EventEngine:
             # indexed past the link levels (see _run_phased's names/disc)
             return [(job.kind, len(self.spec.levels) + job.stream,
                      job.duration)]
-        key = (job.algo, job.kind, job.chunks, job.discount)
+        # with per-level chunk sizing on, undiscounted chunked jobs get a
+        # per-chunk-index decomposition (carrier vs zero-work phases), so
+        # the memo key gains the chunk index; fused jobs keep fused_phases
+        # (their early comm start already prices the fat-level advantage)
+        lc = (self.level_chunks and job.discount <= 0.0 and job.chunks > 1)
+        key = (job.algo, job.kind, job.chunks, job.discount,
+               job.chunk if lc else -1)
         ph = self._steps.get(key)
         if ph is None:
             if job.discount > 0.0:
@@ -351,6 +363,9 @@ class EventEngine:
                 # chunk_phases ones unchanged (link work is conserved)
                 ph = fused_phases(self.spec, job.algo, job.kind,
                                   job.chunks, job.discount)
+            elif lc:
+                ph = level_chunk_phases(self.spec, job.algo, job.kind,
+                                        job.chunks, job.chunk)
             else:
                 ph = chunk_phases(self.spec, job.algo, job.kind, job.chunks)
             self._steps[key] = ph

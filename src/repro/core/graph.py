@@ -149,13 +149,20 @@ class FusionGraph:
         # the producer's tail by the cluster's calibrated overlap discount
         # (DESIGN.md Sec. 13); False is scheduled overlap (the seed model)
         self.bucket_fused: list[bool] = [False] * len(self.buckets)
+        # searched pipeline-knob overrides: None (use the simulator's base
+        # PipelineSchedule verbatim) or a partial (n_stages, n_microbatches,
+        # interleave) tuple where None slots inherit from the base schedule
+        # (resolved by repro.core.pipeline.resolve_schedule).  Only priced
+        # on pipeline-enabled simulators — inert state everywhere else.
+        self.pp_knobs: tuple | None = None
         self._rebuild_derived()
 
     @classmethod
     def _from_parts(cls, prims, psuccs, ppreds, groups, provider, next_gid,
                     grad_prim, buckets, family: int | None = None,
                     bucket_algos=None, bucket_comm=None,
-                    bucket_chunks=None, bucket_fused=None) -> "FusionGraph":
+                    bucket_chunks=None, bucket_fused=None,
+                    pp_knobs=None) -> "FusionGraph":
         """Assemble a graph from explicit state (see ``profile_graph``);
         derived structures are rebuilt from scratch.  ``family`` pins the
         estimator-cache lineage when the prims are shared with an existing
@@ -177,6 +184,7 @@ class FusionGraph:
                            else [1] * len(g.buckets))
         g.bucket_fused = (list(bucket_fused) if bucket_fused is not None
                           else [False] * len(g.buckets))
+        g.pp_knobs = None if pp_knobs is None else tuple(pp_knobs)
         g._rebuild_derived()
         if family is not None:
             g._family = family
@@ -241,6 +249,7 @@ class FusionGraph:
         g.bucket_comm = list(self.bucket_comm)
         g.bucket_chunks = list(self.bucket_chunks)
         g.bucket_fused = list(self.bucket_fused)
+        g.pp_knobs = self.pp_knobs            # immutable tuple or None
         # quotient structures are shared: mutations are copy-on-write (they
         # replace modified adjacency sets, never mutate them in place)
         g._qsuccs = self._qsuccs
@@ -550,6 +559,44 @@ class FusionGraph:
         self._journal.append(("fused", i))
         return True
 
+    def set_pp_knobs(self, *, n_stages: int | None = None,
+                     n_microbatches: int | None = None,
+                     interleave: int | None = None) -> bool:
+        """Pipeline method (viii): override slots of the simulator's base
+        :class:`~repro.core.pipeline.PipelineSchedule`.  The override is a
+        partial ``(n_stages, n_microbatches, interleave)`` tuple — passing
+        a slot overwrites it, omitted slots keep their current override (or
+        stay inherited from the base schedule).  Resolution against the
+        base — clamping, interleave divisibility — happens at pricing time
+        in :func:`repro.core.pipeline.resolve_schedule`, so the mutation is
+        total.  Only pipeline-enabled simulators price this state; on any
+        other sim it is inert (and the mutation registry never offers it
+        there).  A no-op choice returns False."""
+        vals = (n_stages, n_microbatches, interleave)
+        for v in vals:
+            if v is not None and int(v) < 1:
+                raise ValueError(
+                    f"pipeline knobs must be >= 1, got {vals}")
+        cur = self.pp_knobs if self.pp_knobs is not None else (None,) * 3
+        new = tuple(cur[k] if vals[k] is None else int(vals[k])
+                    for k in range(3))
+        if new == (None,) * 3 or new == self.pp_knobs:
+            return False
+        self.pp_knobs = new
+        self._journal.append(("pp",))
+        return True
+
+    def reset_pp_knobs(self) -> bool:
+        """Drop every pipeline-knob override (back to the simulator's base
+        schedule).  Used by cache warm-start when the target simulator
+        cannot price the pipeline dimensions.  Returns False if already
+        clear."""
+        if self.pp_knobs is None:
+            return False
+        self.pp_knobs = None
+        self._journal.append(("pp",))
+        return True
+
     # ------------------------------------------------------------ accessors
     def group_external_io(self, gid: int) -> tuple[float, float]:
         """(external input bytes, external output bytes) of a fused group —
@@ -615,7 +662,7 @@ class FusionGraph:
         bk = tuple(self.buckets)
         return (gs, pv, bk, tuple(self.bucket_algos),
                 tuple(self.bucket_comm), tuple(self.bucket_chunks),
-                tuple(self.bucket_fused))
+                tuple(self.bucket_fused), self.pp_knobs)
 
     def fast_signature(self) -> tuple[int, int]:
         """Order-independent rolling hash of (groups, provider, buckets,
@@ -624,7 +671,7 @@ class FusionGraph:
         return (self._ghash,
                 hash((tuple(self.buckets), tuple(self.bucket_algos),
                       tuple(self.bucket_comm), tuple(self.bucket_chunks),
-                      tuple(self.bucket_fused))))
+                      tuple(self.bucket_fused), self.pp_knobs)))
 
     # --------------------------------------------------------------- stats
     def describe(self) -> dict:
@@ -651,4 +698,5 @@ class FusionGraph:
                 for k in set(self.bucket_chunks)
             },
             "fused_comm_buckets": sum(1 for f in self.bucket_fused if f),
+            "pp_knobs": self.pp_knobs,
         }

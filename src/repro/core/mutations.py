@@ -44,10 +44,22 @@ METHOD_ALGO = "algo"
 METHOD_COMM = "comm"
 METHOD_CHUNK = "chunk"
 METHOD_FUSED = "fused"
+METHOD_PP_SPLIT = "pp_split"
+METHOD_PP_MICROBATCH = "pp_microbatch"
+METHOD_PP_INTERLEAVE = "pp_interleave"
 
 # store-and-forward chunk counts METHOD_CHUNK draws from (1 restores the
 # whole-bucket collective; powers of two mirror NCCL's chunk granularity)
 CHUNK_CHOICES = (1, 2, 4, 8)
+
+# pipeline-knob draws (DESIGN.md Sec. 14).  Overrides are resolved against
+# the simulator's base PipelineSchedule at pricing time
+# (repro.core.pipeline.resolve_schedule), which clamps n_stages to the
+# graph's group count and collapses interleave where the Megatron
+# divisibility constraint fails — so every draw is a valid candidate.
+PP_SPLIT_CHOICES = (1, 2, 4, 8)
+PP_MICROBATCH_CHOICES = (4, 8, 16, 32)
+PP_INTERLEAVE_CHOICES = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +96,14 @@ def _fused_applicable(sim) -> bool:
     # kind, so searching the flag would burn candidate evaluations
     return (_engine_applicable(sim)
             and getattr(sim, "overlap_discount", 0.0) > 0.0)
+
+
+def _pp_applicable(sim) -> bool:
+    # pipeline knobs only price on a pipeline-enabled sim: everywhere else
+    # pp_knobs is inert graph state, so offering the mutations would burn
+    # candidate evaluations — and, worse, change legacy RNG streams.  The
+    # registry gate is what keeps PR 1-8 trajectories bit-identical.
+    return getattr(sim, "pipeline", None) is not None
 
 
 # ------------------------------------------------------------- applications
@@ -141,6 +161,18 @@ def _apply_fused(g: FusionGraph, rng: random.Random) -> bool:
     return g.set_bucket_fused(i, rng.choice((False, True)))
 
 
+def _apply_pp_split(g: FusionGraph, rng: random.Random) -> bool:
+    return g.set_pp_knobs(n_stages=rng.choice(PP_SPLIT_CHOICES))
+
+
+def _apply_pp_microbatch(g: FusionGraph, rng: random.Random) -> bool:
+    return g.set_pp_knobs(n_microbatches=rng.choice(PP_MICROBATCH_CHOICES))
+
+
+def _apply_pp_interleave(g: FusionGraph, rng: random.Random) -> bool:
+    return g.set_pp_knobs(interleave=rng.choice(PP_INTERLEAVE_CHOICES))
+
+
 # ------------------------------------------------------------------ registry
 MUTATIONS: dict[str, Mutation] = {}
 
@@ -181,8 +213,22 @@ register_mutation(Mutation(
     doc="kernel method (vii): in-kernel fused compute+comm per bucket "
         "(CoCoNet-style; needs a multi-stream engine and a calibrated "
         "overlap discount)"))
+register_mutation(Mutation(
+    METHOD_PP_SPLIT, _apply_pp_split, _pp_applicable,
+    doc="pipeline method (viii): searched stage count override "
+        "(needs a pipeline-enabled sim; clamped to the group count)"))
+register_mutation(Mutation(
+    METHOD_PP_MICROBATCH, _apply_pp_microbatch, _pp_applicable,
+    doc="pipeline method (ix): searched microbatch count override "
+        "(needs a pipeline-enabled sim)"))
+register_mutation(Mutation(
+    METHOD_PP_INTERLEAVE, _apply_pp_interleave, _pp_applicable,
+    doc="pipeline method (x): searched interleaved-1F1B chunk depth "
+        "(needs a pipeline-enabled sim; collapses to 1 where Megatron's "
+        "divisibility constraint fails)"))
 
-# METHOD_FUSED is deliberately NOT in ALL_METHODS: this tuple keys the
+# METHOD_FUSED (and the pp_* methods after it) are deliberately NOT in
+# ALL_METHODS: this tuple keys the
 # RNG streams of seed-era benchmarks/tests (perf_search.py throughput,
 # trajectory-identity assertions), so it is frozen — ``active_methods``
 # appends registered extras after it, which is how default searches pick

@@ -99,6 +99,47 @@ class PipelineSchedule:
             p2p_bytes=None if p2p is None else float(p2p))
 
 
+def resolve_schedule(base: PipelineSchedule | None, knobs,
+                     n_groups: int) -> PipelineSchedule | None:
+    """Apply a graph's searched pipeline-knob overrides onto the
+    simulator's base schedule (DESIGN.md Sec. 14).
+
+    ``knobs`` is :attr:`FusionGraph.pp_knobs` — ``None`` or a partial
+    ``(n_stages, n_microbatches, interleave)`` tuple whose ``None`` slots
+    inherit from ``base``.  Resolution is *total*: rather than rejecting
+    invalid combinations mid-search it clamps them to the nearest valid
+    schedule —
+
+    * ``n_stages`` is clamped to ``[1, n_groups]`` (the stage bisection
+      needs at least one fused group per stage);
+    * ``interleave > 1`` requires ``n_microbatches`` divisible by
+      ``n_stages`` (Megatron's chunk rotation); otherwise the interleave
+      override collapses to 1;
+    * the schedule family follows the interleave: ``interleaved_1f1b``
+      iff the resolved interleave exceeds 1.
+
+    ``fwd_bwd_ratio`` and ``p2p_bytes`` always come from ``base`` — they
+    are measurements, not searched knobs.  With ``knobs=None`` the base is
+    returned untouched (bit-identity for every pre-existing caller)."""
+    if base is None or not knobs:
+        return base
+    S, M, v = knobs
+    S = base.n_stages if S is None else int(S)
+    M = base.n_microbatches if M is None else int(M)
+    v = base.chunks_per_stage if v is None else int(v)
+    S = max(1, min(S, int(n_groups))) if n_groups >= 1 else 1
+    M = max(1, M)
+    v = max(1, v)
+    if v > 1 and M % S != 0:
+        v = 1
+    schedule = SCHED_INTERLEAVED if v > 1 else SCHED_1F1B
+    if (S == base.n_stages and M == base.n_microbatches
+            and v == base.chunks_per_stage and schedule == base.schedule):
+        return base
+    return dataclasses.replace(base, n_stages=S, n_microbatches=M,
+                               schedule=schedule, interleave=v)
+
+
 def _unit_sequence(sched: PipelineSchedule, s: int):
     """Device ``s``'s issue order as ``(kind, unit_index)`` pairs, kind in
     {"f", "b"}: warmup forwards, steady one-fwd-one-bwd pairs, cooldown

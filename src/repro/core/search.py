@@ -84,23 +84,26 @@ _WORKER_CTX = None
 def _pool_init(payload: bytes) -> None:
     global _WORKER_CTX
     (prims, psuccs, ppreds, grad_prim, family, hw, n_devices,
-     cluster, streams, background, overlap_discount) = pickle.loads(payload)
+     cluster, streams, background, overlap_discount,
+     pipeline, tp) = pickle.loads(payload)
     sim = Simulator(hw=hw, n_devices=n_devices, incremental=False,
                     cluster=cluster, streams=streams, background=background,
-                    overlap_discount=overlap_discount)
+                    overlap_discount=overlap_discount,
+                    pipeline=pipeline, tp=tp)
     _WORKER_CTX = (prims, psuccs, ppreds, grad_prim, family, sim)
 
 
 def _pool_cost(state: tuple) -> float:
     (groups, provider, next_gid, buckets, bucket_algos, bucket_comm,
-     bucket_chunks, bucket_fused) = state
+     bucket_chunks, bucket_fused, pp_knobs) = state
     prims, psuccs, ppreds, grad_prim, family, sim = _WORKER_CTX
     g = FusionGraph._from_parts(prims, psuccs, ppreds, groups, provider,
                                 next_gid, grad_prim, buckets, family=family,
                                 bucket_algos=bucket_algos,
                                 bucket_comm=bucket_comm,
                                 bucket_chunks=bucket_chunks,
-                                bucket_fused=bucket_fused)
+                                bucket_fused=bucket_fused,
+                                pp_knobs=pp_knobs)
     return sim.cost(g)
 
 
@@ -117,7 +120,8 @@ class _CandidatePool:
              base.family_token(), sim.hw, sim.n_devices,
              getattr(sim, "cluster", None), getattr(sim, "streams", 1),
              getattr(sim, "background", ()),
-             getattr(sim, "overlap_discount", 0.0))
+             getattr(sim, "overlap_discount", 0.0),
+             getattr(sim, "pipeline", None), getattr(sim, "tp", None))
         )
         # spawn: workers only import repro.core (pure python, no jax), and
         # forking a process that already holds jax's thread pools can hang
@@ -131,7 +135,7 @@ class _CandidatePool:
             self._ex.submit(
                 _pool_cost, (g.groups, g.provider, g._next_gid, g.buckets,
                              g.bucket_algos, g.bucket_comm, g.bucket_chunks,
-                             g.bucket_fused)
+                             g.bucket_fused, g.pp_knobs)
             )
             for g in graphs
         ]

@@ -53,7 +53,6 @@ equivalence tests run both paths and assert identical results).
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import heapq
 import itertools
@@ -63,9 +62,11 @@ from ..cluster import (COLLECTIVE_ALGOS, ClusterSpec, KIND_AR, KIND_RS_AG,
                        comm_coeffs, overlap_discount_for, phases)
 from .costs import OracleEstimator, total_comm_time, total_compute_time
 from .events import (BackgroundTraffic, CommJob, ComputeJob, EventEngine,
-                     TC_COMPUTE, TC_DP, TC_PP, bucket_jobs)
+                     TC_COMPUTE, TC_DP, TC_PP, TC_TP, bucket_jobs)
 from .graph import FusionGraph
 from .hw import Hardware, TPU_V5E
+from .tp_traffic import (TPTraffic, balanced_spans, couple_tp,
+                         couple_tp_pipeline)
 
 _token_counter = itertools.count(1)
 
@@ -82,6 +83,9 @@ class SimResult:
     # pipeline-schedule runs only: bubble / per-stage occupancy stats
     # (None for the default single-device replay)
     pipeline: dict | None = None
+    # dep-coupled TP-traffic runs only (Simulator(tp=...)): lowering mode,
+    # per-layer volumes and tp-class busy/finish tallies (DESIGN.md Sec. 14)
+    tp: dict | None = None
 
 
 @dataclasses.dataclass
@@ -112,7 +116,9 @@ class Simulator:
                  state_cache_size: int = 64, max_journal: int = 24,
                  cluster: ClusterSpec | None = None, streams: int = 1,
                  background: tuple = (), pipeline=None,
-                 overlap_discount: float | None = None):
+                 overlap_discount: float | None = None,
+                 tp: TPTraffic | None = None,
+                 level_chunks: bool = False):
         self.estimator = estimator or OracleEstimator(hw)
         self.hw = hw
         # legacy (hw, n_devices) maps to the flat back-compat spec — comm
@@ -143,6 +149,14 @@ class Simulator:
         # gradient buckets (DESIGN.md Sec. 11).  None = the paper's
         # single-device replay.
         self.pipeline = pipeline
+        # a TPTraffic promotes tensor-parallel activation collectives from
+        # periodic BackgroundTraffic averages to first-class scheduled jobs
+        # dep-coupled to the compute that produces and consumes them
+        # (DESIGN.md Sec. 14): span-lowered on the single-device replay
+        # (_run_tp), per-1F1B-unit under a pipeline schedule.  Ignored on
+        # the serialized channel (streams=1), like background traffic —
+        # the seed model stays bit-identical.
+        self.tp = tp
         # in-kernel fusion overlap discount (DESIGN.md Sec. 13): how far a
         # fused bucket's collective reaches back into its producing compute
         # job's tail, as a fraction of the producer's duration.  Resolved
@@ -152,7 +166,11 @@ class Simulator:
         if overlap_discount is None:
             overlap_discount = overlap_discount_for(cluster)
         self.overlap_discount = float(overlap_discount)
-        self._engine = EventEngine(cluster, streams=self.streams)
+        # per-level chunk sizing (DESIGN.md Sec. 14): opt-in, off keeps
+        # uniform chunk_phases schedules bit-identical to PR 1-8
+        self.level_chunks = bool(level_chunks)
+        self._engine = EventEngine(cluster, streams=self.streams,
+                                   level_chunks=self.level_chunks)
         self._ar_coeffs = {
             algo: comm_coeffs(cluster, algo, KIND_AR)
             for algo in COLLECTIVE_ALGOS
@@ -178,6 +196,12 @@ class Simulator:
             # always a full (non-incremental) replay
             self.stats["full"] += 1
             return self._run_pipeline(g)
+        if self.tp is not None and self.streams > 1:
+            # dep-coupled TP jobs add comm->compute edges, so the pop-order
+            # prefix argument behind delta resume does not hold either:
+            # always a full replay
+            self.stats["full"] += 1
+            return self._run_tp(g)
         if not self.incremental:
             return self._run_full(g, record=False).result
         base = None
@@ -289,25 +313,19 @@ class Simulator:
         contiguous, busy-balanced spans; each span's time splits into
         per-microbatch fwd/bwd unit durations by ``fwd_bwd_ratio``; the
         stage-boundary p2p volume defaults to the mean activation
-        (out_bytes) of the groups at the stage cuts, per microbatch."""
-        sched = self.pipeline
+        (out_bytes) of the groups at the stage cuts, per microbatch.
+
+        The schedule is the base ``self.pipeline`` with the graph's
+        searched ``pp_knobs`` overrides resolved onto it
+        (:func:`repro.core.pipeline.resolve_schedule`)."""
+        sched = self._resolve_pipeline(g)
         compute, _ = self._compute_jobs(g)
         u = self._engine.run_unified(compute, [])
         S = sched.n_stages
         if S > len(u.order):
             raise ValueError(f"n_stages={S} exceeds {len(u.order)} fused "
                              "groups — nothing to split")
-        total = u.compute_busy
-        ends = []
-        for s in range(S - 1):
-            cut = total * (s + 1) / S
-            ends.append(bisect.bisect_left(u.busy_after, cut) + 1)
-        ends.append(len(u.order))
-        # every stage keeps at least one group, in order
-        for s in range(S):
-            lo = (ends[s - 1] if s else 0) + 1
-            hi = len(u.order) - (S - 1 - s)
-            ends[s] = min(max(ends[s], lo), hi)
+        ends = balanced_spans(u.busy_after, S)
         group_stage: dict[int, int] = {}
         stage_busy = []
         stage_groups = []
@@ -337,9 +355,17 @@ class Simulator:
                 "stage_groups": stage_groups, "stage_fwd": stage_fwd,
                 "stage_bwd": stage_bwd, "p2p_bytes": pbytes}
 
+    def _resolve_pipeline(self, g: FusionGraph):
+        """The base schedule with ``g.pp_knobs`` overrides applied (clamped
+        to this graph's group count — the stage bisection needs at least
+        one group per stage)."""
+        from .pipeline import resolve_schedule
+        return resolve_schedule(self.pipeline, getattr(g, "pp_knobs", None),
+                                len(g.groups))
+
     def _run_pipeline(self, g: FusionGraph) -> SimResult:
         from .pipeline import bubble_stats, lower_schedule
-        sched = self.pipeline
+        sched = self._resolve_pipeline(g)
         pi = self.pipeline_inputs(g)
         buckets = g.buckets
         chunks = g.bucket_chunks
@@ -353,6 +379,18 @@ class Simulator:
         cjobs, p2p, last_bwd, bg_base = lower_schedule(
             sched, pi["stage_fwd"], pi["stage_bwd"], pi["p2p_bytes"],
             next_id=cid)
+        # dep-coupled TP activation traffic (DESIGN.md Sec. 14): each
+        # (stage, microbatch, fwd/bwd) unit carries its share of the
+        # per-layer collectives; synchronous TP blocks the device's next
+        # unit, and the last backward unit's collective replaces
+        # last_bwd[s] as the stage's gradient gate
+        tp_jobs: list = []
+        if self.tp is not None:
+            cjobs, tp_jobs, grad_gate, bg_base = couple_tp_pipeline(
+                cjobs, sched, self.tp, bg_base)
+            if grad_gate is not None:
+                last_bwd = [grad_gate[s] if grad_gate[s] is not None
+                            else last_bwd[s] for s in range(sched.n_stages)]
         # gradient buckets dep on the *last backward unit* of every stage
         # that provides them: that is when the stage's gradient
         # accumulation over all microbatches completes
@@ -375,7 +413,7 @@ class Simulator:
                                       chunks[i], next_id, deps=bdeps)
             comm.extend(js)
         timeline = [] if self.keep_timeline else None
-        u = self._engine.run_unified(cjobs, comm + p2p, timeline,
+        u = self._engine.run_unified(cjobs, comm + p2p + tp_jobs, timeline,
                                      background=self.background,
                                      bg_base_id=bg_base)
         info = {
@@ -389,7 +427,19 @@ class Simulator:
                                    u.compute_finish),
             "p2p_bytes": pi["p2p_bytes"],
             "p2p_busy_s": self._engine.class_busy.get(TC_PP, 0.0),
+            "pp_knobs": g.pp_knobs,
         }
+        tp_info = None
+        if self.tp is not None:
+            tp_info = {
+                "mode": "pipeline-unit",
+                "n_layers": self.tp.n_layers,
+                "fwd_bytes": self.tp.fwd_bytes,
+                "bwd_bytes": self.tp.bwd,
+                "jobs": len(tp_jobs),
+                "tp_busy_s": self._engine.class_busy.get(TC_TP, 0.0),
+                "tp_finish_s": self._engine.class_finish.get(TC_TP, 0.0),
+            }
         it = u.finish
         return SimResult(
             iteration_time=it,
@@ -403,7 +453,92 @@ class Simulator:
             else 1.0,
             timeline=timeline,
             pipeline=info,
+            tp=tp_info,
         )
+
+    # ------------------------------------------------------------- TP path
+    def _run_tp(self, g: FusionGraph) -> SimResult:
+        """Price the graph under dep-coupled TP activation traffic
+        (DESIGN.md Sec. 14).
+
+        The serialized schedule is re-emitted as an explicitly chained job
+        list (the coupled engine's per-stream serialization contract: pop
+        order is a linear extension of the quotient deps, so chaining it
+        preserves the schedule), split into ``tp.n_layers`` busy-balanced
+        spans by the same bisection the pipeline stage split uses, and
+        per-span collectives are coupled in: forward TP jobs gate the next
+        span's first compute job, backward TP jobs gate the gradient
+        buckets of the groups their span provides.  Iteration time keeps
+        the background-model convention — gated by compute and gradient
+        sync; TP traffic matters through the contention and compute delays
+        it causes (tallies reported in ``SimResult.tp``).  Fused buckets
+        are priced conservatively (no overlap discount) on the coupled
+        scheduler, as under a pipeline schedule."""
+        tp = self.tp
+        compute, times = self._compute_jobs(g)
+        u = self._engine.run_unified(compute, [])
+        order = u.order
+        L = max(1, min(tp.n_layers, len(order)))
+        ends = balanced_spans(u.busy_after, L)
+        chained = []
+        prev = None
+        for idx, gid in enumerate(order):
+            chained.append(ComputeJob(
+                ref=gid, duration=times[gid], job_id=~gid, key=(idx,),
+                deps=() if prev is None else (prev,)))
+            prev = ~gid
+        # id layout: buckets 0..B-1, then chunk jobs, then TP jobs, then
+        # background (mirrors _run_pipeline)
+        buckets = g.buckets
+        chunks = g.bucket_chunks
+        nb = [g.bucket_bytes(b) for b in buckets]
+        cid = len(buckets)
+        for i in range(len(buckets)):
+            if nb[i] > 0.0 and chunks[i] > 1:
+                cid += chunks[i]
+        chained, fwd_jobs, bwd_jobs, bg_base = couple_tp(chained, ends, tp,
+                                                         cid)
+        # provider group -> span, for backward gating of the buckets
+        span_of: dict[int, int] = {}
+        prev_e = 0
+        for s, e in enumerate(ends):
+            for gid in order[prev_e:e]:
+                span_of[gid] = s
+            prev_e = e
+        deps_of = g.bucket_deps()
+        algos = g.bucket_algos
+        kinds = g.bucket_comm
+        comm = []
+        next_id = len(buckets)
+        for i in range(len(buckets)):
+            if nb[i] <= 0.0:
+                continue
+            bdeps = [~p for p in deps_of[i]]
+            if bwd_jobs:
+                # gradients are ready only once the producing spans'
+                # backward TP collectives completed
+                bdeps.extend(bwd_jobs[s].job_id for s in
+                             sorted({span_of[p] for p in deps_of[i]}))
+            js, next_id = bucket_jobs(i, 0.0, nb[i], algos[i], kinds[i],
+                                      chunks[i], next_id, deps=tuple(bdeps))
+            comm.extend(js)
+        timeline = [] if self.keep_timeline else None
+        u2 = self._engine.run_unified(chained, comm + fwd_jobs + bwd_jobs,
+                                      timeline, background=self.background,
+                                      bg_base_id=bg_base)
+        result = self._make_result(u2.compute_busy, u2.comm_busy,
+                                   u2.compute_finish, u2.comm_finish,
+                                   timeline)
+        result.tp = {
+            "mode": "span",
+            "n_layers": L,
+            "fwd_bytes": tp.fwd_bytes,
+            "bwd_bytes": tp.bwd,
+            "jobs": len(fwd_jobs) + len(bwd_jobs),
+            "tp_busy_s": self._engine.class_busy.get(TC_TP, 0.0),
+            "tp_finish_s": self._engine.class_finish.get(TC_TP, 0.0),
+        }
+        return result
 
     # ----------------------------------------------------------- delta path
     def _run_delta(self, g: FusionGraph, base: _SimState) -> _SimState | None:

@@ -448,6 +448,118 @@ def pipeline_cost_model(coll: dict, spec, sched, flops: float,
     return out
 
 
+def tp_cost_model(coll: dict, spec, tp_degree: int, flops: float,
+                  streams: int = 1, keep_timeline: bool = False) -> dict | None:
+    """Price the compiled step's tensor-parallel activation traffic as
+    **dep-coupled first-class jobs** (DESIGN.md Sec. 14) next to the
+    ``background`` average the contention block uses: the step's flops on
+    the reference chip become a chained per-layer compute schedule, each
+    layer's TP collective deps on the compute that produced it (forward
+    jobs gate the next layer's compute, backward jobs gate the gradient
+    buckets), and the DP gradient set runs against that coupled schedule
+    on the unified engine.  Reports the gradient finish alone, under the
+    dep-coupled TP jobs, and under the legacy periodic-background model of
+    the *same* volume — the spread between the last two is the
+    quiet-window signal the tentpole search exploits.  Returns None when
+    the module carries no TP-classified collectives."""
+    from repro.core.events import CommJob, ComputeJob, EventEngine, TC_TP
+    from repro.core.hw import TPU_V5E
+    from repro.core.tp_traffic import TPTraffic, couple_tp
+
+    classified = [t for t in background_from_collectives(coll, tp_degree)
+                  if t[0] == "tp"]
+    if not classified:
+        return None
+    total_tp = sum(mean * cnt for _, _, mean, cnt in classified)
+    count = sum(cnt for _, _, _, cnt in classified)
+    if total_tp <= 0.0:
+        return None
+    # dominant comm kind by volume; half the collectives are the backward
+    # mirrors, so the layer count is count/2 (capped for the event loop) and
+    # fwd/bwd each carry half the volume — total bytes conserve exactly
+    kind = max(classified, key=lambda t: t[2] * t[3])[1]
+    L = max(1, min(count // 2, 32))
+    tp = TPTraffic(n_layers=L, fwd_bytes=total_tp / (2.0 * L), kind=kind)
+    step_s = flops / (TPU_V5E.peak_flops * TPU_V5E.efficiency)
+    # the DP gradient set minus the TP-group all-reduces (the same
+    # ambiguity rule as collective_cost_model: when every replica group has
+    # the TP size the split is meaningless — keep the ar set as DP)
+    ar = coll["per_op"].get("all-reduce", {})
+    ar_groups = set(ar.get("by_group", {}))
+    ambiguous = tp_degree > 1 and ar_groups == {tp_degree}
+    tp_ar = (ar.get("by_group", {}).get(tp_degree, {"count": 0, "bytes": 0.0})
+             if tp_degree > 1 and not ambiguous
+             else {"count": 0, "bytes": 0.0})
+    dp_count = int(ar.get("count", 0)) - int(tp_ar["count"])
+    dp_bytes = ar.get("bytes", 0.0) - tp_ar["bytes"]
+    n_grads, mean, algo = 0, 0.0, "ring"
+    if dp_count > 0 and dp_bytes > 0.0:
+        mean = dp_bytes / dp_count
+        algo, _ = best_algo(mean, spec)
+        n_grads = min(dp_count, 128)
+    # chained per-layer compute; span s ends at unit s (one unit per layer)
+    compute = []
+    prev = None
+    for i in range(L):
+        j = ComputeJob(ref=i, duration=step_s / L, job_id=-(i + 1),
+                       key=(i,), deps=() if prev is None else (prev,))
+        prev = j.job_id
+        compute.append(j)
+    coupled, fwd_jobs, bwd_jobs, next_id = couple_tp(
+        compute, list(range(1, L + 1)), tp, n_grads)
+
+    def grads(gate_of):
+        # no per-tensor stage provenance in the HLO: bucket i is gated by
+        # layer (i % L)'s backward (mirroring pipeline_cost_model's i % S)
+        return [CommJob(bucket=i, ready=0.0, nbytes=mean, algo=algo,
+                        deps=(gate_of(i),)) for i in range(n_grads)]
+
+    last_compute = compute[-1].job_id
+    eng = EventEngine(spec, streams=max(int(streams or 1), 1))
+    u_alone = eng.run_unified(list(compute), grads(lambda i: last_compute))
+    alone = eng.class_finish.get("dp", 0.0)
+    # dep-coupled: TP jobs scheduled where the compute actually emits them
+    gate = ((lambda i: bwd_jobs[i % L].job_id) if bwd_jobs
+            else (lambda i: last_compute))
+    eng_c = EventEngine(spec, streams=max(int(streams or 1), 1))
+    tl: list | None = [] if keep_timeline else None
+    u = eng_c.run_unified(list(coupled), grads(gate) + fwd_jobs + bwd_jobs,
+                          tl)
+    coupled_fin = eng_c.class_finish.get("dp", 0.0)
+    # legacy model: the same volume as periodic background averages
+    bg_jobs = []
+    base_id = next_id
+    for b in tp.to_background(u_alone.compute_finish):
+        made = b.materialize(u_alone.compute_finish, base_id)
+        base_id += len(made)
+        bg_jobs.extend(made)
+    eng_b = EventEngine(spec, streams=max(int(streams or 1), 1))
+    eng_b.run_unified(list(compute), grads(lambda i: last_compute) + bg_jobs)
+    background_fin = eng_b.class_finish.get("dp", 0.0)
+    out = {
+        "tp_degree": tp_degree,
+        "n_layers": L,
+        "fwd_bytes": tp.fwd_bytes,
+        "bwd_bytes": tp.bwd,
+        "kind": kind,
+        "total_tp_bytes": tp.total_bytes,
+        "ref_chip": TPU_V5E.name,
+        "step_compute_s": step_s,
+        "grad_jobs": n_grads,
+        "tp_jobs": len(fwd_jobs) + len(bwd_jobs),
+        "compute_finish_s": u.compute_finish,
+        "iteration_s": u.finish,
+        "tp_busy_s": eng_c.class_busy.get(TC_TP, 0.0),
+        "grad_finish_alone_s": alone,
+        "grad_finish_coupled_s": coupled_fin,
+        "grad_finish_background_s": background_fin,
+        "slowdown": coupled_fin / alone if alone > 0 else 1.0,
+    }
+    if tl is not None:
+        out["timeline"] = [list(e) for e in tl]
+    return out
+
+
 # -------------------------------------------------------------- plan pricing
 def price_plan(path: str, cluster: str | None = None,
                streams: int | None = None,
@@ -542,10 +654,16 @@ def dryrun_one(arch: str, shape: str, multi_pod: bool,
     # price the collectives on the requested preset, or on the topology the
     # mesh itself implies (--cluster <preset> overrides the mesh bridge)
     spec = get_preset(cluster) if cluster else cluster_from_mesh(mesh)
+    tp_degree = int(mesh.shape.get("model", 1))
     result["cluster"] = collective_cost_model(
-        coll, spec, streams=streams,
-        tp_degree=int(mesh.shape.get("model", 1)),
+        coll, spec, streams=streams, tp_degree=tp_degree,
         keep_timeline=keep_timeline)
+    # first-class dep-coupled TP pricing next to the contention block's
+    # background average (mirrors the cluster.pp block; DESIGN.md Sec. 14)
+    tpb = tp_cost_model(coll, spec, tp_degree, float(ca.get("flops", 0.0)),
+                        streams=streams, keep_timeline=keep_timeline)
+    if tpb is not None:
+        result["cluster"]["tp"] = tpb
     if pp is not None:
         result["cluster"]["pp"] = pipeline_cost_model(
             coll, spec, pp, float(ca.get("flops", 0.0)),
@@ -602,12 +720,17 @@ def main():
                          "'all_gather', hierarchical legs prefixed per "
                          "level; in-kernel fused buckets carry a 'fused_' "
                          "prefix), bucket/chunk index the job, "
-                         "traffic_class is 'dp'|'pp'|'bg', algo the "
+                         "traffic_class is 'dp'|'tp'|'pp'|'bg', algo the "
                          "collective algorithm, level the link-level name, "
                          "start/end seconds from iteration start (needs "
-                         "--streams > 1); with --pp-stages also the "
-                         "unified compute+p2p+grad records and the PP "
-                         "bubble")
+                         "--streams > 1); when the module carries TP "
+                         "collectives, also the cluster.tp block's "
+                         "dep-coupled schedule — tp-class records are "
+                         "per-layer activation collectives gated on the "
+                         "compute that produces them, interleaved with "
+                         "the compute spans and dp-class gradient "
+                         "records; with --pp-stages also the unified "
+                         "compute+p2p+grad records and the PP bubble")
     ap.add_argument("--pp-stages", type=int, default=None,
                     help="price the step under a 1F1B pipeline schedule "
                          "with this many stages (adds a cluster.pp block)")
@@ -674,6 +797,23 @@ def main():
                               f"start, end):")
                         for e in rec:
                             print(f"    {tuple(e)}")
+                    tpb = res.get("cluster", {}).get("tp", {})
+                    if tpb.get("timeline"):
+                        print(f"  {tag} dep-coupled tp timeline "
+                              f"(kind, ref/bucket, *, class, resource, "
+                              f"start, end):")
+                        for e in tpb["timeline"]:
+                            print(f"    {tuple(e)}")
+                    if tpb:
+                        print(f"  {tag} tp coupling: "
+                              f"{tpb['n_layers']} layers x "
+                              f"{tpb['total_tp_bytes']:.3e} B total, grad "
+                              f"finish alone "
+                              f"{tpb['grad_finish_alone_s']*1e3:.3f} ms, "
+                              f"coupled "
+                              f"{tpb['grad_finish_coupled_s']*1e3:.3f} ms, "
+                              f"background model "
+                              f"{tpb['grad_finish_background_s']*1e3:.3f} ms")
                     ppb = res.get("cluster", {}).get("pp", {})
                     if ppb.get("timeline"):
                         print(f"  {tag} unified pp timeline "

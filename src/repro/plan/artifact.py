@@ -51,9 +51,12 @@ from ..core.simulator import Simulator
 
 SCHEMA = "repro.plan"
 # v2 added the optional pipeline-schedule knobs; v1 artifacts load with
-# pipeline=None (every other field is unchanged)
-PLAN_VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+# pipeline=None.  v3 added the searched pipeline-knob overrides
+# (``pp_knobs``), the first-class TP traffic description (``tp``) and the
+# per-level chunk flag (``level_chunks``); v1/v2 artifacts load with all
+# three at their None/False defaults (every other field is unchanged).
+PLAN_VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 
 class PlanError(Exception):
@@ -180,6 +183,17 @@ class Plan:
     # PipelineSchedule.to_tuple(), or None when the plan was priced on the
     # single-device replay (v1 artifacts)
     pipeline: tuple | None = None
+    # searched pipeline-knob overrides (n_stages, n_microbatches,
+    # interleave; each may be None) resolved against ``pipeline`` at
+    # pricing time — part of the *strategy*, unlike ``pipeline`` which is
+    # pricing context.  None in v1/v2 artifacts.
+    pp_knobs: tuple | None = None
+    # TPTraffic.to_tuple(), or None when the plan was priced without
+    # first-class tp traffic (v1/v2 artifacts, background-only sims)
+    tp: tuple | None = None
+    # per-level chunk pipelining flag (DESIGN.md Sec. 14); False in
+    # v1/v2 artifacts
+    level_chunks: bool = False
     cluster: tuple | None = None         # cluster_fingerprint(), or unknown
     hw: tuple | None = None              # sorted Hardware items, or unknown
     estimator: str = "oracle"
@@ -224,11 +238,14 @@ class Plan:
         if sim is not None:
             hw = getattr(sim, "hw", None)
             pp = getattr(sim, "pipeline", None)
+            tp = getattr(sim, "tp", None)
             kw = dict(
                 streams=int(getattr(sim, "streams", 1)),
                 background=tuple(_bg_tuple(b)
                                  for b in getattr(sim, "background", ())),
                 pipeline=None if pp is None else pp.to_tuple(),
+                tp=None if tp is None else tp.to_tuple(),
+                level_chunks=bool(getattr(sim, "level_chunks", False)),
                 cluster=cluster_fingerprint(sim.cluster),
                 hw=(tuple(sorted(dataclasses.asdict(hw).items()))
                     if hw is not None else None),
@@ -247,6 +264,8 @@ class Plan:
             bucket_chunks=tuple(int(k) for k in g.bucket_chunks),
             bucket_bytes=tuple(float(g.bucket_bytes(b)) for b in g.buckets),
             bucket_fused=tuple(int(bool(f)) for f in g.bucket_fused),
+            pp_knobs=(None if getattr(g, "pp_knobs", None) is None
+                      else tuple(g.pp_knobs)),
             predicted_iteration_time=predicted,
             provenance=dict(provenance or {}),
             **kw,
@@ -284,7 +303,8 @@ class Plan:
                 bucket_comm=list(self.bucket_comm),
                 bucket_chunks=list(self.bucket_chunks),
                 bucket_fused=([bool(f) for f in self.bucket_fused]
-                              if self.bucket_fused else None))
+                              if self.bucket_fused else None),
+                pp_knobs=self.pp_knobs)
         else:
             # v0-migrated bucket-only plan: keep base's op-fusion state
             g = FusionGraph._from_parts(
@@ -296,7 +316,8 @@ class Plan:
                 bucket_comm=list(self.bucket_comm),
                 bucket_chunks=list(self.bucket_chunks),
                 bucket_fused=([bool(f) for f in self.bucket_fused]
-                              if self.bucket_fused else None))
+                              if self.bucket_fused else None),
+                pp_knobs=self.pp_knobs)
         seen: set[int] = set()
         for b in g.buckets:
             for p in b:
@@ -367,6 +388,11 @@ class Plan:
         if self.pipeline is not None:
             sim_kw.setdefault(
                 "pipeline", PipelineSchedule.from_tuple(self.pipeline))
+        if self.tp is not None:
+            from ..core.tp_traffic import TPTraffic
+            sim_kw.setdefault("tp", TPTraffic.from_tuple(self.tp))
+        if self.level_chunks:
+            sim_kw.setdefault("level_chunks", True)
         return Simulator(
             estimator=estimator, cluster=spec,
             streams=self.streams,
@@ -467,6 +493,9 @@ class Plan:
             "streams": self.streams,
             "estimator": self.estimator,
             "pipeline": self.pipeline,
+            "pp_knobs": self.pp_knobs,
+            "tp": self.tp,
+            "level_chunks": self.level_chunks,
             "predicted_iteration_time_s": self.predicted_iteration_time,
         }
 
@@ -490,6 +519,10 @@ class Plan:
             # appended only when some bucket is fused: all-unfused (and
             # pre-fused) plans keep their historical fingerprints
             parts.append(self.bucket_fused)
+        if self.pp_knobs is not None:
+            # same rule for the searched pipeline knobs: plans that never
+            # touched them keep their historical fingerprints
+            parts.append(list(self.pp_knobs))
         blob = json.dumps(parts, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:16]
 
@@ -544,6 +577,8 @@ class Plan:
         try:
             cluster = d.get("cluster")
             pipeline = d.get("pipeline")   # absent in v1 artifacts
+            pp_knobs = d.get("pp_knobs")   # absent in v1/v2 artifacts
+            tp = d.get("tp")               # absent in v1/v2 artifacts
             return Plan(
                 version=PLAN_VERSION,
                 groups=_tuplize(d["groups"]),
@@ -557,6 +592,9 @@ class Plan:
                 streams=int(d.get("streams", 1)),
                 background=_tuplize(d.get("background", [])),
                 pipeline=None if pipeline is None else _tuplize(pipeline),
+                pp_knobs=None if pp_knobs is None else _tuplize(pp_knobs),
+                tp=None if tp is None else _tuplize(tp),
+                level_chunks=bool(d.get("level_chunks", False)),
                 cluster=None if cluster is None else _tuplize(cluster),
                 hw=(None if d.get("hw") is None
                     else _tuplize(d["hw"])),

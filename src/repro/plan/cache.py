@@ -51,7 +51,7 @@ from typing import Iterable, Sequence
 from ..cluster import ClusterSpec
 from ..core.graph import FusionGraph
 from ..core.mutations import (METHOD_ALGO, METHOD_CHUNK, METHOD_COMM,
-                              METHOD_FUSED, active_methods)
+                              METHOD_FUSED, METHOD_PP_SPLIT, active_methods)
 from .artifact import Plan, PlanError, cluster_fingerprint, estimator_name
 
 INDEX_NAME = "index.json"
@@ -122,7 +122,7 @@ def _context_parts(sim) -> dict:
     compute Hardware and estimator provenance."""
     hw = getattr(sim, "hw", None)
     pp = getattr(sim, "pipeline", None)
-    return {
+    parts = {
         "cluster": cluster_fingerprint(sim.cluster),
         "streams": int(getattr(sim, "streams", 1)),
         "background": [
@@ -137,6 +137,15 @@ def _context_parts(sim) -> dict:
         # so two sims differing only in calibration must not share entries
         "overlap_discount": float(getattr(sim, "overlap_discount", 0.0)),
     }
+    # added only when present so every pre-v3 compile point keeps its
+    # historical cache key (tp=None / level_chunks=False sims digest
+    # exactly as before)
+    tp = getattr(sim, "tp", None)
+    if tp is not None:
+        parts["tp"] = list(tp.to_tuple())
+    if getattr(sim, "level_chunks", False):
+        parts["level_chunks"] = True
+    return parts
 
 
 def compile_key(graph: FusionGraph, sim, knobs: str, *,
@@ -176,6 +185,8 @@ def cache_features(graph: FusionGraph, sim, *, arch: str | None = None,
         "streams": int(getattr(sim, "streams", 1)),
         "pipeline": (None if getattr(sim, "pipeline", None) is None
                      else list(sim.pipeline.to_tuple())),
+        "tp": (None if getattr(sim, "tp", None) is None
+               else list(sim.tp.to_tuple())),
         "knobs": knobs,
     }
 
@@ -219,6 +230,8 @@ def similarity(req: dict, ent: dict) -> float:
         s += 1.0
     if req.get("pipeline") == ent.get("pipeline"):
         s += 0.5
+    if req.get("tp") == ent.get("tp"):
+        s += 0.5
     if req.get("knobs") and req["knobs"] == ent.get("knobs"):
         s += 0.5
     return s
@@ -257,6 +270,11 @@ def warm_start_state(plan: Plan, base: FusionGraph, sim) -> FusionGraph | None:
             g.set_bucket_chunks(i, 1)
         if METHOD_FUSED not in active:
             g.set_bucket_fused(i, False)
+    if METHOD_PP_SPLIT not in active:
+        # the target sim cannot price pipeline knobs (no pipeline
+        # schedule): carrying a donor plan's overrides would be inert
+        # state that pollutes signatures and re-saved plans
+        g.reset_pp_knobs()
     return g
 
 

@@ -70,7 +70,8 @@ def trace_model_graph(cfg, *, batch: int = 8, seq: int = 64,
 
 
 def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
-                 background=(), pipeline=None, workers: int | None = None,
+                 background=(), pipeline=None, tp=None,
+                 level_chunks: bool = False, workers: int | None = None,
                  overlap_discount: float | None = None,
                  graph=None, estimator=None, hw: Hardware = TPU_V5E,
                  n_devices: int = 256,
@@ -89,8 +90,12 @@ def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
     model).  ``streams`` / ``background`` / ``pipeline`` pick the
     event-engine pricing (``pipeline`` is a
     :class:`~repro.core.pipeline.PipelineSchedule` that prices the run
-    under a 1F1B stage schedule instead of pure data parallelism),
-    ``workers`` the candidate-evaluation pool; ``overlap_discount``
+    under a 1F1B stage schedule instead of pure data parallelism; ``tp``
+    a :class:`~repro.core.tp_traffic.TPTraffic` that dep-couples
+    per-layer tensor-parallel activation collectives into the schedule;
+    ``level_chunks`` coalesces store-and-forward chunks on the fat link
+    levels — DESIGN.md Sec. 14), ``workers`` the candidate-evaluation
+    pool; ``overlap_discount``
     overrides the preset's calibrated in-kernel fusion discount (pass
     ``0.0`` to exclude the fused dimension from the search); the
     remaining knobs are the search hyper-parameters of
@@ -123,6 +128,7 @@ def compile_plan(cfg=None, *, cluster=None, streams: int = 1,
     sim = Simulator(estimator=estimator, hw=hw, n_devices=n_devices,
                     cluster=cluster, streams=streams,
                     background=tuple(background), pipeline=pipeline,
+                    tp=tp, level_chunks=level_chunks,
                     overlap_discount=overlap_discount)
 
     # ---------------------------------------------------------- plan cache

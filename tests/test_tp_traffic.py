@@ -1,0 +1,443 @@
+"""First-class TP activation traffic + searched pipeline knobs
+(DESIGN.md Sec. 14): dep-coupling, byte conservation against the legacy
+background model, legacy bit-identity, Plan v3 round-trips, warm-start
+resets and per-level chunk conservation."""
+import json
+import random
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import (chunk_phases, get_preset, level_chunk_phases,
+                           COLLECTIVE_ALGOS)
+from repro.core import (BackgroundTraffic, ComputeJob, FusionGraph,
+                        PipelineSchedule, Simulator, TPTraffic,
+                        balanced_spans, couple_tp, couple_tp_pipeline,
+                        resolve_schedule, METHOD_PP_INTERLEAVE,
+                        METHOD_PP_MICROBATCH, METHOD_PP_SPLIT,
+                        active_methods, random_apply)
+from repro.core.events import EventEngine, CommJob, TC_DP, TC_TP
+from repro.core.pipeline import lower_schedule
+
+from test_core_graph import chain_graph
+from test_simulator import random_dag
+
+SPEC = get_preset("a100_nvlink_ib")
+
+
+def chained_compute(n=6, dur=1e-3):
+    out, prev = [], None
+    for i in range(n):
+        j = ComputeJob(ref=i, duration=dur, job_id=-(i + 1), key=(i,),
+                       deps=() if prev is None else (prev,))
+        prev = j.job_id
+        out.append(j)
+    return out
+
+
+# ------------------------------------------------------------- dep coupling
+def test_tp_jobs_never_start_before_producer():
+    """Every TP job's timeline records start at or after its producing
+    compute job's finish — forward AND backward."""
+    compute = chained_compute(6)
+    tp = TPTraffic(n_layers=3, fwd_bytes=1e6, bwd_bytes=5e5)
+    ends = balanced_spans([1e-3 * (i + 1) for i in range(6)], 3)
+    coupled, fwd, bwd, _ = couple_tp(compute, ends, tp, 100)
+    eng = EventEngine(SPEC, streams=4)
+    tl: list = []
+    eng.run_unified(coupled, fwd + bwd, tl)
+    starts: dict = {}
+    for rec in tl:
+        if rec[3] == TC_TP:
+            jid = rec[1]  # bucket holds the span; find the job by id below
+    for job in fwd + bwd:
+        first = min(r[6] for r in tl
+                    if r[3] == TC_TP and r[1] == job.bucket
+                    and r[4] == job.algo)
+        producer_fin = eng.job_finish[job.deps[0]]
+        assert first >= producer_fin - 1e-15
+
+
+def test_forward_tp_gates_next_span():
+    """Forward activations block downstream compute: the next span's first
+    compute job cannot start before the previous span's forward TP job
+    completes."""
+    compute = chained_compute(4, dur=1e-4)
+    tp = TPTraffic(n_layers=2, fwd_bytes=5e7, bwd_bytes=0.0)
+    coupled, fwd, bwd, _ = couple_tp(compute, [2, 4], tp, 100)
+    assert not bwd
+    eng = EventEngine(SPEC, streams=4)
+    eng.run_unified(coupled, fwd)
+    # span 0 = jobs 0,1; span 1 = jobs 2,3; fwd[0] gates job 2
+    assert eng.job_finish[coupled[2].job_id] >= \
+        eng.job_finish[fwd[0].job_id] + coupled[2].duration - 1e-15
+    # and the makespan strictly exceeds the un-TP'd chain
+    eng2 = EventEngine(SPEC, streams=4)
+    u2 = eng2.run_unified(chained_compute(4, dur=1e-4), [])
+    assert eng.job_finish[coupled[-1].job_id] > u2.compute_finish
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_layers=st.integers(1, 8), fwd=st.integers(0, 1 << 22),
+       bwd=st.integers(0, 1 << 22))
+def test_byte_conservation_across_lowerings(n_layers, fwd, bwd):
+    """Span lowering, pipeline-unit lowering and the background fallback
+    all move exactly ``total_bytes``."""
+    tp = TPTraffic(n_layers=n_layers, fwd_bytes=float(fwd),
+                   bwd_bytes=float(bwd))
+    # span lowering over a 2*n_layers-unit chain
+    compute = chained_compute(2 * n_layers)
+    ends = balanced_spans([1e-3 * (i + 1) for i in range(2 * n_layers)],
+                          n_layers)
+    _, f_jobs, b_jobs, _ = couple_tp(compute, ends, tp, 100)
+    assert sum(j.nbytes for j in f_jobs + b_jobs) == \
+        pytest.approx(tp.total_bytes)
+    # pipeline-unit lowering
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4)
+    cjobs, _, _, nid = lower_schedule(sched, [1e-3, 1e-3], [1e-3, 1e-3],
+                                      0.0, next_id=0)
+    _, tp_jobs, _, _ = couple_tp_pipeline(cjobs, sched, tp, nid)
+    assert sum(j.nbytes for j in tp_jobs) == pytest.approx(tp.total_bytes)
+    # background fallback (count pins the job count)
+    horizon = 1.0
+    made = []
+    for b in tp.to_background(horizon):
+        made.extend(b.materialize(horizon, 0))
+    assert sum(j.nbytes for j in made) == pytest.approx(tp.total_bytes)
+
+
+def test_zero_byte_tp_never_emits_jobs():
+    """PR 6's skip rule on the TP path: free legs lower to the untouched
+    compute chain, never to zero-byte jobs."""
+    compute = chained_compute(6)
+    tp0 = TPTraffic(n_layers=3, fwd_bytes=0.0, bwd_bytes=0.0)
+    coupled, fwd, bwd, nid = couple_tp(compute, [2, 4, 6], tp0, 100)
+    assert coupled == compute and not fwd and not bwd and nid == 100
+    sched = PipelineSchedule(n_stages=2, n_microbatches=4)
+    cjobs, _, _, n0 = lower_schedule(sched, [1e-3] * 2, [1e-3] * 2, 0.0)
+    out, tp_jobs, gate, nid = couple_tp_pipeline(cjobs, sched, tp0, n0)
+    assert out == cjobs and not tp_jobs and gate is None and nid == n0
+
+
+def test_zero_byte_tp_sim_bit_identical():
+    """Simulator(tp=<all-zero>) prices bit-identically to tp=None and
+    emits no tp-class timeline records."""
+    g = random_dag(7)
+    base = Simulator(cluster=SPEC, streams=4, keep_timeline=True)
+    r0 = base.run(g)
+    simz = Simulator(cluster=SPEC, streams=4, keep_timeline=True,
+                     tp=TPTraffic(n_layers=4, fwd_bytes=0.0, bwd_bytes=0.0))
+    rz = simz.run(g)
+    assert rz.iteration_time == r0.iteration_time
+    assert rz.comm_time == r0.comm_time
+    assert not [e for e in (rz.timeline or []) if e[3] == TC_TP]
+
+
+def test_tp_volume_matches_background_model_tally():
+    """On the same graph the dep-coupled sim's tp-class busy time equals
+    the background sim's tp-class busy time when volumes match — the
+    engine prices identical bytes, only the schedule differs."""
+    g = random_dag(3)
+    tp = TPTraffic(n_layers=4, fwd_bytes=1e6)
+    sim = Simulator(cluster=SPEC, streams=4)
+    r = Simulator(cluster=SPEC, streams=4, tp=tp).run(g)
+    assert r.tp is not None and r.tp["mode"] == "span"
+    horizon = sim.run(g).compute_time
+    rb = Simulator(cluster=SPEC, streams=4,
+                   background=tp.to_background(horizon)).run(g)
+    # both engines moved the same tp bytes through the same phase models
+    assert r.tp["tp_busy_s"] == pytest.approx(
+        sum(b.nbytes for bt in tp.to_background(horizon)
+            for b in bt.materialize(horizon, 0)) / tp.total_bytes
+        * r.tp["tp_busy_s"])
+
+
+# --------------------------------------------------------- quiet-window win
+def test_quiet_window_dep_coupling_beats_blind_background():
+    """A DP bucket ready at t=0 with all TP traffic actually produced
+    *later* (dep-coupled): the blind periodic model (offset 0) contends
+    with the bucket immediately and finishes the DP class later than the
+    dep-coupled schedule, which knows the early window is quiet."""
+    compute = chained_compute(4, dur=5e-3)
+    tp = TPTraffic(n_layers=2, fwd_bytes=3e7, bwd_bytes=3e7)
+    coupled, fwd, bwd, nid = couple_tp(compute, [2, 4], tp, 100)
+    dp = CommJob(bucket=0, ready=0.0, nbytes=3e7, traffic_class=TC_DP)
+    eng_aware = EventEngine(SPEC, streams=4)
+    eng_aware.run_unified(coupled, [dp] + fwd + bwd)
+    aware_fin = eng_aware.class_finish[TC_DP]
+    horizon = 4 * 5e-3
+    bg = []
+    base = nid
+    for b in tp.to_background(horizon):
+        made = b.materialize(horizon, base)
+        base += len(made)
+        bg.extend(made)
+    eng_blind = EventEngine(SPEC, streams=4)
+    eng_blind.run_unified(list(compute), [dp] + bg)
+    blind_fin = eng_blind.class_finish[TC_DP]
+    assert aware_fin < blind_fin
+
+
+# ------------------------------------------------- searched pipeline knobs
+def test_pp_mutations_gated_by_pipeline():
+    """pp_* methods are offered only on pipeline-enabled sims; the default
+    method tuple on non-pipeline sims is exactly the legacy one."""
+    flat = Simulator(n_devices=64)
+    engine = Simulator(cluster=SPEC, streams=4)
+    piped = Simulator(cluster=SPEC, streams=4,
+                      pipeline=PipelineSchedule(4, 8))
+    for sim in (flat, engine):
+        ms = active_methods(sim)
+        assert METHOD_PP_SPLIT not in ms
+        assert METHOD_PP_MICROBATCH not in ms
+        assert METHOD_PP_INTERLEAVE not in ms
+    ms = active_methods(piped)
+    assert {METHOD_PP_SPLIT, METHOD_PP_MICROBATCH,
+            METHOD_PP_INTERLEAVE} <= set(ms)
+
+
+def test_pp_mutations_journaled_and_incremental_consistent():
+    """pp journal records on a NON-pipeline sim: incremental re-pricing
+    equals full re-pricing (the knobs are inert there), and signatures
+    shift."""
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    sim_inc = Simulator(cluster=SPEC, streams=4, incremental=True)
+    sim_full = Simulator(cluster=SPEC, streams=4, incremental=False)
+    c0 = sim_inc.cost(g)
+    sig0 = g.signature()
+    rng = random.Random(0)
+    assert random_apply(g, METHOD_PP_SPLIT, 3, rng)
+    assert g.signature() != sig0
+    assert g.signature()[7] is not None
+    assert sim_inc.cost(g) == sim_full.cost(g) == c0
+    # reset journals back
+    assert g.reset_pp_knobs()
+    assert g.signature()[7] is None
+
+
+def test_pp_knobs_clone_and_from_parts_round_trip():
+    g = chain_graph(n=8)
+    g.set_pp_knobs(n_stages=2, interleave=2)
+    c = g.clone()
+    assert c.pp_knobs == (2, None, 2)
+    assert c.fast_signature() == g.fast_signature()
+    g2 = FusionGraph._from_parts(
+        g.prims, g.psuccs, g.ppreds, g.groups, g.provider, g._next_gid,
+        g.grad_prim, list(g.buckets), family=g.family_token(),
+        pp_knobs=g.pp_knobs)
+    assert g2.pp_knobs == (2, None, 2)
+
+
+def test_resolve_schedule_clamps_and_preserves_base():
+    base = PipelineSchedule(n_stages=4, n_microbatches=8)
+    assert resolve_schedule(None, (2, 4, 1), 8) is None
+    assert resolve_schedule(base, None, 8) is base
+    r = resolve_schedule(base, (2, 16, None), 8)
+    assert (r.n_stages, r.n_microbatches, r.interleave) == (2, 16, 1)
+    assert r.fwd_bwd_ratio == base.fwd_bwd_ratio
+    # stage count clamps to the group count
+    r = resolve_schedule(base, (8, None, None), 3)
+    assert r.n_stages == 3
+    # interleave collapses where Megatron divisibility fails (M % S != 0)
+    r = resolve_schedule(base, (3, 8, 2), 8)
+    assert r.interleave == 1 and r.schedule == "1f1b"
+    r = resolve_schedule(base, (4, 8, 2), 8)
+    assert r.interleave == 2 and r.schedule == "interleaved_1f1b"
+    # no-op overrides return the base object itself
+    assert resolve_schedule(base, (4, 8, 1), 8) is base
+
+
+def test_pp_knobs_change_pipeline_price():
+    """A searched stage-count override changes the pipeline pricing (the
+    knob is live, not inert, on pipeline-enabled sims)."""
+    g = chain_graph(n=16, grads=(3, 7, 11))
+    sim = Simulator(cluster=SPEC, streams=4,
+                    pipeline=PipelineSchedule(4, 8))
+    c_base = sim.cost(g)
+    g2 = g.clone()
+    g2.set_pp_knobs(n_stages=2)
+    assert sim.cost(g2) != c_base
+    r = sim.run(g2)
+    assert r.pipeline["n_stages"] == 2
+    assert r.pipeline["pp_knobs"] == (2, None, None)
+
+
+# ----------------------------------------------------------------- plan v3
+def test_plan_v3_round_trip_pp_knobs_and_tp():
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    g.set_pp_knobs(n_stages=2, n_microbatches=16)
+    tp = TPTraffic(n_layers=4, fwd_bytes=2e6)
+    sim = Simulator(cluster=SPEC, streams=4,
+                    pipeline=PipelineSchedule(4, 8), tp=tp)
+    from repro.plan import Plan
+
+    plan = Plan.from_graph(g, sim=sim)
+    assert plan.version == 3
+    assert plan.pp_knobs == (2, 16, None)
+    assert plan.tp == tp.to_tuple()
+    d = json.loads(json.dumps(plan._to_json()))
+    plan2 = Plan.from_dict(d)
+    assert plan2 == plan
+    g2 = plan2.to_graph(chain_graph(n=12, grads=(3, 6, 9)))
+    assert g2.pp_knobs == (2, 16, None)
+    assert sim.cost(g2) == sim.cost(g)
+    sim2 = plan2.simulator()
+    assert sim2.tp == tp
+    assert sim2.cost(g2) == sim.cost(g)
+
+
+def test_plan_v1_v2_load_with_defaults():
+    """Pre-v3 artifacts load with pp_knobs/tp/level_chunks defaulted and
+    re-price exactly."""
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    sim = Simulator(cluster=SPEC, streams=4)
+    from repro.plan import Plan
+
+    plan = Plan.from_graph(g, sim=sim)
+    d = json.loads(json.dumps(plan._to_json()))
+    for k in ("pp_knobs", "tp", "level_chunks"):
+        d.pop(k)
+    d["version"] = 2
+    p2 = Plan.from_dict(d)
+    assert p2.pp_knobs is None and p2.tp is None and not p2.level_chunks
+    assert p2.to_graph(chain_graph(n=12, grads=(3, 6, 9))).pp_knobs is None
+    assert p2.simulator().cost(g) == sim.cost(g)
+    d["version"] = 1
+    assert Plan.from_dict(d).pp_knobs is None
+
+
+def test_plan_strategy_fingerprint_stable_without_pp_knobs():
+    """Plans that never touched the pipeline knobs keep their historical
+    strategy fingerprints; setting knobs changes the fingerprint."""
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    sim = Simulator(cluster=SPEC, streams=4)
+    from repro.plan import Plan
+
+    f0 = Plan.from_graph(g, sim=sim).strategy_fingerprint()
+    g.set_pp_knobs(n_stages=2)
+    f1 = Plan.from_graph(g, sim=sim).strategy_fingerprint()
+    assert f0 != f1
+
+
+def test_warm_start_resets_pp_knobs_on_non_pipeline_target():
+    """A donor plan searched with pipeline knobs warm-starts a
+    non-pipeline sim with the knobs reset (inert state stripped), and a
+    pipeline sim with them retained."""
+    from repro.plan import Plan
+    from repro.plan.cache import warm_start_state
+
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    g.set_pp_knobs(n_stages=2)
+    donor_sim = Simulator(cluster=SPEC, streams=4,
+                          pipeline=PipelineSchedule(4, 8))
+    plan = Plan.from_graph(g, sim=donor_sim)
+    base = chain_graph(n=12, grads=(3, 6, 9))
+    flat = warm_start_state(plan, base, Simulator(cluster=SPEC, streams=4))
+    assert flat is not None and flat.pp_knobs is None
+    piped = warm_start_state(plan, base, donor_sim)
+    assert piped is not None and piped.pp_knobs == (2, None, None)
+
+
+def test_cache_context_digest_unchanged_without_tp():
+    """tp=None / level_chunks=False sims produce the exact pre-v3 context
+    parts (no new keys) so historical cache keys survive."""
+    from repro.plan.cache import _context_parts
+
+    parts = _context_parts(Simulator(cluster=SPEC, streams=4))
+    assert "tp" not in parts and "level_chunks" not in parts
+    parts2 = _context_parts(Simulator(
+        cluster=SPEC, streams=4, tp=TPTraffic(n_layers=2, fwd_bytes=1.0),
+        level_chunks=True))
+    assert parts2["tp"] == [2, 1.0, None, "ring", "ar"]
+    assert parts2["level_chunks"] is True
+
+
+# ------------------------------------------------------- per-level chunking
+@settings(max_examples=30, deadline=None)
+@given(algo=st.sampled_from(COLLECTIVE_ALGOS), chunks=st.integers(2, 8),
+       kind=st.sampled_from(["ar", "rs_ag"]))
+def test_level_chunk_conservation(algo, chunks, kind):
+    """Summed over all chunk indices, the per-level decomposition's (c, d)
+    equal the uniform chunking's exactly — coalescing is pure scheduling."""
+    base = chunk_phases(SPEC, algo, kind, chunks)
+    tot_c = sum(p.c for p in base) * chunks
+    tot_d = sum(p.d for p in base) * chunks
+    lc_c = sum(p.c for k in range(chunks)
+               for p in level_chunk_phases(SPEC, algo, kind, chunks, k))
+    lc_d = sum(p.d for k in range(chunks)
+               for p in level_chunk_phases(SPEC, algo, kind, chunks, k))
+    assert lc_c == pytest.approx(tot_c, rel=1e-12, abs=0.0)
+    assert lc_d == pytest.approx(tot_d, rel=1e-12, abs=1e-18)
+    # phase sequence shape is untouched (levels and kinds align)
+    for k in range(chunks):
+        lk = level_chunk_phases(SPEC, algo, kind, chunks, k)
+        assert [(p.kind, p.level) for p in lk] == \
+            [(p.kind, p.level) for p in base]
+
+
+def test_level_chunks_engine_conserves_busy():
+    """The engine's total channel busy time is identical with and without
+    per-level chunk sizing (only the schedule moves)."""
+    from repro.core.events import bucket_jobs
+
+    jobs = []
+    nid = 10
+    for i in range(4):
+        js, nid = bucket_jobs(i, 0.0, 5e6, "hier", "ar", 8, nid)
+        jobs.extend(js)
+    b0, _ = EventEngine(SPEC, streams=4).run(list(jobs))
+    bl, _ = EventEngine(SPEC, streams=4, level_chunks=True).run(list(jobs))
+    assert bl == pytest.approx(b0, rel=1e-12)
+
+
+def test_level_chunks_off_is_bit_identical():
+    """level_chunks=False (the default) prices chunked strategies exactly
+    as before."""
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    for i in range(len(g.buckets)):
+        g.set_bucket_chunks(i, 4)
+        g.set_bucket_algo(i, "hier")
+    assert Simulator(cluster=SPEC, streams=4).cost(g) == \
+        Simulator(cluster=SPEC, streams=4, level_chunks=False).cost(g)
+
+
+def test_flat_spec_level_chunks_noop():
+    """Flat compat specs have one opaque phase — nothing to coalesce."""
+    flat = Simulator(n_devices=64).cluster
+    for k in range(4):
+        assert level_chunk_phases(flat, "ring", "ar", 4, k) == \
+            chunk_phases(flat, "ring", "ar", 4)
+
+
+# ----------------------------------------------------------- search plumbing
+def test_search_pool_state_round_trips_pp_knobs():
+    """The worker-pool state tuple carries pp_knobs through _from_parts."""
+    g = chain_graph(n=12, grads=(3, 6, 9))
+    g.set_pp_knobs(n_microbatches=16)
+    state = (g.groups, g.provider, g._next_gid, g.buckets, g.bucket_algos,
+             g.bucket_comm, g.bucket_chunks, g.bucket_fused, g.pp_knobs)
+    g2 = FusionGraph._from_parts(
+        g.prims, g.psuccs, g.ppreds, state[0], state[1], state[2],
+        g.grad_prim, state[3], family=g.family_token(),
+        bucket_algos=state[4], bucket_comm=state[5], bucket_chunks=state[6],
+        bucket_fused=state[7], pp_knobs=state[8])
+    assert g2.pp_knobs == (None, 16, None)
+    assert g2.fast_signature() == g.fast_signature()
+
+
+def test_search_on_pipeline_sim_explores_pp_knobs():
+    """A short search on a pipeline-enabled sim draws pp mutations and
+    never crashes; the winner prices no worse than the start."""
+    from repro.core import backtracking_search
+
+    g = chain_graph(n=16, grads=(3, 7, 11))
+    sim = Simulator(cluster=SPEC, streams=4,
+                    pipeline=PipelineSchedule(4, 8), incremental=False)
+    # pp methods only: op fusion could legally collapse this EW chain
+    # below n_stages (a ValueError by contract, see
+    # test_too_many_stages_raises) — that interaction is not under test.
+    res = backtracking_search(
+        g, sim, unchanged_limit=10, max_steps=30, seed=0,
+        methods=(METHOD_PP_SPLIT, METHOD_PP_MICROBATCH,
+                 METHOD_PP_INTERLEAVE))
+    assert res.best_cost <= res.initial_cost

@@ -13,7 +13,7 @@ from repro.core import (BackgroundTraffic, PipelineSchedule, Simulator,
                         profile_graph, trace_grad_graph)
 from repro.core.graph import EW, FusionGraph, PrimOp
 from repro.core.search import ALL_METHODS, random_apply
-from repro.plan import Plan
+from repro.plan import PLAN_VERSION, Plan
 
 
 def traced_graph(arch: str):
@@ -267,17 +267,17 @@ def test_plan_v2_records_pipeline_and_v1_loads(transformer_graph):
     sched = PipelineSchedule(n_stages=2, n_microbatches=4)
     sim = Simulator(cluster=spec, streams=4, pipeline=sched)
     plan = Plan.from_graph(g, sim=sim, predicted=sim.cost(g))
-    assert plan.version == 2
+    assert plan.version == PLAN_VERSION
     assert plan.pipeline == sched.to_tuple()
     d = plan._to_json()
     back = Plan.from_dict(d)
     assert back == plan
     sim2 = back.simulator()
     assert sim2.pipeline == sched
-    # a v1 dict (no pipeline field) still loads, normalized to v2
+    # a v1 dict (no pipeline field) still loads, normalized to current
     d1 = plan._to_json()
     d1["version"] = 1
     d1.pop("pipeline")
     old = Plan.from_dict(d1)
-    assert old.version == 2 and old.pipeline is None
+    assert old.version == PLAN_VERSION and old.pipeline is None
     assert old.simulator().pipeline is None
