@@ -1,0 +1,185 @@
+"""Fig. H (ours): searched decode-serving plans vs the default engine
+configuration across the cluster preset zoo (DESIGN.md Sec. 15).
+
+``repro.serving.plan`` points the simulator-driven backtracking search at
+the *deployed* schedule: one decode step lowered into the unified event
+engine — per-token TP collectives as latency-critical dep-coupled jobs,
+prefill admissions from a seeded synthetic request trace as a competing
+traffic class — and the serving knobs (slot count, decode dispatch batch,
+KV-shard layout, collective algorithm, stream allocation) as the search
+space.  For each preset this sweep prices the default ``ServeEngine``
+configuration (8 slots, full-width dispatch, replicated KV, ring, one
+stream — exactly ``ServingState()``) and a searched plan *under the same
+simulator and the same trace*, so only the knobs differ.  The search
+starts from the default state, so the searched plan can never price worse
+— regressions are structurally impossible; the headline is on how many
+presets the search finds a *strictly* higher-throughput plan.
+
+    PYTHONPATH=src python benchmarks/fig_serving_sweep.py [--quick] [--smoke]
+
+``--smoke`` is the CI lane: three presets at a reduced budget, a
+replay-from-cache bit-identity check (two ``compile_serving`` calls
+through a fresh cache must agree fingerprint-for-fingerprint), and a hard
+failure (exit 1) on any regression (searched strictly worse than default —
+impossible by construction, so firing means the search start-state
+contract broke) or insane pricing.  Full runs write
+``experiments/perf/serving_sweep.json`` and print a CSV block.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import csv_row
+from repro.cluster import PRESETS
+from repro.configs import get_config
+from repro.core import backtracking_search
+from repro.core.mutations import SERVING_METHODS
+from repro.serving.plan import DecodeModel, ServingSimulator, ServingState
+from repro.serving.workload import Workload
+
+OUT = "experiments/perf"
+
+ARCH = "tinyllama-1.1b"
+WORKLOAD = Workload(n_requests=64, rate=32.0, concurrency=48, seed=0)
+SMOKE_PRESETS = ("a100_nvlink_ib", "cross_dc_2pod", "tpu_v5e_pod_256")
+
+
+def sweep_one(name: str, spec, *, unchanged_limit: int, max_steps: int,
+              seed: int = 0) -> dict:
+    model = DecodeModel.from_config(get_config(ARCH))
+    sim = ServingSimulator(model, WORKLOAD, spec)
+    default = ServingState()
+    p_def = sim.price(default)
+    res = backtracking_search(default, sim, methods=SERVING_METHODS,
+                              unchanged_limit=unchanged_limit,
+                              max_steps=max_steps, seed=seed)
+    p_best = sim.price(res.best)
+    speedup = (p_def["seconds_per_token"] / p_best["seconds_per_token"]
+               if p_best["seconds_per_token"] > 0 else 1.0)
+    return {
+        "preset": name,
+        "n_devices": spec.n_devices,
+        "levels": [l.name for l in spec.levels],
+        "tp_degree": sim.tp_degree,
+        "default": {
+            "tokens_per_s": p_def["tokens_per_s"],
+            "seconds_per_token": p_def["seconds_per_token"],
+            "ttft_p99_s": p_def["ttft_p99_s"],
+            "knobs": list(default.signature()[1:]),
+        },
+        "searched": {
+            "tokens_per_s": p_best["tokens_per_s"],
+            "seconds_per_token": p_best["seconds_per_token"],
+            "ttft_p99_s": p_best["ttft_p99_s"],
+            "knobs": list(res.best.signature()[1:]),
+            "simulations": res.simulations,
+            "steps": res.steps,
+        },
+        "speedup": speedup,
+        "strict_win": (p_def["seconds_per_token"]
+                       > p_best["seconds_per_token"] * (1 + 1e-12)),
+        "regression": (p_best["seconds_per_token"]
+                       > p_def["seconds_per_token"] * (1 + 1e-9)),
+    }
+
+
+def cache_bit_identity() -> list[str]:
+    """Two cold->warm ``compile_serving`` calls through a fresh cache must
+    agree bit-for-bit (same fingerprint, warm call a cache hit) — the
+    replay-from-cache contract the nightly lane gates on."""
+    from repro.serving.plan import compile_serving
+
+    bad = []
+    with tempfile.TemporaryDirectory() as d:
+        kw = dict(cluster="tpu_v5e_pod_16", workload=WORKLOAD,
+                  unchanged_limit=20, max_steps=40, seed=0, cache=d)
+        p1 = compile_serving(ARCH, **kw)
+        p2 = compile_serving(ARCH, **kw)
+        if p1.fingerprint() != p2.fingerprint():
+            bad.append(f"cache replay fingerprint drift: "
+                       f"{p1.fingerprint()} != {p2.fingerprint()}")
+        if p1 != p2:
+            bad.append("cache replay plan inequality")
+        if p2.provenance.get("cache", {}).get("outcome") != "hit":
+            bad.append(f"warm compile was not a cache hit: "
+                       f"{p2.provenance.get('cache')}")
+    return bad
+
+
+def run(unchanged_limit: int = 60, max_steps: int = 160, seed: int = 0,
+        verbose: bool = True, smoke: bool = False) -> dict:
+    presets = SMOKE_PRESETS if smoke else tuple(PRESETS)
+    rows = []
+    for name in presets:
+        spec = PRESETS[name]
+        t0 = time.perf_counter()
+        row = sweep_one(name, spec, unchanged_limit=unchanged_limit,
+                        max_steps=max_steps, seed=seed)
+        row["wall_s"] = round(time.perf_counter() - t0, 2)
+        rows.append(row)
+        if verbose:
+            print(csv_row(
+                name, spec.n_devices,
+                f"{row['default']['tokens_per_s']:.0f}tok/s",
+                f"{row['searched']['tokens_per_s']:.0f}tok/s",
+                f"p99 {row['searched']['ttft_p99_s']*1e3:.2f}ms",
+                f"{row['speedup']:.3f}x",
+                "WIN" if row["strict_win"] else "tie",
+                "/".join(str(k) for k in row["searched"]["knobs"])))
+    wins = [r["preset"] for r in rows if r["strict_win"]]
+    out = {
+        "arch": ARCH,
+        "workload": list(WORKLOAD.to_tuple()),
+        "workload_digest": WORKLOAD.digest(),
+        "unchanged_limit": unchanged_limit,
+        "max_steps": max_steps,
+        "seed": seed,
+        "presets": rows,
+        "strict_wins_on": wins,
+        "regressions_on": [r["preset"] for r in rows if r["regression"]],
+    }
+    if verbose:
+        print(f"# searched serving plan strictly beats the default engine "
+              f"configuration on {len(wins)}/{len(rows)} presets: {wins}")
+    if not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        path = os.path.join(OUT, "serving_sweep.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if verbose:
+            print(f"# wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: 3 presets at reduced budget + cache "
+                         "bit-identity; exit 1 on any regression or "
+                         "insane pricing")
+    args = ap.parse_args()
+    quick = args.quick or args.smoke
+    out = run(unchanged_limit=20 if quick else 60,
+              max_steps=40 if quick else 160,
+              smoke=args.smoke)
+    if args.smoke:
+        bad = cache_bit_identity()
+        for r in out["presets"]:
+            if r["regression"]:
+                bad.append(f"{r['preset']}: searched regressed vs default "
+                           f"({r['speedup']:.4f}x)")
+            if not r["searched"]["tokens_per_s"] > 0.0:
+                bad.append(f"{r['preset']}: non-positive throughput")
+            if not r["searched"]["ttft_p99_s"] >= 0.0:
+                bad.append(f"{r['preset']}: negative TTFT")
+        if bad:
+            print(f"SMOKE FAIL: {bad}")
+            raise SystemExit(1)

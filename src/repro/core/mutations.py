@@ -61,6 +61,28 @@ PP_SPLIT_CHOICES = (1, 2, 4, 8)
 PP_MICROBATCH_CHOICES = (4, 8, 16, 32)
 PP_INTERLEAVE_CHOICES = (1, 2)
 
+# serving-plan knob draws (DESIGN.md Sec. 15).  These mutate a
+# ``repro.serving.plan.ServingState`` (duck-typed through the same
+# clone()/fast_signature() protocol as FusionGraph) and are applicable
+# only on ``is_serving`` simulators — training sims never see them, so
+# every PR 1-9 trajectory and cache key stays bit-identical.
+METHOD_SERVE_SLOTS = "serve_slots"
+METHOD_SERVE_BATCH = "serve_batch"
+METHOD_SERVE_KV = "serve_kv"
+METHOD_SERVE_ALGO = "serve_algo"
+METHOD_SERVE_STREAMS = "serve_streams"
+
+SERVE_SLOT_CHOICES = (4, 8, 16, 32, 64)
+SERVE_BATCH_CHOICES = (1, 2, 4, 8, 16, 32, 64)
+SERVE_KV_LAYOUTS = ("replicated", "head", "sequence")
+SERVE_STREAM_CHOICES = (1, 2)
+
+# the explicit method tuple compile_serving() passes: the training
+# mutations' applies would crash on a ServingState (their applicability
+# defaults to True), so serving searches never use methods=None
+SERVING_METHODS = (METHOD_SERVE_SLOTS, METHOD_SERVE_BATCH, METHOD_SERVE_KV,
+                   METHOD_SERVE_ALGO, METHOD_SERVE_STREAMS)
+
 
 @dataclasses.dataclass(frozen=True)
 class Mutation:
@@ -173,6 +195,33 @@ def _apply_pp_interleave(g: FusionGraph, rng: random.Random) -> bool:
     return g.set_pp_knobs(interleave=rng.choice(PP_INTERLEAVE_CHOICES))
 
 
+def _serving_applicable(sim) -> bool:
+    # serving knobs only exist on a ServingState priced by a
+    # ServingSimulator; everywhere else offering them would crash the
+    # apply (FusionGraph has no set_slots) and change legacy RNG streams
+    return bool(getattr(sim, "is_serving", False))
+
+
+def _apply_serve_slots(g, rng: random.Random) -> bool:
+    return g.set_slots(rng.choice(SERVE_SLOT_CHOICES))
+
+
+def _apply_serve_batch(g, rng: random.Random) -> bool:
+    return g.set_decode_batch(rng.choice(SERVE_BATCH_CHOICES))
+
+
+def _apply_serve_kv(g, rng: random.Random) -> bool:
+    return g.set_kv_layout(rng.choice(SERVE_KV_LAYOUTS))
+
+
+def _apply_serve_algo(g, rng: random.Random) -> bool:
+    return g.set_algo(rng.choice(COLLECTIVE_ALGOS))
+
+
+def _apply_serve_streams(g, rng: random.Random) -> bool:
+    return g.set_streams(rng.choice(SERVE_STREAM_CHOICES))
+
+
 # ------------------------------------------------------------------ registry
 MUTATIONS: dict[str, Mutation] = {}
 
@@ -226,6 +275,25 @@ register_mutation(Mutation(
     doc="pipeline method (x): searched interleaved-1F1B chunk depth "
         "(needs a pipeline-enabled sim; collapses to 1 where Megatron's "
         "divisibility constraint fails)"))
+register_mutation(Mutation(
+    METHOD_SERVE_SLOTS, _apply_serve_slots, _serving_applicable,
+    doc="serving method (xi): decode slot count (KV memory vs occupancy)"))
+register_mutation(Mutation(
+    METHOD_SERVE_BATCH, _apply_serve_batch, _serving_applicable,
+    doc="serving method (xii): decode dispatch batch (weight-stream "
+        "amortization vs padding waste and per-token TP payload)"))
+register_mutation(Mutation(
+    METHOD_SERVE_KV, _apply_serve_kv, _serving_applicable,
+    doc="serving method (xiii): KV-shard layout "
+        "(replicated / head / sequence)"))
+register_mutation(Mutation(
+    METHOD_SERVE_ALGO, _apply_serve_algo, _serving_applicable,
+    doc="serving method (xiv): decode-collective algorithm "
+        "(ring/tree/hier)"))
+register_mutation(Mutation(
+    METHOD_SERVE_STREAMS, _apply_serve_streams, _serving_applicable,
+    doc="serving method (xv): prefill lane allocation (threaded into the "
+        "decode chain vs a dedicated stream bought with HBM)"))
 
 # METHOD_FUSED (and the pp_* methods after it) are deliberately NOT in
 # ALL_METHODS: this tuple keys the

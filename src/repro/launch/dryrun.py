@@ -611,6 +611,57 @@ def price_plan(path: str, cluster: str | None = None,
     return result
 
 
+def price_serving_plan(path: str, cluster: str | None = None,
+                       out_dir: str | None = None,
+                       verbose: bool = True) -> dict:
+    """Price a saved :class:`repro.serving.plan.ServingPlan` artifact
+    (``--serve-plan <file>``): re-run the decode-step lowering with the
+    plan's searched knobs on the recorded cluster fingerprint or an
+    explicit ``--cluster`` override.  A mismatched override is diagnosed
+    field-by-field, same contract as ``--plan``."""
+    from repro.plan import cluster_fingerprint, cluster_fingerprint_diff
+    from repro.serving.plan import ServingPlan
+
+    plan = ServingPlan.load(path)
+    spec = get_preset(cluster) if cluster else None
+    result = {
+        "serve_plan": path,
+        "fingerprint": plan.fingerprint(),
+        "describe": plan.describe(),
+        "provenance": plan.provenance,
+        "pricing": plan.price(cluster=spec),
+    }
+    if spec is not None and not result["pricing"]["cluster_fingerprint_match"]:
+        result["pricing"]["cluster_fingerprint_diff"] = \
+            cluster_fingerprint_diff(plan.cluster, cluster_fingerprint(spec))
+    if verbose:
+        p = result["pricing"]
+        d = result["describe"]
+        print(f"  serve-plan {path} [{result['fingerprint']}]: "
+              f"{d['arch']} slots={d['slots']} batch={d['decode_batch']} "
+              f"kv={d['kv_layout']} algo={d['algo']} "
+              f"streams={d['streams']} on {p['cluster']['name']} "
+              f"(fingerprint match: {p['cluster_fingerprint_match']})")
+        for line in p.get("cluster_fingerprint_diff", ()):
+            print(f"    fingerprint diff: {line}")
+        print(f"    {p['tokens_per_s']:.0f} tok/s "
+              f"({p['seconds_per_token']*1e6:.2f} us/token), "
+              f"ttft p99 {p['ttft_p99_s']*1e3:.3f} ms, "
+              f"decode TP traffic {p['tp_bytes_decode']:.3e} B, "
+              f"HBM {p['mem_bytes']/1e9:.2f}/{p['hbm_bytes']/1e9:.0f} GB; "
+              f"searched prediction "
+              f"{plan.predicted_tokens_per_s:.0f} tok/s")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = os.path.splitext(os.path.basename(path))[0]
+        out_path = os.path.join(out_dir, f"serve_plan__{tag}.json")
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1, default=repr)
+        if verbose:
+            print(f"    wrote {out_path}")
+    return result
+
+
 # -------------------------------------------------------------------- main
 def dryrun_one(arch: str, shape: str, multi_pod: bool,
                verbose: bool = True, cluster: str | None = None,
@@ -748,8 +799,25 @@ def main():
                          "compiling archs (no re-trace, no re-search); "
                          "--cluster overrides the recorded topology, "
                          "--streams the engine width")
+    ap.add_argument("--serve-plan", default=None, metavar="FILE",
+                    help="price a saved repro.serving_plan artifact "
+                         "(decode-step lowering under its recorded "
+                         "workload) instead of compiling archs; --cluster "
+                         "overrides the recorded topology")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+
+    if args.serve_plan:
+        result = price_serving_plan(args.serve_plan, cluster=args.cluster,
+                                    out_dir=args.out)
+        diff = result["pricing"].get("cluster_fingerprint_diff")
+        if diff:
+            print(f"CLUSTER MISMATCH: serve-plan {args.serve_plan} was "
+                  f"searched against a different topology than --cluster "
+                  f"{args.cluster} ({len(diff)} field(s) differ; "
+                  f"first: {diff[0]})")
+            raise SystemExit(1)
+        return
 
     if args.plan:
         result = price_plan(args.plan, cluster=args.cluster,

@@ -256,6 +256,10 @@ def warm_start_state(plan: Plan, base: FusionGraph, sim) -> FusionGraph | None:
     the same ``set_bucket_*`` mutations the search would use, so the state
     is journal/rolling-hash consistent.  Returns None when the plan does
     not fit the trace — the caller falls back down the ladder."""
+    if not hasattr(plan, "to_graph"):
+        # not a training plan (e.g. a ServingPlan sharing the cache): there
+        # is no fusion state to re-apply, so no warm start
+        return None
     try:
         g = plan.to_graph(base)
     except PlanError:
@@ -276,6 +280,23 @@ def warm_start_state(plan: Plan, base: FusionGraph, sim) -> FusionGraph | None:
         # state that pollutes signatures and re-saved plans
         g.reset_pp_knobs()
     return g
+
+
+def _load_artifact(path: str):
+    """Load a cached artifact by schema: training ``Plan`` (the default)
+    or a serving plan (``repro.serving_plan``).  The schema peek keeps the
+    two families in one store without either loader having to tolerate the
+    other's JSON; any read/parse failure surfaces as ``PlanError`` so the
+    cache's corruption-tolerance contract is unchanged."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise PlanError(f"unreadable plan artifact at {path}: {e}") from e
+    if isinstance(doc, dict) and doc.get("schema") == "repro.serving_plan":
+        from ..serving.plan import ServingPlan  # import-light, no jax
+        return ServingPlan.from_dict(doc)
+    return Plan.from_dict(doc, source=path)
 
 
 # ---------------------------------------------------------------- the cache
@@ -344,7 +365,7 @@ class PlanCache:
                 continue
             key = name[:-len(PLAN_SUFFIX)]
             try:
-                plan = Plan.load(os.path.join(self.root, name))
+                plan = _load_artifact(os.path.join(self.root, name))
             except PlanError:
                 continue
             entries[key] = {
@@ -373,7 +394,7 @@ class PlanCache:
             self.stats["misses"] += 1
             return None
         try:
-            plan = Plan.load(path)
+            plan = _load_artifact(path)
         except PlanError:
             self.stats["stale"] += 1
             self.stats["misses"] += 1
@@ -436,7 +457,7 @@ class PlanCache:
             if not key or key == exclude:
                 continue
             try:
-                plan = Plan.load(self._plan_path(key))
+                plan = _load_artifact(self._plan_path(key))
             except PlanError:
                 self.stats["stale"] += 1
                 continue
@@ -454,7 +475,7 @@ class PlanCache:
         ok, corrupt = [], []
         for key in sorted(index["entries"]):
             try:
-                Plan.load(self._plan_path(key))
+                _load_artifact(self._plan_path(key))
                 ok.append(key)
             except PlanError as e:
                 corrupt.append({"key": key, "error": str(e)})

@@ -1,3 +1,23 @@
-from .engine import Request, ServeEngine
+"""Serving: batched decode engine + searched serving plans.
 
-__all__ = ["Request", "ServeEngine"]
+``repro.serving.plan`` / ``repro.serving.workload`` are import-light (no
+jax) so the plan cache and search pool can load serving artifacts from
+bare interpreters; the engine pulls in jax, so it is exposed lazily.
+"""
+from .workload import TraceRequest, VirtualClock, Workload, replay
+
+__all__ = ["Request", "ServeEngine", "TraceRequest", "VirtualClock",
+           "Workload", "replay", "ServingPlan", "compile_serving"]
+
+_ENGINE = {"Request", "ServeEngine"}
+_PLAN = {"ServingPlan", "compile_serving"}
+
+
+def __getattr__(name):
+    if name in _ENGINE:
+        from . import engine
+        return getattr(engine, name)
+    if name in _PLAN:
+        from . import plan
+        return getattr(plan, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,282 @@
+"""Serving-plan subsystem tests (DESIGN.md Sec. 15) — import-light by
+design (no jax): the trace generator, the decode-step lowering, the
+``ServingPlan`` artifact, and the serving search are priced entirely on
+the event engine, so these tests run on a bare interpreter the same way
+the search worker pool does.
+
+* trace generator: seeded reproducibility (bit-identical across calls and
+  instances), arrival-count conservation, monotone timestamps, range
+  respect, digest discrimination;
+* ``ServingPlan``: JSON round-trip bit-identity, foreign-schema /
+  foreign-version -> ``PlanVersionError``, malformed -> ``PlanError``,
+  and the training loader rejecting serving JSON (no silent cross-load);
+* decode lowering: the priced TP traffic conserves the bytes of the
+  ``TPTraffic`` model it lowers — and matches what the *training*
+  ``couple_tp`` lowering emits for the same traffic;
+* search: the searched plan never prices worse than the default
+  ``ServingState`` (the search starts there), checked on >= 2 presets;
+* cache: ``ServingPlan`` round-trips through ``PlanCache`` next to
+  training plans, never warm-starts a training search, and the warm
+  compile is a zero-simulation hit.
+"""
+import json
+import math
+import os
+import tempfile
+
+import pytest
+from _propcheck import given, settings, st
+
+from repro.cluster import get_preset
+from repro.configs import get_config
+from repro.core import backtracking_search
+from repro.core.events import ComputeJob
+from repro.core.mutations import SERVING_METHODS
+from repro.core.tp_traffic import couple_tp
+from repro.plan import PlanCache, PlanError, PlanVersionError
+from repro.plan.cache import _load_artifact, warm_start_state
+from repro.serving.plan import (DecodeModel, ServingPlan, ServingSimulator,
+                                ServingState, compile_serving,
+                                kv_shard_factor)
+from repro.serving.workload import TraceRequest, VirtualClock, Workload
+
+
+# ------------------------------------------------------------------ trace
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 64))
+def test_trace_seeded_reproducible(seed, n):
+    a = Workload(n_requests=n, seed=seed)
+    b = Workload(n_requests=n, seed=seed)
+    assert a.requests() == b.requests()
+    assert a.digest() == b.digest()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trace_conservation_and_monotone(seed):
+    wl = Workload(n_requests=32, prompt_lens=(2, 9), new_tokens=(1, 5),
+                  seed=seed)
+    reqs = wl.requests()
+    assert len(reqs) == wl.n_requests
+    assert [r.rid for r in reqs] == list(range(wl.n_requests))
+    last = 0.0
+    for r in reqs:
+        assert r.arrival_s >= last      # Poisson arrivals never go back
+        last = r.arrival_s
+        assert 2 <= r.prompt_len <= 9
+        assert 1 <= r.new_tokens <= 5
+    assert wl.total_new_tokens == sum(r.new_tokens for r in reqs)
+    fr = wl.arrival_fractions()
+    assert len(fr) == wl.n_requests and all(0.0 <= f <= 1.0 for f in fr)
+
+
+def test_trace_digest_discriminates():
+    base = Workload(seed=0)
+    assert base.digest() != Workload(seed=1).digest()
+    assert base.digest() != Workload(rate=16.0).digest()
+    assert base.digest() != Workload(concurrency=8).digest()
+    assert Workload.from_tuple(base.to_tuple()) == base
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError):
+        Workload(n_requests=0)
+    with pytest.raises(ValueError):
+        Workload(rate=0.0)
+    with pytest.raises(ValueError):
+        Workload(prompt_lens=(5, 2))
+
+
+def test_virtual_clock():
+    clk = VirtualClock()
+    assert clk() == 0.0
+    clk.advance(1.5)
+    assert clk() == 1.5
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)
+
+
+# ------------------------------------------------------------- the artifact
+def _small_plan(cluster="tpu_v5e_pod_16", seed=0, cache=None):
+    return compile_serving(
+        "tinyllama-1.1b", cluster=cluster,
+        workload=Workload(n_requests=24, seed=3),
+        unchanged_limit=10, max_steps=20, seed=seed, cache=cache)
+
+
+def test_serving_plan_roundtrip_bit_identity(tmp_path):
+    plan = _small_plan()
+    path = os.path.join(tmp_path, "sp.json")
+    plan.save(path)
+    loaded = ServingPlan.load(path)
+    assert loaded == plan
+    assert loaded.fingerprint() == plan.fingerprint()
+    # a second save of the loaded artifact is byte-identical (canonical)
+    path2 = os.path.join(tmp_path, "sp2.json")
+    loaded.save(path2)
+    with open(path) as a, open(path2) as b:
+        assert a.read() == b.read()
+
+
+def test_serving_plan_foreign_versions(tmp_path):
+    plan = _small_plan()
+    d = plan._to_json()
+    bad_schema = dict(d, schema="repro.other_plan")
+    with pytest.raises(PlanVersionError):
+        ServingPlan.from_dict(bad_schema)
+    bad_version = dict(d, version=999)
+    with pytest.raises(PlanVersionError):
+        ServingPlan.from_dict(bad_version)
+    with pytest.raises(PlanError):
+        ServingPlan.from_dict({"schema": "repro.serving_plan", "version": 1})
+    # the *training* loader must reject serving JSON, not mis-parse it
+    from repro.plan import Plan
+    with pytest.raises(PlanError):
+        Plan.from_dict(d)
+    # unreadable path -> PlanError, not OSError
+    with pytest.raises(PlanError):
+        ServingPlan.load(os.path.join(tmp_path, "missing.json"))
+    torn = os.path.join(tmp_path, "torn.json")
+    with open(torn, "w") as f:
+        f.write(json.dumps(d)[: len(json.dumps(d)) // 2])
+    with pytest.raises(PlanError):
+        ServingPlan.load(torn)
+
+
+def test_cluster_mismatch_reprice():
+    plan = _small_plan()
+    other = get_preset("a100_nvlink_ib")
+    from repro.plan import ClusterMismatchError
+    with pytest.raises(ClusterMismatchError):
+        plan.simulator(cluster=other)
+    # price() reports instead of raising
+    p = plan.price(cluster=other)
+    assert p["cluster_fingerprint_match"] is False
+    assert plan.price()["cluster_fingerprint_match"] is True
+
+
+# -------------------------------------------------------- decode lowering
+def _sim(preset="tpu_v5e_pod_16"):
+    model = DecodeModel.from_config(get_config("tinyllama-1.1b"))
+    return ServingSimulator(model, Workload(n_requests=24, seed=3),
+                            get_preset(preset))
+
+
+@pytest.mark.parametrize("layout", ("replicated", "head", "sequence"))
+@pytest.mark.parametrize("algo", ("ring", "hier"))
+def test_decode_lowering_byte_conservation(layout, algo):
+    sim = _sim()
+    state = ServingState(kv_layout=layout, algo=algo)
+    tpt = sim.decode_tp(state)
+    price = sim.price(state)
+    assert price["feasible"]
+    # every byte of the decode TP model lands in the engine's TP jobs
+    assert math.isclose(price["tp_bytes_decode"], tpt.total_bytes,
+                        rel_tol=1e-9)
+    assert price["tp_bytes_total"] == tpt.total_bytes
+
+
+def test_decode_lowering_matches_training_couple_tp():
+    """The decode lowering reuses the *training* dep-coupled TP lowering
+    at token granularity: feeding the decode step's TPTraffic through
+    ``couple_tp`` over an equivalent compute chain must emit exactly the
+    bytes the serving price reports."""
+    sim = _sim()
+    state = ServingState()
+    tpt = sim.decode_tp(state)
+    chain = [ComputeJob(ref=i, duration=1e-6, job_id=-(i + 1), key=i)
+             for i in range(tpt.n_layers)]
+    ends = list(range(1, tpt.n_layers + 1))
+    _, fwd, bwd, _ = couple_tp(chain, ends, tpt, next_id=1)
+    assert bwd == []        # decode has no backward traffic
+    emitted = sum(j.nbytes for j in fwd)
+    assert math.isclose(emitted, sim.price(state)["tp_bytes_decode"],
+                        rel_tol=1e-9)
+
+
+def test_tp1_is_commfree_but_feasible():
+    model = DecodeModel.from_config(get_config("tinyllama-1.1b"))
+    sim = ServingSimulator(model, Workload(n_requests=24, seed=3),
+                           get_preset("tpu_v5e_pod_16"), tp_degree=1)
+    p = sim.price(ServingState())
+    assert p["feasible"] and p["tp_bytes_decode"] == 0.0
+    assert p["seconds_per_token"] > 0.0
+
+
+def test_infeasible_memory_prices_inf():
+    model = DecodeModel.from_config(get_config("tinyllama-1.1b"))
+    sim = ServingSimulator(model, Workload(n_requests=24, seed=3),
+                           get_preset("tpu_v5e_pod_16"), hbm_bytes=1e6)
+    p = sim.price(ServingState())
+    assert not p["feasible"]
+    assert p["seconds_per_token"] == float("inf")
+    assert p["tokens_per_s"] == 0.0
+
+
+def test_kv_shard_factor():
+    # head layout hits the GQA wall: shards cap at n_kv_heads
+    assert kv_shard_factor("head", 8, 4) == pytest.approx(0.25)
+    assert kv_shard_factor("sequence", 8, 4) == pytest.approx(0.125)
+    assert kv_shard_factor("replicated", 8, 4) == 1.0
+    with pytest.raises(ValueError):
+        kv_shard_factor("bogus", 8, 4)
+
+
+# ------------------------------------------------------------------ search
+@pytest.mark.parametrize("preset", ("tpu_v5e_pod_16", "a100_nvlink_ib"))
+def test_searched_never_worse_than_default(preset):
+    sim = _sim(preset)
+    default = ServingState()
+    d_cost = sim.cost(default)
+    res = backtracking_search(default, sim, methods=SERVING_METHODS,
+                              unchanged_limit=15, max_steps=40, seed=0)
+    assert res.best_cost <= d_cost * (1 + 1e-9)
+    assert res.initial_cost == d_cost
+    # the best state is a ServingState the engine could enact
+    assert isinstance(res.best, ServingState)
+    assert sim.price(res.best)["feasible"]
+
+
+def test_search_is_deterministic():
+    sim = _sim()
+    r1 = backtracking_search(ServingState(), sim, methods=SERVING_METHODS,
+                             unchanged_limit=10, max_steps=25, seed=7)
+    r2 = backtracking_search(ServingState(), sim, methods=SERVING_METHODS,
+                             unchanged_limit=10, max_steps=25, seed=7)
+    assert r1.best.signature() == r2.best.signature()
+    assert r1.best_cost == r2.best_cost
+
+
+# ------------------------------------------------------------------- cache
+def test_serving_plan_through_plan_cache(tmp_path):
+    cache = PlanCache(os.path.join(tmp_path, "cache"))
+    plan = _small_plan()
+    cache.put("servekey", plan, {"schema": "repro.serving_plan",
+                                 "graph": "serving:x", "cluster": "c",
+                                 "arch": "tinyllama-1.1b"})
+    got = cache.get("servekey")
+    assert isinstance(got, ServingPlan)
+    assert got == plan and got.fingerprint() == plan.fingerprint()
+    v = cache.verify()
+    assert v["ok"] == 1 and not v["corrupt"]
+    # a serving artifact never warm-starts a training search
+    assert warm_start_state(plan, base=None, sim=None) is None
+    # direct loader dispatch
+    art = _load_artifact(cache._plan_path("servekey"))
+    assert isinstance(art, ServingPlan)
+
+
+def test_compile_serving_cache_hit_zero_search(tmp_path):
+    cachedir = os.path.join(tmp_path, "cache")
+    p1 = _small_plan(cache=cachedir)
+    p2 = _small_plan(cache=cachedir)
+    assert p1.provenance["cache"]["outcome"] == "miss"
+    assert p2.provenance["cache"]["outcome"] == "hit"
+    assert p1 == p2 and p1.fingerprint() == p2.fingerprint()
+    # different workload -> different key (the digest joins the key)
+    p3 = compile_serving("tinyllama-1.1b", cluster="tpu_v5e_pod_16",
+                         workload=Workload(n_requests=24, seed=4),
+                         unchanged_limit=10, max_steps=20, seed=0,
+                         cache=cachedir)
+    assert p3.provenance["cache"]["outcome"] == "miss"
+    assert p3.provenance["cache"]["key"] != p1.provenance["cache"]["key"]
